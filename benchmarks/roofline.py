@@ -1,0 +1,132 @@
+"""Roofline table generator: results/dryrun/*.json -> markdown tables for
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+ARCH_ORDER = [
+    "internvl2_76b", "falcon_mamba_7b", "olmoe_1b_7b",
+    "llama4_maverick_400b_a17b", "granite_3_2b", "nemotron_4_340b",
+    "llama3_2_3b", "chatglm3_6b", "zamba2_1_2b", "musicgen_medium",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+HBM_BUDGET = 16e9  # v5e
+
+
+def _fmt_t(sec: float) -> str:
+    if sec >= 1.0:
+        return f"{sec:.2f}s"
+    if sec >= 1e-3:
+        return f"{sec * 1e3:.2f}ms"
+    return f"{sec * 1e6:.1f}us"
+
+
+def load(dir_: Path, mesh: str):
+    recs = {}
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            p = dir_ / f"{arch}__{shape}__{mesh}.json"
+            if p.exists():
+                recs[(arch, shape)] = json.loads(p.read_text())
+    return recs
+
+
+def recompute(r):
+    """Re-derive roofline terms from the raw record fields using the
+    current formula in repro.launch.dryrun (records stay valid across
+    formula fixes without re-compiling)."""
+    import repro.launch.dryrun as dr
+    return dr.roofline(
+        r["arch"], r["shape"], flops=r["cost"]["flops"],
+        hbm_bytes=r["cost"]["bytes_accessed"], coll=r["collectives"],
+        n_chips=r["n_chips"],
+        integer_path=(r["shape"] != "train_4k"))
+
+
+def roofline_table(recs) -> str:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant |"
+        " roofline frac | HLO/analytic | mem/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape))
+            if r is None:
+                lines.append(f"| {arch} | {shape} | - | - | - | MISSING | | | |")
+                continue
+            if r["status"] == "skipped":
+                lines.append(
+                    f"| {arch} | {shape} | — | — | — | *skip: full attn @524k* | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | ERROR | | | | | | |")
+                continue
+            rl = recompute(r)
+            tc, tm, tx = (rl["t_compute_s"], rl["t_memory_s"],
+                          rl["t_collective_s"])
+            tot = max(tc, tm, tx)
+            frac = tc / tot if tot > 0 else 0.0  # compute fraction of bound
+            mem = (r["memory"]["temp_bytes_per_dev"]
+                   + r["memory"]["argument_bytes_per_dev"])
+            # per-chip HLO flops over the analytic share: <1 = XLA
+            # undercounts int MACs; >1 = remat/dispatch overhead visible
+            useful = rl["hlo_flops"] / max(rl["model_flops"] / r["n_chips"],
+                                           1.0)
+            lines.append(
+                f"| {arch} | {shape} | {_fmt_t(tc)} | {_fmt_t(tm)} |"
+                f" {_fmt_t(tx)} | {rl['dominant']} | {frac:.2f} |"
+                f" {useful:.2f} | {mem / 1e9:.1f}G |")
+    return "\n".join(lines)
+
+
+def memory_table(recs) -> str:
+    lines = [
+        "| arch | shape | args/dev | temps/dev | fits 16G | collectives (AR/AG/RS/A2A/CP bytes) |",
+        "|---|---|---|---|---|---|",
+    ]
+    for (arch, shape) in sorted(recs):
+        r = recs[(arch, shape)]
+        if r["status"] != "ok":
+            continue
+        m = r["memory"]
+        tot = m["argument_bytes_per_dev"] + m["temp_bytes_per_dev"]
+        cb = r["collectives"]["bytes"]
+        coll = "/".join(f"{cb[k] / 1e6:.0f}M" for k in
+                        ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        lines.append(
+            f"| {arch} | {shape} | {m['argument_bytes_per_dev'] / 1e9:.2f}G |"
+            f" {m['temp_bytes_per_dev'] / 1e9:.2f}G |"
+            f" {'YES' if tot <= HBM_BUDGET else 'no'} | {coll} |")
+    return "\n".join(lines)
+
+
+def summarize(dir_: str = "results/dryrun"):
+    d = Path(dir_)
+    out = []
+    for mesh in ("pod", "multipod"):
+        recs = load(d, mesh)
+        n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+        n_skip = sum(1 for r in recs.values() if r["status"] == "skipped")
+        n_err = sum(1 for r in recs.values() if r["status"] == "error")
+        out.append(f"\n## Mesh: {mesh} "
+                   f"({'16x16=256' if mesh == 'pod' else '2x16x16=512'} chips)"
+                   f" — {n_ok} ok / {n_skip} skipped / {n_err} error "
+                   f"/ {40 - len(recs)} missing\n")
+        out.append(roofline_table(recs))
+        out.append(f"\n### Memory + collectives ({mesh})\n")
+        out.append(memory_table(recs))
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    print(summarize(args.dir))

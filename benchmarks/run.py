@@ -1,0 +1,227 @@
+"""Benchmark harness — one function per paper claim/table analogue.
+
+The paper is a deployment-model technical report without accuracy tables;
+its quantitative claims are the requantization error bound (Eq. 14), the
+exactness of the BN transforms, and integer-only inference viability.
+Each benchmark prints ``name,us_per_call,derived`` CSV rows (derived =
+claim-specific figure of merit).
+
+  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6, out
+
+
+# ---------------------------------------------------------------------------
+# Table 1 analogue: Eq. 14 requantization error vs requantization_factor
+# ---------------------------------------------------------------------------
+
+
+def bench_requant_error():
+    from repro.core.requant import (
+        RequantParams, apply_requant, requant_exact, scale_rel_error)
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for factor in (16, 64, 256, 1024):
+        scale_errs, e2e_errs, bound = [], [], 1.0 / factor
+        t_us = 0.0
+        for trial in range(20):
+            eps_in = 10.0 ** rng.uniform(-6, -3)
+            eps_out = 10.0 ** rng.uniform(-3, -1)
+            rp = RequantParams.make(eps_in, eps_out, requant_factor=factor,
+                                    acc_bound=1 << 20, qmin=-(1 << 24),
+                                    qmax=1 << 24, out_dtype="int32")
+            q = jnp.asarray(rng.integers(-(1 << 20), 1 << 20, 4096),
+                            jnp.int32)
+            us, out = _timeit(jax.jit(lambda q: apply_requant(q, rp)), q)
+            t_us += us
+            ideal = np.clip(requant_exact(np.asarray(q), eps_in, eps_out),
+                            -(1 << 24), 1 << 24)
+            # e2e adds the Eq.10/13 floor + staged-shift quanta on top of
+            # the Eq.14 SCALE error, which is the paper's bounded quantity
+            rel = np.abs(np.asarray(out) - ideal) / np.maximum(
+                np.abs(ideal), 256.0)
+            e2e_errs.append(rel.max())
+            scale_errs.append(float(scale_rel_error(rp, eps_in, eps_out)))
+            assert scale_errs[-1] < bound  # the paper's Eq. 14 claim
+        rows.append((f"requant_err_factor{factor}", t_us / 20,
+                     f"scale_err={max(scale_errs):.2e}_bound={bound:.2e}"
+                     f"_e2e={max(e2e_errs):.2e}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Representation-agreement (paper §3: QD/ID track FQ/FP) on the NEMO CNN
+# ---------------------------------------------------------------------------
+
+
+def bench_representation_agreement():
+    from repro.core.calibrate import Calibrator
+    from repro.core.rep import Rep
+    from repro.models.cnn import NemoCNN
+
+    rng = np.random.default_rng(1)
+    model = NemoCNN(channels=(8, 16), in_channels=3, n_classes=10, img=16)
+    p = model.init(jax.random.PRNGKey(0))
+    img = rng.integers(0, 256, size=(32, 16, 16, 3))
+    x = jnp.asarray(img / 255.0, jnp.float32)
+    s_x = jnp.asarray(img - 128, jnp.int8)
+    calib = Calibrator()
+    y_fp = np.asarray(model.apply_float(p, x, Rep.FP, calib=calib))
+    scale = np.abs(y_fp).max()
+    rows = []
+    qs = {"beta": [jnp.float32(calib.beta(f"b{i}.act")) for i in range(2)]}
+    us, y_fq = _timeit(
+        jax.jit(lambda x: model.apply_float(p, x, Rep.FQ, qstate=qs)), x)
+    rows.append(("cnn_fq_vs_fp", us,
+                 f"rel={np.abs(np.asarray(y_fq)-y_fp).max()/scale:.4f}"))
+    for mode in ("fold", "intbn", "thresh"):
+        t = model.deploy(p, calib, bn_mode=mode)
+        us, out = _timeit(jax.jit(lambda s: model.apply_id(t, s)), s_x)
+        got = np.asarray(out, np.float64) * t["meta"]["eps_logits"]
+        rows.append((f"cnn_id_{mode}_vs_fp", us,
+                     f"rel={np.abs(got-y_fp).max()/scale:.4f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Integer-only LM serving agreement + throughput proxy per family
+# ---------------------------------------------------------------------------
+
+
+def bench_lm_integer_agreement():
+    from repro.configs.base import get_config
+    from repro.core.rep import Rep
+    from repro.models.lm import DecoderLM
+
+    rows = []
+    for arch in ("granite_3_2b", "olmoe_1b_7b", "falcon_mamba_7b",
+                 "zamba2_1_2b"):
+        cfg = get_config(arch).reduced()
+        lm = DecoderLM(cfg, max_seq=32)
+        key = jax.random.PRNGKey(0)
+        p = lm.init(key)
+        tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+        calib = lm.calibrate(p, tokens)
+        t = lm.deploy(p, calib)
+        t = jax.tree.map(jnp.asarray, t,
+                         is_leaf=lambda a: isinstance(a, np.ndarray))
+
+        def fp_logits(tok):
+            x = lm.embed_in(p, tok, Rep.FP)
+            h, _, _ = lm.apply(p, x, Rep.FP)
+            return lm.logits(p, h, Rep.FP)
+
+        def id_logits(tok):
+            s = lm.embed_in_id(t, tok)
+            h, _, _ = lm.apply(t, s, Rep.ID)
+            return lm.logits_id(t, h)
+
+        us_fp, lf = _timeit(jax.jit(fp_logits), tokens)
+        us_id, li = _timeit(jax.jit(id_logits), tokens)
+        lf = np.asarray(lf, np.float64)[:, -1, :cfg.vocab]
+        li = np.asarray(li, np.float64)[:, -1, :cfg.vocab] \
+            * float(t["meta"]["eps_logits"])
+        cc = np.corrcoef(lf.ravel(), li.ravel())[0, 1]
+        rows.append((f"lm_id_{arch}", us_id,
+                     f"corr_vs_fp={cc:.4f}_fp_us={us_fp:.0f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Kernel microbench (interpret mode: correctness-grade, not perf-grade)
+# ---------------------------------------------------------------------------
+
+
+def bench_kernels():
+    from repro.core.requant import RequantParams
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(2)
+    M = K = N = 256
+    x = jnp.asarray(rng.integers(-127, 128, (M, K)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 128, (K, N)), jnp.int8)
+    bias = jnp.zeros((N,), jnp.int32)
+    rp = RequantParams.make(np.full(N, 1e-4), 0.05, acc_bound=1 << 22)
+    mul = jnp.asarray(np.broadcast_to(rp.m, (N,)), jnp.int32)
+    s0 = jnp.asarray(np.broadcast_to(rp.s0, (N,)), jnp.int32)
+    us_k, out_k = _timeit(
+        lambda: ops.int8_matmul_requant(x, w, bias, mul, s0, d=rp.d))
+    us_r, out_r = _timeit(
+        jax.jit(lambda: ref.int8_matmul_requant_ref(x, w, bias, mul, s0,
+                                                    d=rp.d)))
+    exact = bool(np.array_equal(np.asarray(out_k), np.asarray(out_r)))
+    return [("kernel_int8_matmul_interp", us_k,
+             f"exact_vs_ref={exact}_ref_us={us_r:.0f}")]
+
+
+# ---------------------------------------------------------------------------
+# Integer norm accuracy (DESIGN.md dynamic-requant extension)
+# ---------------------------------------------------------------------------
+
+
+def bench_integer_norm():
+    from repro.core.calibrate import Calibrator
+    from repro.layers.common import DeployCtx
+    from repro.layers.norms import QNorm
+
+    rng = np.random.default_rng(3)
+    rows = []
+    for kind, d in (("rms", 1024), ("layer", 1024)):
+        norm = QNorm(d, kind=kind, name="n")
+        g = (1.0 + 0.2 * rng.normal(size=d)).astype(np.float32)
+        x = rng.normal(size=(256, d)).astype(np.float32)
+        eps_x = 2 * 6.0 / 255
+        s_x = np.clip(np.floor(x / eps_x), -128, 127).astype(np.int8)
+        calib = Calibrator()
+        ref_y = np.asarray(norm.apply_fp(
+            {"g": jnp.asarray(g)}, jnp.asarray(s_x * eps_x), calib=calib))
+        t, eps_y, _ = norm.deploy(DeployCtx(calib=calib), "", {"g": g}, eps_x)
+        t_j = jax.tree.map(jnp.asarray, t)
+        us, s_y = _timeit(jax.jit(lambda s: norm.apply_id(t_j, s)),
+                          jnp.asarray(s_x))
+        got = np.asarray(s_y, np.float64) * eps_y
+        rel = np.abs(got - ref_y).max() / (np.abs(ref_y).max() + 1e-9)
+        rows.append((f"int_{kind}norm_d{d}", us, f"max_rel_err={rel:.4f}"))
+    return rows
+
+
+BENCHES = {
+    "requant_error": bench_requant_error,
+    "representation_agreement": bench_representation_agreement,
+    "lm_integer_agreement": bench_lm_integer_agreement,
+    "kernels": bench_kernels,
+    "integer_norm": bench_integer_norm,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=list(BENCHES))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        for row in fn():
+            print(f"{row[0]},{row[1]:.1f},{row[2]}")
+
+
+if __name__ == "__main__":
+    main()

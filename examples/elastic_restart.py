@@ -1,0 +1,30 @@
+"""Fault-tolerance demo: a training job is killed mid-run (simulated node
+failure), then restarted with the same command — it resumes from the last
+checkpoint and finishes with the identical loss trajectory.
+
+  PYTHONPATH=src python examples/elastic_restart.py
+"""
+import shutil
+
+import jax.numpy as jnp
+
+from repro.launch.elastic import TrainSupervisor
+from repro.launch.train import build
+
+CKPT = "/tmp/repro_elastic_demo"
+shutil.rmtree(CKPT, ignore_errors=True)
+
+lm, trainable, opt, step_fn, stream = build(
+    "granite_3_2b", reduced=True, seq=32, batch=4)
+mk = lambda s: jnp.asarray(stream.batch(s))
+
+try:
+    TrainSupervisor(train_step=step_fn, make_batch=mk, ckpt_dir=CKPT,
+                    ckpt_every=5, fail_at=13).run(trainable, opt, n_steps=25)
+except RuntimeError as e:
+    print(f"[crash] {e}")
+
+out = TrainSupervisor(train_step=step_fn, make_batch=mk, ckpt_dir=CKPT,
+                      ckpt_every=5).run(trainable, opt, n_steps=25)
+print(f"[restart] resumed and finished: status={out['status']} "
+      f"step={out['step']} final loss={out['losses'][-1]:.4f}")

@@ -1,0 +1,16 @@
+"""Integer-only LM serving with batched requests (the paper's deployment
+target): calibrate -> deploy -> prefill + greedy decode on int8/int32.
+
+  PYTHONPATH=src python examples/serve_integer_lm.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.launch.serve import deploy_model, serve_batch
+
+lm, tables = deploy_model("granite_3_2b", reduced=True, max_seq=48)
+rng = np.random.default_rng(0)
+prompts = jnp.asarray(rng.integers(0, lm.cfg.vocab, size=(4, 16)), jnp.int32)
+gen = serve_batch(lm, tables, prompts, gen_len=16)
+print("generated (integer-only):")
+print(np.asarray(gen))

@@ -1,0 +1,2 @@
+"""repro: NEMO integer-only deployment model as a multi-pod JAX framework."""
+__version__ = "1.0.0"

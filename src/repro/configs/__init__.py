@@ -1,0 +1,2 @@
+"""Architecture registry: one module per assigned architecture."""
+from repro.configs.base import ARCH_IDS, ArchConfig, all_configs, get_config

@@ -1,0 +1,154 @@
+"""Architecture configuration schema + registry.
+
+One `ArchConfig` per assigned architecture lives in configs/<id>.py with
+the exact figures from the assignment; `reduced()` derives the CPU smoke-
+test variant of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional
+
+_REGISTRY: Dict[str, "ArchConfig"] = {}
+
+ARCH_IDS = [
+    "internvl2_76b", "falcon_mamba_7b", "olmoe_1b_7b",
+    "llama4_maverick_400b_a17b", "granite_3_2b", "nemotron_4_340b",
+    "llama3_2_3b", "chatglm3_6b", "zamba2_1_2b", "musicgen_medium",
+    "nemo_cnn",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | cnn
+    n_layers: int
+    d_model: int
+    vocab: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    d_ff: int = 0
+    act: str = "silu"           # silu | gelu | relu | relu2
+    gated: bool = True
+    norm: str = "rms"           # rms | layer
+    norm_bias: bool = False
+    rope_base: float = 10000.0
+    rope_fraction: float = 1.0
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 1
+    moe_every: int = 1          # 2 = MoE on every other layer (llama4)
+    shared_expert: bool = False
+    moe_group: int = 512
+    # --- SSM ---
+    ssm_kind: str = ""          # mamba1 | mamba2
+    ssm_state: int = 16
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    # --- hybrid (zamba2) ---
+    shared_attn_every: int = 0
+    # --- IO / modality ---
+    input_mode: str = "tokens"  # tokens | embeds (vlm/audio frontend stub)
+    # --- misc ---
+    sub_quadratic: bool = False  # eligible for long_500k
+    notes: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to 256 so embedding/head shard cleanly on the
+        model axis (standard production practice; logits beyond `vocab`
+        are masked)."""
+        return -(-self.vocab // 256) * 256
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        kw = dataclasses.asdict(self)
+        kw.update(
+            n_layers=min(self.n_layers, 2 if self.shared_attn_every == 0
+                         else self.shared_attn_every + 1),
+            d_model=128,
+            vocab=256,
+            d_ff=256 if self.d_ff else 0,
+            n_heads=4 if self.n_heads else 0,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            head_dim=32 if self.n_heads else 0,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            moe_group=64,
+            ssm_state=min(self.ssm_state, 16),
+            ssm_head_dim=32 if self.ssm_kind == "mamba2" else self.ssm_head_dim,
+            shared_attn_every=(2 if self.shared_attn_every else 0),
+            name=self.name + "_reduced",
+        )
+        return ArchConfig(**kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS = 6*N*D)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab
+        hd = self.hd
+        n = 2 * V * d  # embed + head
+        for i in range(L):
+            if self.family in ("dense", "moe"):
+                attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+                    + self.n_heads * hd * d
+                n += attn + 2 * d  # norms
+                is_moe = self.n_experts > 0 and (i % self.moe_every
+                                                 == self.moe_every - 1)
+                ff_mats = 3 if self.gated else 2
+                if is_moe:
+                    n += self.n_experts * ff_mats * d * self.d_ff
+                    n += d * self.n_experts  # router
+                    if self.shared_expert:
+                        n += ff_mats * d * self.d_ff
+                else:
+                    n += ff_mats * d * self.d_ff
+            elif self.family == "ssm":
+                di = self.ssm_expand * d
+                rank = max(1, -(-d // 16))
+                n += (d * 2 * di + di * (rank + 2 * self.ssm_state)
+                      + rank * di + di * d + di * self.ssm_state + 2 * di + d)
+            elif self.family == "hybrid":
+                di = self.ssm_expand * d
+                H = di // self.ssm_head_dim
+                n += (d * (2 * di + 2 * self.ssm_state + H) + di * d + 3 * H
+                      + 2 * di + d)
+        if self.family == "hybrid" and self.shared_attn_every:
+            n += 2 * d * (self.n_heads + 2 * self.n_kv_heads) * hd \
+                + self.n_heads * hd * d
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        full = self.param_count()
+        L_moe = self.n_layers // self.moe_every
+        ff_mats = 3 if self.gated else 2
+        inactive = (self.n_experts - self.top_k) * ff_mats \
+            * self.d_model * self.d_ff * L_moe
+        return int(full - inactive)
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    name = name.replace("-", "_").replace(".", "_")
+    if name not in _REGISTRY:
+        importlib.import_module(f"repro.configs.{name}")
+    return _REGISTRY[name]
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    for a in ARCH_IDS:
+        get_config(a)
+    return dict(_REGISTRY)

@@ -1,0 +1,11 @@
+"""InternVL2-76B [vlm; arXiv:2404.16821] — InternViT frontend (stubbed per
+assignment: input_specs feeds precomputed patch+token embeddings) over an
+InternLM2-72B-class decoder backbone."""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="internvl2_76b", family="dense", n_layers=80, d_model=8192,
+    vocab=128256, n_heads=64, n_kv_heads=8, head_dim=128, d_ff=28672,
+    act="silu", gated=True, norm="rms", input_mode="embeds",
+    notes="ViT frontend stub; backbone-only per assignment",
+))

@@ -1,0 +1,11 @@
+"""Nemotron-4-340B [dense; arXiv:2402.16819] — squared-ReLU MLP, GQA kv=8.
+
+Squared-ReLU lowers to an EXACT integer square between two requants
+(layers/act_quant.py) — no LUT approximation needed."""
+from repro.configs.base import ArchConfig, register
+
+register(ArchConfig(
+    name="nemotron_4_340b", family="dense", n_layers=96, d_model=18432,
+    vocab=256000, n_heads=96, n_kv_heads=8, head_dim=192, d_ff=73728,
+    act="relu2", gated=False, norm="layer", norm_bias=True,
+))

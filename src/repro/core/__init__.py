@@ -1,0 +1,23 @@
+"""Core NEMO quantization machinery (paper §1-§3)."""
+from repro.core.rep import Rep, PIPELINE
+from repro.core.quantum import (
+    INT8, INT16, INT32, UINT8, QMeta, QuantSpec,
+    act_qmeta, dequantize, dequantize_np, fake_quantize, quantize_affine,
+    quantize_np, weight_qmeta,
+)
+from repro.core.requant import (
+    DEFAULT_REQUANT_FACTOR, RequantParams, apply_requant, apply_rqt,
+    make_rqt, requant_exact, requant_identity, scale_rel_error,
+)
+from repro.core.pact import (
+    default_weight_beta, pact_act, pact_act_asymm, pact_weight,
+)
+from repro.core.intmath import (
+    apply_lut, build_lut, int_avgpool_combine, int_isqrt, int_reciprocal_q,
+    avgpool_requant_params,
+)
+from repro.core.bn import (
+    IntegerBNParams, apply_integer_bn, apply_thresholds, bn_apply_float,
+    fold_bn, make_bn_act_thresholds, make_integer_bn,
+)
+from repro.core.calibrate import Calibrator

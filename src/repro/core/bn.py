@@ -1,0 +1,161 @@
+"""Batch-Normalization under quantization (paper §3.4).
+
+Three deployment strategies, all implemented:
+
+  (i)   *folding* into the preceding Linear (Eq. 18) — transform-time;
+  (ii)  *integer BN* (Eq. 21-22): quantize kappa = gamma/sigma and
+        lambda = beta - kappa*mu, run Q_phi = Q_k*Q_phi + Q_phi(lambda)
+        entirely on integer images;
+  (iii) *threshold merge* with the following Quantization/Activation
+        (Eq. 19-20): absorb BN + quantization into integer thresholds
+        TH_i with NO approximation — preferred when C(Z_y) is small.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantum import INT8, QMeta, QuantSpec
+from repro.core.requant import RequantParams, apply_requant
+
+# ---------------------------------------------------------------------------
+# (i) BN folding, Eq. 18  (host-side, transform time)
+# ---------------------------------------------------------------------------
+
+
+def fold_bn(w: np.ndarray, b, gamma, beta, mu, sigma, *, channel_axis: int = -1):
+    """w <- gamma/sigma * w ;  b <- gamma/sigma * b + beta - gamma/sigma * mu.
+
+    Eq. 18 is written for the bias-free Linear of Eq. 2; when the original
+    layer does carry a bias it sits inside the BN's affine map and must be
+    scaled by kappa as well.
+    """
+    w = np.asarray(w, np.float64)
+    kappa = np.asarray(gamma, np.float64) / np.asarray(sigma, np.float64)
+    shape = [1] * w.ndim
+    shape[channel_axis] = -1
+    w_f = w * kappa.reshape(shape)
+    b = np.float64(0.0) if b is None else np.asarray(b, np.float64)
+    b_f = kappa * b + np.asarray(beta, np.float64) - kappa * np.asarray(mu, np.float64)
+    return w_f, b_f
+
+
+# ---------------------------------------------------------------------------
+# (ii) Integer BN, Eq. 21-22
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class IntegerBNParams:
+    """Static tables: Q_k(kappa) int8 per-channel, Q_phi(lambda) int32.
+
+    phi_hat = eps_k*eps_phi * ( Q_k * Q_phi + Q_lambda_rq )
+    where Q_lambda_rq is lambda requantized into Z_phi_out = eps_k*eps_phi
+    (the paper wires D=1 there: we compute it exactly at transform time,
+    host-side, which is the D->inf limit — noted in DESIGN.md).
+    ``pre_shift`` guards the int32 budget for wide accumulators.
+    """
+
+    q_kappa: np.ndarray   # (C,) int8
+    q_lambda: np.ndarray  # (C,) int32
+    pre_shift: int        # applied to Q_phi before the multiply
+    eps_out: np.ndarray   # eps_k * eps_phi * 2^pre_shift  (per-channel, f64)
+
+
+def make_integer_bn(
+    gamma, beta, mu, sigma, eps_phi, *,
+    kappa_spec: QuantSpec = INT8,
+    acc_bound: float = 1 << 22,
+) -> IntegerBNParams:
+    gamma = np.asarray(gamma, np.float64)
+    beta = np.asarray(beta, np.float64)
+    mu = np.asarray(mu, np.float64)
+    sigma = np.asarray(sigma, np.float64)
+    eps_phi = np.asarray(eps_phi, np.float64)
+
+    kappa = gamma / sigma
+    lam = beta - kappa * mu
+
+    # symmetric quantizer for kappa (paper: eps = 2*beta_k/(2^Q - 1))
+    beta_k = np.maximum(np.max(np.abs(kappa)), 1e-12)
+    eps_k = 2.0 * beta_k / (kappa_spec.levels - 1)
+    q_kappa = np.clip(np.round(kappa / eps_k), kappa_spec.qmin, kappa_spec.qmax)
+
+    # int32 budget: |q_k * (q_phi >> s)| < 2^30
+    kmax = float(np.max(np.abs(q_kappa)))
+    need = np.log2(max(kmax * acc_bound, 1.0))
+    pre_shift = int(max(0, np.ceil(need - 30)))
+
+    eps_out = eps_k * eps_phi * (1 << pre_shift)
+    q_lambda = np.round(lam / eps_out).astype(np.int64)
+    if np.any(np.abs(q_lambda) >= np.int64(1) << 31):
+        raise ValueError("integer BN lambda overflows int32")
+
+    return IntegerBNParams(
+        q_kappa=q_kappa.astype(np.int8),
+        q_lambda=q_lambda.astype(np.int32),
+        pre_shift=pre_shift,
+        eps_out=np.broadcast_to(eps_out, kappa.shape).copy(),
+    )
+
+
+def apply_integer_bn(q_phi, p: IntegerBNParams, *, channel_axis: int = -1):
+    """Q_phi(phi) = Q_k(kappa) * Q_phi(varphi) + Q_phi(lambda)   (Eq. 22)."""
+    shape = [1] * q_phi.ndim
+    shape[channel_axis] = -1
+    qk = jnp.asarray(p.q_kappa, jnp.int32).reshape(shape)
+    ql = jnp.asarray(p.q_lambda, jnp.int32).reshape(shape)
+    q = jnp.right_shift(q_phi.astype(jnp.int32), p.pre_shift)
+    return q * qk + ql
+
+
+# ---------------------------------------------------------------------------
+# (iii) Threshold merge, Eq. 19-20
+# ---------------------------------------------------------------------------
+
+
+def make_bn_act_thresholds(
+    gamma, beta, mu, sigma, eps_phi, eps_y, n_levels: int
+) -> np.ndarray:
+    """TH_i = ceil( 1/eps_phi * (sigma/gamma * i * eps_y - beta*sigma/gamma + mu) ).
+
+    Returns (C, n_levels-1) int64 thresholds for i = 1..n_levels-1 (level 0
+    needs no threshold); assumes gamma, sigma > 0 (paper: 'by construction
+    or simple transformations').
+    """
+    gamma = np.asarray(gamma, np.float64)
+    beta = np.asarray(beta, np.float64)
+    mu = np.asarray(mu, np.float64)
+    sigma = np.asarray(sigma, np.float64)
+    if np.any(gamma <= 0) or np.any(sigma <= 0):
+        raise ValueError("threshold merge requires gamma, sigma > 0")
+    i = np.arange(1, n_levels, dtype=np.float64)[None, :]  # (1, L-1)
+    s_over_g = (sigma / gamma)[:, None]
+    th = (s_over_g * i * float(eps_y) - beta[:, None] * s_over_g + mu[:, None]) / float(eps_phi)
+    return np.ceil(th).astype(np.int64)
+
+
+def apply_thresholds(q_phi, thresholds, *, channel_axis: int = -1):
+    """Q_y = sum_i chi_[TH_i, TH_{i+1})  ==  #{i : q_phi >= TH_i}  (Eq. 20).
+
+    Monotone thresholds turn the staircase into a comparison count —
+    integer-only, exact.  q_phi: (..., C); thresholds: (C, L-1).
+    """
+    th = jnp.asarray(thresholds, jnp.int32)  # (C, L-1)
+    q = q_phi.astype(jnp.int32)[..., None]   # (..., C, 1)
+    ge = (q >= th).astype(jnp.int32)          # (..., C, L-1)
+    return jnp.sum(ge, axis=-1)
+
+
+def bn_apply_float(x, gamma, beta, mu, sigma, *, channel_axis: int = -1):
+    """Reference FP BN (Eq. 3): gamma/sigma * (x - mu) + beta."""
+    shape = [1] * x.ndim
+    shape[channel_axis] = -1
+    g = jnp.reshape(gamma, shape)
+    b = jnp.reshape(beta, shape)
+    m = jnp.reshape(mu, shape)
+    s = jnp.reshape(sigma, shape)
+    return g / s * (x - m) + b

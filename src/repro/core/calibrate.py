@@ -1,0 +1,71 @@
+"""Calibration: choose activation clipping ranges from data (paper §2.2:
+'beta can be set to the maximum value of y in the FullPrecision stage').
+
+A `Calibrator` accumulates running min/max per named observation point
+while the model runs in FP, then emits the (alpha, beta) ranges used to
+initialize FQ quantization state and, later, deployment quanta.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Calibrator:
+    lo: Dict[str, float] = dataclasses.field(default_factory=dict)
+    hi: Dict[str, float] = dataclasses.field(default_factory=dict)
+    momentum: float = 1.0  # 1.0 = pure running max (NEMO default behaviour)
+
+    def observe(self, name: str, x) -> None:
+        x_lo = float(jnp.min(x))
+        x_hi = float(jnp.max(x))
+        if name not in self.hi:
+            self.lo[name], self.hi[name] = x_lo, x_hi
+        elif self.momentum >= 1.0:
+            self.lo[name] = min(self.lo[name], x_lo)
+            self.hi[name] = max(self.hi[name], x_hi)
+        else:
+            m = self.momentum
+            self.lo[name] = (1 - m) * self.lo[name] + m * min(self.lo[name], x_lo)
+            self.hi[name] = (1 - m) * self.hi[name] + m * max(self.hi[name], x_hi)
+
+    def range(self, name: str, *, default: Tuple[float, float] = (0.0, 6.0),
+              margin: float = 0.0) -> Tuple[float, float]:
+        if name not in self.hi:
+            return default
+        lo, hi = self.lo[name], self.hi[name]
+        span = max(hi - lo, 1e-6)
+        lo -= margin * span
+        hi += margin * span
+        if hi <= lo + 1e-8:
+            hi = lo + 1e-6
+        return lo, hi
+
+    def beta(self, name: str, *, default: float = 6.0) -> float:
+        """Clip ceiling for ReLU-family activations (alpha pinned at 0)."""
+        if name not in self.hi:
+            return default
+        return max(float(self.hi[name]), 1e-6)
+
+    def merge(self, other: "Calibrator") -> None:
+        """Combine stats from another shard/host (data-parallel calibration)."""
+        for name in other.hi:
+            if name not in self.hi:
+                self.lo[name], self.hi[name] = other.lo[name], other.hi[name]
+            else:
+                self.lo[name] = min(self.lo[name], other.lo[name])
+                self.hi[name] = max(self.hi[name], other.hi[name])
+
+    def state_dict(self) -> dict:
+        return {"lo": dict(self.lo), "hi": dict(self.hi)}
+
+    @staticmethod
+    def from_state(state: dict) -> "Calibrator":
+        c = Calibrator()
+        c.lo.update(state["lo"])
+        c.hi.update(state["hi"])
+        return c

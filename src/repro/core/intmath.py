@@ -1,0 +1,78 @@
+"""Integer-only math primitives for the IntegerDeployable path.
+
+These run *inside* jitted ID code, so they must be pure-integer (the jaxpr
+audit test enforces it).  Hardware mapping: clz / shifts / mul are native
+TPU VPU ops; the Newton isqrt is a short fori_loop of integer divides.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def int_isqrt(n):
+    """floor(sqrt(n)) for non-negative int32, pure integer.
+
+    Initial guess from the bit length (via count-leading-zeros), then 5
+    Newton iterations x <- (x + n//x) >> 1.  Starting at
+    2^ceil(bits/2) >= sqrt(n) keeps the iteration monotonically
+    decreasing, and quadratic convergence makes 5 steps sufficient for
+    32-bit inputs (verified exhaustively-ish in tests).
+    """
+    n = n.astype(jnp.int32)
+    bits = 32 - jax.lax.clz(jnp.maximum(n, 1))
+    x0 = jnp.left_shift(jnp.int32(1), (bits + 1) >> 1)  # 2^ceil(bits/2)
+
+    def body(_, x):
+        x_new = jnp.right_shift(x + n // jnp.maximum(x, 1), 1)
+        return jnp.minimum(x, x_new)  # monotone from above; floor-safe
+
+    x = jax.lax.fori_loop(0, 6, body, x0)
+    # Newton can land at floor(sqrt(n))+1 for perfect-square neighbours.
+    x = jnp.where(x * x > n, x - 1, x)
+    return jnp.where(n <= 0, 0, x).astype(jnp.int32)
+
+
+def int_reciprocal_q(r, d: int):
+    """floor(2^d / r) for positive int32 r — dynamic requant multiplier.
+
+    Used by the integer RMS/LayerNorm (DESIGN.md §3.5): the per-token
+    normalizer 1/r enters the multiply-shift chain as this fixed-point
+    reciprocal; relative error <= r/2^d.
+    """
+    r = jnp.maximum(r.astype(jnp.int32), 1)
+    return (jnp.int32(1) << d) // r
+
+
+def build_lut(fn, eps_in, zp_in: int, eps_out, zp_out: int, *,
+              qmin: int = -128, qmax: int = 127) -> np.ndarray:
+    """Materialize a pointwise nonlinearity as a 256-entry integer table.
+
+    This is exactly the paper's general staircase quantization function
+    (Eq. 8/9): for every stored input level s, thresholds are implied by
+    fn's value at real(s).  Host-side float is fine (transform time);
+    the runtime op is a pure-integer gather.
+    """
+    s = np.arange(qmin, qmax + 1, dtype=np.int64)
+    real = (s - zp_in) * float(eps_in)
+    y = np.asarray(fn(real), dtype=np.float64)
+    t = np.clip(np.round(y / float(eps_out)) + zp_out, qmin, qmax)
+    return t.astype(np.int8)
+
+
+def apply_lut(stored, table, *, qmin: int = -128):
+    """y_stored = table[x_stored - qmin]  (integer gather)."""
+    idx = stored.astype(jnp.int32) - qmin
+    return jnp.take(jnp.asarray(table), idx, axis=0)
+
+
+def avgpool_requant_params(k_total: int, d: int = 15):
+    """Eq. 25: 1/(K1*K2) ~= floor(2^d / (K1*K2)) >> d  (integer tables)."""
+    m = int((1 << d) // k_total)
+    return m, d
+
+
+def int_avgpool_combine(acc, m: int, d: int):
+    """(m * sum) >> d on an int32 pooled sum (Eq. 25)."""
+    return jnp.right_shift(acc.astype(jnp.int32) * jnp.int32(m), d)

@@ -1,0 +1,154 @@
+"""PACT-style fake quantization with straight-through estimators (paper §2).
+
+FakeQuantized forward-prop restricts tensors to quantized grids while the
+backward pass flows through the full-precision values (STE; Choi et al.
+PACT, Spallanzani et al. for why it works).
+
+Activations (paper §2.2, NEMO PACT_Act / PACT_QuantFunc):
+    y   = floor( clip_[0,beta)(x) / eps ) * eps,  eps = beta/(2^Q - 1)
+    dL/dx    = chi_[0,beta)(x) * dL/dy
+    dL/dbeta = sum( (x >= beta) * dL/dy )          (learnable clip)
+
+Asymmetric variant for non-clipped nonlinearities (SiLU/GELU outputs):
+clip to [alpha, beta), both learnable, image [0, 2^Q-1].
+
+Weights (PACT_QuantFunc_Asymm in NEMO; here the symmetric per-channel
+form used for deployment, DESIGN.md §3):
+    w_hat = eps * clip( floor(w/eps), qmin, qmax ),  eps = 2*beta_w/(2^Q-1)
+    dL/dw = chi_[-beta, beta)(w) * dL/dw_hat
+beta_w is *not* trained (NEMO's reset_alpha_weights policy: beta_w tracks
+max|w| per out-channel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Activations — symmetric/ReLU-family: clip [0, beta)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def pact_act(x, beta, n_bits: int):
+    """FQ forward for a ReLU-family Quantization/Activation (alpha=0)."""
+    return _pact_act_fwd_impl(x, beta, n_bits)
+
+
+def _pact_act_fwd_impl(x, beta, n_bits):
+    # quantization math in f32 even under bf16 activations (bf16's 8
+    # mantissa bits cannot resolve a 2^8-level grid)
+    xf = x.astype(jnp.float32)
+    eps = beta.astype(jnp.float32) / (2 ** n_bits - 1)
+    q = jnp.clip(jnp.floor(xf / eps), 0.0, 2 ** n_bits - 1)
+    return (q * eps).astype(x.dtype)
+
+
+def _pact_act_fwd(x, beta, n_bits):
+    return _pact_act_fwd_impl(x, beta, n_bits), (x, beta)
+
+
+def _pact_act_bwd(n_bits, res, g):
+    x, beta = res
+    in_range = jnp.logical_and(x >= 0.0, x < beta)
+    dx = jnp.where(in_range, g, 0.0)
+    # PACT: clipped-high region contributes to d/dbeta
+    dbeta = jnp.sum(jnp.where(x >= beta, g, 0.0)).astype(beta.dtype)
+    return dx, jnp.reshape(dbeta, jnp.shape(beta))
+
+
+pact_act.defvjp(_pact_act_fwd, _pact_act_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Activations — asymmetric: clip [alpha, beta)  (SiLU/GELU/add outputs)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def pact_act_asymm(x, alpha, beta, n_bits: int):
+    return _pact_asymm_impl(x, alpha, beta, n_bits)
+
+
+def _pact_asymm_impl(x, alpha, beta, n_bits):
+    xf = x.astype(jnp.float32)
+    a = alpha.astype(jnp.float32)
+    eps = (beta.astype(jnp.float32) - a) / (2 ** n_bits - 1)
+    q = jnp.clip(jnp.floor((xf - a) / eps), 0.0, 2 ** n_bits - 1)
+    return (a + q * eps).astype(x.dtype)
+
+
+def _pact_asymm_fwd(x, alpha, beta, n_bits):
+    return _pact_asymm_impl(x, alpha, beta, n_bits), (x, alpha, beta)
+
+
+def _pact_asymm_bwd(n_bits, res, g):
+    x, alpha, beta = res
+    in_range = jnp.logical_and(x >= alpha, x < beta)
+    dx = jnp.where(in_range, g, 0.0)
+    dbeta = jnp.sum(jnp.where(x >= beta, g, 0.0)).astype(beta.dtype)
+    dalpha = jnp.sum(jnp.where(x < alpha, g, 0.0)).astype(alpha.dtype)
+    return dx, jnp.reshape(dalpha, jnp.shape(alpha)), jnp.reshape(dbeta, jnp.shape(beta))
+
+
+pact_act_asymm.defvjp(_pact_asymm_fwd, _pact_asymm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Weights — symmetric per-channel, static beta_w
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def pact_weight(w, beta_w, n_bits: int, channel_axis: int = -1):
+    """FQ weight restriction w -> w_hat (used in place of w in forward).
+
+    beta_w broadcasts along ``channel_axis`` (per-out-channel) or is a
+    scalar (layer-wise).
+    """
+    return _pact_weight_impl(w, beta_w, n_bits, channel_axis)
+
+
+def _bcast(beta_w, ndim, channel_axis):
+    if jnp.ndim(beta_w) == 0:
+        return beta_w
+    shape = [1] * ndim
+    shape[channel_axis] = -1
+    return jnp.reshape(beta_w, shape)
+
+
+def _pact_weight_impl(w, beta_w, n_bits, channel_axis):
+    b = _bcast(beta_w, w.ndim, channel_axis)
+    eps = 2.0 * b / (2 ** n_bits - 1)
+    qmax = 2 ** (n_bits - 1) - 1
+    qmin = -(2 ** (n_bits - 1))
+    q = jnp.clip(jnp.floor(w / eps), qmin, qmax)
+    return q * eps
+
+
+def _pact_weight_fwd(w, beta_w, n_bits, channel_axis):
+    return _pact_weight_impl(w, beta_w, n_bits, channel_axis), (w, beta_w)
+
+
+def _pact_weight_bwd(n_bits, channel_axis, res, g):
+    w, beta_w = res
+    b = _bcast(beta_w, w.ndim, channel_axis)
+    in_range = jnp.logical_and(w >= -b, w < b)
+    dw = jnp.where(in_range, g, 0.0)
+    return dw, jnp.zeros_like(beta_w)  # beta_w static (reset_alpha_weights)
+
+
+pact_weight.defvjp(_pact_weight_fwd, _pact_weight_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Convenience
+# ---------------------------------------------------------------------------
+
+
+def default_weight_beta(w, channel_axis: int = -1):
+    """reset_alpha_weights(): per-out-channel max|w| (never zero)."""
+    axes = tuple(i for i in range(w.ndim) if i != channel_axis % w.ndim)
+    return jnp.maximum(jnp.max(jnp.abs(w), axis=axes), 1e-8)

@@ -1,0 +1,222 @@
+"""Quantized spaces, quanta and integer images (paper Def. 2.1 / 2.2).
+
+A *quantized tensor* is ``t_hat = alpha_t + eps_t * Q_t(t)`` with quantum
+``eps_t`` (scalar or per-channel), offset ``alpha_t`` and integer image
+``Q_t(t)`` living in a finite quantized space ``Z_t``.
+
+Storage convention (TPU adaptation, DESIGN.md §3.3): integer images are
+stored in *signed* dtypes. Activation spaces whose paper-canonical image is
+unsigned ``[0, 2^Q - 1]`` are stored shifted by a zero-point ``zp`` so that
+
+    real_value = eps * (stored - zp)          # affine de-quantization
+
+i.e. the NEMO offset is ``alpha = -eps * zp``.  Weights are symmetric
+(``zp = 0``) with per-output-channel quanta (paper footnote: channel-wise
+eps is a vector of size N_oc).
+
+Everything in this module is *transform-time* math: it runs on the host in
+float64/python and produces static integer tables.  The only functions that
+appear inside jitted runtime code are `quantize_affine` / `dequantize`
+(used by FQ/QD paths) — the ID path never touches eps at runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Quantized space
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of a quantized space Z_t (Def. 2.1).
+
+    ``n_bits`` controls the cardinality C(Z) = 2**n_bits.  ``signed``
+    selects the canonical integer range.  ``storage`` dtypes are the
+    narrowest signed JAX dtype that can hold the *stored* image
+    (image + zero-point shift always fits the signed range by design).
+    """
+
+    n_bits: int = 8
+    signed: bool = True
+
+    def __post_init__(self):
+        if not (2 <= self.n_bits <= 32):
+            raise ValueError(f"n_bits must be in [2, 32], got {self.n_bits}")
+
+    # Canonical (paper) image bounds ----------------------------------
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.n_bits - 1)) if self.signed else 0
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.n_bits - 1)) - 1 if self.signed else (1 << self.n_bits) - 1
+
+    @property
+    def levels(self) -> int:
+        return 1 << self.n_bits
+
+    # Storage ----------------------------------------------------------
+    @property
+    def zero_point(self) -> int:
+        """Shift applied so the stored image is signed-symmetric.
+
+        Unsigned spaces [0, 2^Q-1] are stored as [qmin_s, qmax_s] of the
+        signed Q-bit dtype: stored = image + qmin(signed).
+        """
+        return 0 if self.signed else -(1 << (self.n_bits - 1))
+
+    @property
+    def dtype(self):
+        if self.n_bits <= 8:
+            return jnp.int8
+        if self.n_bits <= 16:
+            return jnp.int16
+        return jnp.int32
+
+    @property
+    def store_min(self) -> int:
+        return self.qmin + self.zero_point
+
+    @property
+    def store_max(self) -> int:
+        return self.qmax + self.zero_point
+
+
+INT8 = QuantSpec(8, signed=True)
+UINT8 = QuantSpec(8, signed=False)  # stored int8 with zp=-128
+INT16 = QuantSpec(16, signed=True)
+INT32 = QuantSpec(32, signed=True)
+
+
+# ---------------------------------------------------------------------------
+# Quantum metadata carried alongside integer images (transform-time)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QMeta:
+    """(eps, zp, spec) describing how to interpret a stored integer image.
+
+    ``eps`` may be a python float (layer-wise) or a 1-D numpy array
+    (channel-wise, paper footnote a).  ``zp`` is the *stored* zero-point:
+    real = eps * (stored - zp).
+    """
+
+    eps: np.ndarray  # float64 scalar or (C,) vector
+    zp: int
+    spec: QuantSpec
+
+    @staticmethod
+    def make(eps, zp: int, spec: QuantSpec) -> "QMeta":
+        return QMeta(np.asarray(eps, dtype=np.float64), int(zp), spec)
+
+    @property
+    def per_channel(self) -> bool:
+        return np.ndim(self.eps) > 0
+
+    @property
+    def alpha(self):
+        """NEMO offset: real = alpha + eps * image,  alpha = -eps*zp."""
+        return -self.eps * self.zp
+
+
+# ---------------------------------------------------------------------------
+# Runtime (jit-compatible) quantize / dequantize — FQ and QD paths only.
+# ---------------------------------------------------------------------------
+
+
+def quantize_affine(x, eps, zp: int, spec: QuantSpec, *, rounding: str = "floor"):
+    """LQ_y(t): map real x to a *stored* integer image (Eq. 10).
+
+    stored = clip(floor(x / eps) + zp, store_min, store_max)
+
+    ``rounding='round'`` shifts the staircase thresholds by eps/2 — still a
+    valid quantization function per Eq. 8 (used for LUTs/weights at
+    transform time where it strictly reduces error).
+    """
+    scaled = x / eps
+    if rounding == "floor":
+        q = jnp.floor(scaled)
+    elif rounding == "round":
+        q = jnp.round(scaled)
+    else:
+        raise ValueError(rounding)
+    q = q + zp
+    q = jnp.clip(q, spec.store_min, spec.store_max)
+    return q.astype(spec.dtype)
+
+
+def dequantize(stored, eps, zp: int):
+    """real = eps * (stored - zp).  Used by QD and by tests/benches."""
+    return (stored.astype(jnp.float32) - zp) * jnp.asarray(eps, jnp.float32)
+
+
+def fake_quantize(x, eps, zp: int, spec: QuantSpec, *, rounding: str = "floor"):
+    """quantize → dequantize in one go (the FQ forward restriction)."""
+    return dequantize(quantize_affine(x, eps, zp, spec, rounding=rounding), eps, zp)
+
+
+# ---------------------------------------------------------------------------
+# Transform-time helpers (host / numpy)
+# ---------------------------------------------------------------------------
+
+
+def act_qmeta(beta: float, spec: QuantSpec = UINT8, alpha: float = 0.0) -> QMeta:
+    """Quantum for a clipped activation on [alpha, beta) (paper §2.2).
+
+    eps = (beta - alpha) / (2^Q - 1);  ReLU-family uses alpha=0.
+    The stored zero-point places `alpha` at store_min.
+    """
+    if beta <= alpha:
+        raise ValueError(f"need beta > alpha, got [{alpha}, {beta})")
+    eps = (beta - alpha) / (spec.levels - 1)
+    # real = alpha + eps*image, image in [0, 2^Q-1]; stored = image + spec.zero_point
+    # real = eps*(stored - zp_eff)  with  zp_eff = spec.zero_point - alpha/eps
+    zp_eff = spec.zero_point - int(round(alpha / eps))
+    return QMeta.make(eps, zp_eff, spec)
+
+
+def weight_qmeta(w: np.ndarray, spec: QuantSpec = INT8, channel_axis: Optional[int] = 0) -> QMeta:
+    """Symmetric per-channel weight quantum: eps = 2*beta/(2^Q - 1).
+
+    (paper §3.4 'symmetric (alpha=-beta) Q-bit quantizer'); beta is the
+    per-channel max-abs, the `reset_alpha_weights()` policy.
+    """
+    w = np.asarray(w)
+    if channel_axis is None:
+        beta = np.maximum(np.max(np.abs(w)), 1e-8)
+    else:
+        axes = tuple(i for i in range(w.ndim) if i != channel_axis)
+        beta = np.maximum(np.max(np.abs(w), axis=axes), 1e-8)
+    eps = 2.0 * beta / (spec.levels - 1)
+    return QMeta.make(eps, 0, spec)
+
+
+def quantize_np(x: np.ndarray, meta: QMeta, *, rounding: str = "round",
+                channel_axis: Optional[int] = None) -> np.ndarray:
+    """Host-side quantization to the stored image (transform-time)."""
+    eps = meta.eps
+    if meta.per_channel and channel_axis is not None:
+        shape = [1] * x.ndim
+        shape[channel_axis] = -1
+        eps = eps.reshape(shape)
+    scaled = x / eps
+    q = np.floor(scaled) if rounding == "floor" else np.round(scaled)
+    q = np.clip(q + meta.zp, meta.spec.store_min, meta.spec.store_max)
+    return q.astype(np.dtype(meta.spec.dtype))
+
+
+def dequantize_np(q: np.ndarray, meta: QMeta, *, channel_axis: Optional[int] = None) -> np.ndarray:
+    eps = meta.eps
+    if meta.per_channel and channel_axis is not None:
+        shape = [1] * q.ndim
+        shape[channel_axis] = -1
+        eps = eps.reshape(shape)
+    return (q.astype(np.float64) - meta.zp) * eps

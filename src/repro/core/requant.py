@@ -1,0 +1,276 @@
+"""Requantization (paper §3.2, Eq. 12-14) — the core deployment primitive.
+
+Moving an integer image from space Z_a (quantum eps_a) into Z_b (quantum
+eps_b) would ideally scale by eps_a/eps_b; since that ratio is not an
+integer, NEMO approximates it with a fixed-point multiplier:
+
+    RQ(q) = ( floor(eps_a * 2^d / eps_b) * q ) >> d            (Eq. 13)
+
+The relative error of the scale is < 1/m where m = floor(eps_a*2^d/eps_b);
+choosing  d >= log2( eps_b / (eps_a * eta) )  bounds it by eta (Eq. 14).
+NEMO parametrizes eta = 1/requantization_factor (default 16 for
+activations, 256 for adds); we default to 256 everywhere and verify the
+bound by property test.
+
+TPU adaptation (DESIGN.md §3.2) — three engineering extensions, all with
+provable error behaviour, all static-table (no runtime float):
+
+  * *saturation pre-clip*: inputs whose requantized value falls outside
+    [qmin, qmax] are clipped BEFORE the multiply.  This is semantically a
+    no-op (the output clip would saturate them anyway) but bounds
+    |q| * m inside the int32 budget even for up-scaling ratios.
+  * *staged shift* for wide accumulators (|q| up to ~2^28 at
+    d_model=18432):  ((q >> s0) * m) >> (d - s0)  with
+    s0 <= d - ceil(log2 m), which costs at most ONE output quantum
+    (dropping the s0 low bits of q loses < 2^s0 * m / 2^d <= 1 quantum).
+  * *negative shift* (d < 0) for up-scaling spaces (integer Add between
+    branches with similar quanta can up-scale): out = (q * m) << -d.
+
+All parameter computation is host-side float64; the runtime op touches
+integers only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_REQUANT_FACTOR = 256  # eta = 1/256 (NEMO's PACT_IntegerAdd default)
+_INT32_BUDGET = 30  # keep |q * m| < 2^30 to leave one bit of headroom
+
+
+@dataclasses.dataclass(frozen=True)
+class RequantParams:
+    """Static integer tables for one requantization site.
+
+    ``m``/``s0``/``pre_lo``/``pre_hi`` may be scalars or per-channel int32
+    vectors (channel-wise eps_a, e.g. per-out-channel weight quanta).
+    ``d`` is shared (scalar) so the shift schedule is uniform across lanes;
+    d may be negative (up-scaling -> left shift).
+    """
+
+    m: np.ndarray       # int32, >= 1
+    d: int              # total shift (negative = left shift)
+    s0: np.ndarray      # int32 pre-shift (staged variant); 0 = pure Eq. 13
+    pre_lo: np.ndarray  # int32 saturation pre-clip bounds on q
+    pre_hi: np.ndarray
+    zp_out: int         # stored zero-point of the destination space
+    qmin: int           # stored clip bounds of the destination space
+    qmax: int
+    out_dtype: str = "int8"
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def make(
+        eps_in,
+        eps_out,
+        *,
+        zp_out: int = 0,
+        qmin: int = -128,
+        qmax: int = 127,
+        requant_factor: int = DEFAULT_REQUANT_FACTOR,
+        acc_bound: Optional[float] = None,
+        out_dtype: str = "int8",
+        min_d: int = -31,
+        stage_slack: int = 2,
+    ) -> "RequantParams":
+        """Choose (m, d, s0, pre-clip) per Eq. 14 + the int32 budget.
+
+        eps_in may be a vector (per-channel); eps_out must be scalar (the
+        destination activation space is layer-wise).  ``acc_bound`` is the
+        static worst-case |q| of the incoming integer image (e.g.
+        N * qmax_w * qmax_x for a Linear accumulator); used to derive s0.
+        """
+        eps_in = np.atleast_1d(np.asarray(eps_in, np.float64))
+        eps_out = float(np.asarray(eps_out, np.float64))
+        if np.any(eps_in <= 0) or eps_out <= 0:
+            raise ValueError("quanta must be positive")
+        if acc_bound is None:
+            acc_bound = 2.0 ** 24
+        acc_bound = float(acc_bound)
+
+        ratio = eps_in / eps_out  # < 1 for accumulator->activation sites
+        eta = 1.0 / requant_factor
+        span_hi = float(qmax - zp_out) + 1.0
+        span_lo = float(qmin - zp_out) - 1.0
+
+        def _candidate(d: int):
+            """Build (m, s0, pre) for shift d; None if infeasible.
+
+            Feasibility = (a) Eq. 14 error: |ratio - m/2^d|/ratio < eta,
+            (b) int32 multiply budget via saturation pre-clip + staging,
+            (c) staged-error bound s0 <= d - ceil(log2 m) + stage_slack
+                (error <= 2^stage_slack output quanta; slack is only
+                consumed by near-unity ratios rescaling into fine-grained
+                accumulator spaces, where a quantum is tiny),
+            (d) all shifts within [0, 31].
+            """
+            m = np.floor(ratio * math.pow(2.0, d))
+            if np.any(m < 1.0) or np.any(m >= 2.0 ** 31):
+                return None
+            err = np.abs(ratio - m * math.pow(2.0, -d)) / ratio
+            if np.any(err >= eta):
+                return None
+            scale = m * math.pow(2.0, -d)  # ~= ratio
+            pre_hi = np.minimum(np.ceil(span_hi / scale) + 1.0, 2.0 ** 31 - 1)
+            pre_lo = np.maximum(np.floor(span_lo / scale) - 1.0, -(2.0 ** 31))
+            eff = np.minimum(acc_bound, np.maximum(np.abs(pre_hi), np.abs(pre_lo)))
+            with np.errstate(divide="ignore"):
+                need = np.ceil(np.log2(np.maximum(eff * m, 1.0))).astype(int)
+            s0 = np.maximum(np.maximum(need - _INT32_BUDGET, d - 31), 0)
+            s0_cap = np.maximum(
+                d - np.ceil(np.log2(m)).astype(int) + stage_slack, 0)
+            if np.any(s0 > s0_cap) or np.any(s0 > 31):
+                return None
+            if d < 0 and -d > 31:
+                return None
+            return m.astype(np.int64), s0, pre_lo, pre_hi
+
+        found = None
+        for d in range(min_d, 47):
+            found = _candidate(d)
+            if found is not None:
+                break
+        if found is None:
+            raise ValueError(
+                "requantization site unschedulable in int32: "
+                f"eps_in~{float(np.max(eps_in)):g} eps_out={eps_out:g} "
+                f"acc_bound={acc_bound:g} (ratio {float(np.max(ratio)):g}, "
+                f"eta={eta:g})"
+            )
+        m, s0, pre_lo, pre_hi = found
+
+        squeeze = eps_in.shape == (1,)
+
+        def _i32(x):
+            a = np.asarray(x).astype(np.int64)
+            a = np.clip(a, -(2 ** 31), 2 ** 31 - 1).astype(np.int32)
+            return a[0] if squeeze and a.shape == (1,) else a
+
+        return RequantParams(
+            m=_i32(m), d=int(d), s0=_i32(s0), pre_lo=_i32(pre_lo),
+            pre_hi=_i32(pre_hi), zp_out=int(zp_out), qmin=int(qmin),
+            qmax=int(qmax), out_dtype=out_dtype,
+        )
+
+    # ------------------------------------------------------------------
+    def as_arrays(self):
+        """jnp views of the tables (broadcast-ready)."""
+        return (
+            jnp.asarray(self.m, jnp.int32),
+            jnp.asarray(self.s0, jnp.int32),
+            jnp.asarray(self.pre_lo, jnp.int32),
+            jnp.asarray(self.pre_hi, jnp.int32),
+        )
+
+    def to_tree(self) -> dict:
+        """Runtime pytree form — every field an int32 array, so per-layer
+        tables can be stacked along a leading axis and consumed inside
+        lax.scan (layer-stacked models).  d/s0 become traced shift
+        operands of right_shift, which is well-defined elementwise."""
+        return {
+            "m": np.asarray(self.m, np.int32),
+            "d": np.asarray(self.d, np.int32),
+            "s0": np.asarray(self.s0, np.int32),
+            "lo": np.asarray(self.pre_lo, np.int32),
+            "hi": np.asarray(self.pre_hi, np.int32),
+            "zp": np.asarray(self.zp_out, np.int32),
+        }
+
+
+def apply_requant(q, rp: RequantParams, *, channel_axis: int = -1):
+    """Integer-only RQ (Eq. 13 / staged): q int32 -> stored image of Z_b.
+
+    q:        int32 integer image in the source space (zero-point 0 — NEMO
+              accumulators are offset-free by construction, DESIGN.md §3.3).
+    returns:  out_dtype image with destination zero-point/clipping applied.
+    """
+    m, s0, pre_lo, pre_hi = rp.as_arrays()
+    if np.ndim(rp.m) > 0:
+        shape = [1] * q.ndim
+        shape[channel_axis] = -1
+        m = m.reshape(shape)
+        s0 = s0.reshape(shape)
+        pre_lo = pre_lo.reshape(shape)
+        pre_hi = pre_hi.reshape(shape)
+    q = jnp.clip(q.astype(jnp.int32), pre_lo, pre_hi)
+    # arithmetic right shift == floor division by 2^k for signed ints
+    if rp.d >= 0:
+        staged = jnp.right_shift(q, s0) * m
+        out = jnp.right_shift(staged, rp.d - s0)
+    else:
+        # up-scaling: saturate in the pre-shift domain so the left shift
+        # cannot wrap int32 (bounds are static host ints).
+        e = -rp.d
+        mid_hi = (rp.qmax - rp.zp_out) >> e
+        mid_lo = -((rp.zp_out - rp.qmin) >> e)
+        out = jnp.left_shift(jnp.clip(q * m, mid_lo, mid_hi), e)
+    out = out + rp.zp_out
+    out = jnp.clip(out, rp.qmin, rp.qmax)
+    return out.astype(getattr(jnp, rp.out_dtype))
+
+
+def apply_rqt(q, rqt: dict, *, channel_axis: int = -1,
+              qmin: int = -128, qmax: int = 127, out_dtype=jnp.int8):
+    """Runtime-tree form of `apply_requant` (scan-stackable, d >= 0 only).
+
+    ``rqt`` holds int32 arrays {m, d, s0, lo, hi, zp}; m/s0/lo/hi may be
+    per-channel vectors laid out along ``channel_axis``.
+    """
+    m, d, s0 = rqt["m"], rqt["d"], rqt["s0"]
+    lo, hi, zp = rqt["lo"], rqt["hi"], rqt["zp"]
+    if m.ndim == 1 and m.shape[0] > 1 and q.ndim > 1:
+        # per-channel vector: lay out along channel_axis
+        shape = [1] * q.ndim
+        shape[channel_axis] = -1
+        m = m.reshape(shape)
+        s0 = s0.reshape(shape)
+        lo = lo.reshape(shape)
+        hi = hi.reshape(shape)
+    # m.ndim > 1 (e.g. per-expert (E, 1, C)): trust numpy broadcasting
+    q = jnp.clip(q.astype(jnp.int32), lo, hi)
+    staged = jnp.right_shift(q, s0) * m
+    out = jnp.right_shift(staged, d - s0) + zp
+    return jnp.clip(out, qmin, qmax).astype(out_dtype)
+
+
+def make_rqt(eps_in, eps_out, *, zp_out: int = 0, qmin: int = -128,
+             qmax: int = 127, requant_factor: int = DEFAULT_REQUANT_FACTOR,
+             acc_bound: Optional[float] = None) -> dict:
+    """Host-side: RequantParams.make -> runtime tree, d forced >= 0 so
+    stacked layers share one code path (see RequantParams.to_tree)."""
+    rp = RequantParams.make(
+        eps_in, eps_out, zp_out=zp_out, qmin=qmin, qmax=qmax,
+        requant_factor=requant_factor, acc_bound=acc_bound, min_d=0,
+    )
+    return rp.to_tree()
+
+
+def requant_identity(zp_out: int = 0, qmin: int = -128, qmax: int = 127) -> RequantParams:
+    """m=1, d=0 pass-through (used where eps already matches, D=1 case of
+    the paper's PACT_IntegerBatchNorm2d lambda path)."""
+    big = 2 ** 31 - 1
+    return RequantParams(
+        m=np.int32(1), d=0, s0=np.int32(0), pre_lo=np.int32(-big),
+        pre_hi=np.int32(big), zp_out=zp_out, qmin=qmin, qmax=qmax,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reference / analysis helpers
+# ---------------------------------------------------------------------------
+
+
+def requant_exact(q: np.ndarray, eps_in, eps_out) -> np.ndarray:
+    """The ideal real-valued rescale eps_a/eps_b * q (error oracle)."""
+    return np.asarray(q, np.float64) * (np.asarray(eps_in, np.float64) / float(eps_out))
+
+
+def scale_rel_error(rp: RequantParams, eps_in, eps_out) -> np.ndarray:
+    """| eps_a/eps_b - m/2^d | / (eps_a/eps_b)  — must be < eta (Eq. 14)."""
+    ratio = np.asarray(eps_in, np.float64) / float(eps_out)
+    approx = np.asarray(rp.m, np.float64) * math.pow(2.0, -rp.d)
+    return np.abs(ratio - approx) / ratio

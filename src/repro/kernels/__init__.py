@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the W8A8 serving hot spots (validated in
+interpret mode on CPU; TPU is the target).  See DESIGN.md §6."""
+from repro.kernels.ops import (
+    int8_matmul_requant, linear_rqt_kernel, quant_flash_attention, requant,
+)

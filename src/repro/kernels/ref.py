@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact mirrors).
+
+Each oracle implements the *same* integer algorithm as its kernel without
+any Pallas machinery, so kernel tests can assert exact integer equality
+(tolerance 0).  Where a kernel's algorithm intentionally diverges from
+the unfused model path (quant_flash_attention's per-block probability
+quantization), that divergence lives HERE, making it auditable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e9
+
+
+def int8_matmul_requant_ref(x, w, bias, mul, s0, *, d: int, zp: int = 0,
+                            qmin: int = -128, qmax: int = 127):
+    """Mirror of int8_matmul.int8_matmul_requant_pallas."""
+    acc = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    acc = acc + bias[None, :].astype(jnp.int32)
+    staged = jnp.right_shift(acc, s0[None, :]) * mul[None, :]
+    out = jnp.right_shift(staged, d - s0[None, :]) + zp
+    return jnp.clip(out, qmin, qmax).astype(jnp.int8)
+
+
+def requant_ref(q, m, s0, lo, hi, *, d: int, zp: int = 0, qmin: int = -128,
+                qmax: int = 127):
+    """Mirror of requant_kernel.requant_pallas."""
+    q = jnp.clip(q, lo[None, :], hi[None, :])
+    staged = jnp.right_shift(q, s0[None, :]) * m[None, :]
+    out = jnp.right_shift(staged, d - s0[None, :]) + zp
+    return jnp.clip(out, qmin, qmax).astype(jnp.int8)
+
+
+def quant_flash_attention_ref(q, k, v, *, score_scale: float,
+                              eps_ctx: float, causal: bool = True,
+                              q_offset: int = 0, bq: int = 128,
+                              bkv: int = 128):
+    """Mirror of quant_attention: same blockwise online softmax with
+    per-block int8 probability images.  q (BH, S_q, hd) int8."""
+    BH, S_q, hd = q.shape
+    _, S_kv, _ = k.shape
+    out = jnp.zeros((BH, S_q, hd), jnp.int8)
+    n_q, n_kv = S_q // bq, S_kv // bkv
+    q32 = q.astype(jnp.int32)
+    k32 = k.astype(jnp.int32)
+
+    def one_qblock(b, i):
+        qb = q32[b, i * bq:(i + 1) * bq]
+        m_run = jnp.full((bq,), NEG_INF, jnp.float32)
+        l_run = jnp.zeros((bq,), jnp.float32)
+        acc = jnp.zeros((bq, hd), jnp.float32)
+        for j in range(n_kv):
+            kb = k32[b, j * bkv:(j + 1) * bkv]
+            vb = v[b, j * bkv:(j + 1) * bkv]
+            s = qb @ kb.T
+            logits = s.astype(jnp.float32) * score_scale
+            if causal:
+                q_pos = q_offset + i * bq + jnp.arange(bq)[:, None]
+                k_pos = j * bkv + jnp.arange(bkv)[None, :]
+                logits = jnp.where(k_pos <= q_pos, logits, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[:, None])
+            qp = jnp.round(p * 127.0).astype(jnp.int8)
+            pv = jax.lax.dot_general(
+                qp, vb, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            corr = jnp.exp(m_run - m_new)
+            acc = acc * corr[:, None] + pv.astype(jnp.float32) / 127.0
+            l_run = l_run * corr + jnp.sum(qp.astype(jnp.float32), -1) / 127.0
+            m_run = m_new
+        ctx = acc / jnp.maximum(l_run, 1e-9)[:, None]
+        # reciprocal-multiply to match the kernel's f32 rounding exactly
+        return jnp.clip(jnp.round(ctx * np.float32(1.0 / eps_ctx)),
+                        -128, 127).astype(jnp.int8)
+
+    rows = []
+    for b in range(BH):
+        blocks = [one_qblock(b, i) for i in range(n_q)]
+        rows.append(jnp.concatenate(blocks, axis=0))
+    return jnp.stack(rows, axis=0)
+
+
+def attention_unfused_ref(q, k, v, *, score_scale: float, eps_ctx: float,
+                          causal: bool = True, q_offset: int = 0):
+    """The model's unfused ID attention (global softmax then one global
+    int8 probability image) — used to bound kernel divergence."""
+    BH, S_q, hd = q.shape
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.int32), k.astype(jnp.int32))
+    logits = s.astype(jnp.float32) * score_scale
+    if causal:
+        q_pos = q_offset + jnp.arange(S_q)[:, None]
+        k_pos = jnp.arange(k.shape[1])[None, :]
+        logits = jnp.where(k_pos <= q_pos, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    qp = jnp.round(p * 127.0).astype(jnp.int8)
+    acc = jnp.einsum("bqk,bkd->bqd", qp.astype(jnp.int32),
+                     v.astype(jnp.int32))
+    ctx = acc.astype(jnp.float32) / 127.0
+    return jnp.clip(jnp.round(ctx * np.float32(1.0 / eps_ctx)),
+                    -128, 127).astype(jnp.int8)

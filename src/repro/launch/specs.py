@@ -1,0 +1,221 @@
+"""Abstract input specs for dry-run lowering (assignment: ShapeDtypeStruct
+stand-ins, weak-type-correct, shardable, no device allocation).
+
+`deploy_specs(lm)` mirrors the *shapes* of `DecoderLM.deploy`'s integer
+tables without running the host-side numpy math (materializing 340B int8
+weights is impossible on this host).  Structural drift against the real
+deploy is pinned by tests/test_dryrun_specs.py, which asserts tree-struct
++ shape + dtype equality on every reduced family.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.rep import Rep
+from repro.layers.common import ActKind
+from repro.models.lm import ACT_MAP, DecoderLM
+
+I8 = jnp.int8
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+def _s(shape, dt):
+    return jax.ShapeDtypeStruct(tuple(shape), dt)
+
+
+def _rqt(n=None):
+    per = _s((n,), I32) if n else _s((), I32)
+    return {"m": per, "d": _s((), I32), "s0": per, "lo": per, "hi": per,
+            "zp": _s((), I32)}
+
+
+def _lin(d_in, d_out):
+    return {"w_q": _s((d_in, d_out), I8), "b_q": _s((d_out,), I32)}
+
+
+def _act(kind: ActKind, n):
+    if kind in (ActKind.IDENTITY, ActKind.RELU):
+        return {"rqt": _rqt(n)}
+    if kind is ActKind.RELU2:
+        return {"rqt": _rqt(n), "rqt2": _rqt()}
+    return {"rqt": _rqt(n), "lut": _s((256,), I8)}
+
+
+def _attn(c: ArchConfig, max_seq, d_in=None):
+    d = d_in or c.d_model
+    H, K, hd = c.n_heads, c.n_kv_heads, c.hd
+    return {
+        "wq": _lin(d, H * hd), "wk": _lin(d, K * hd), "wv": _lin(d, K * hd),
+        "q_rqt": _rqt(H * hd), "k_rqt": _rqt(K * hd), "v_rqt": _rqt(K * hd),
+        "score_scale": _s((), F32),
+        "sm_tabs": {"m_ln2": _s((), I32), "d_ln2": _s((), I32),
+                    "ln2_img": _s((), I32), "r_step": _s((), I32),
+                    "exp_lut": _s((256,), I32)},
+        "ctx_rqt": _rqt(),
+        "wo": _lin(H * hd, c.d_model),
+    }
+
+
+def _norm(d, kind, bias):
+    t = {"g_q": _s((d,), I8), "m": _s((), I32), "sh": _s((), I32)}
+    if bias:
+        t["b_q"] = _s((d,), I32)
+    return t
+
+
+def _add(b_vec=None, a_vec=None):
+    return {"rq_a": _rqt(a_vec), "rq_b": _rqt(b_vec),
+            "zp_a": _s((), I32), "zp_b": _s((), I32)}
+
+
+def _mlp(c: ArchConfig):
+    d, f = c.d_model, c.d_ff
+    kind = ACT_MAP[c.act]
+    if c.gated:
+        return {"wg": _lin(d, f), "g_tab": _act(kind, f),
+                "wu": _lin(d, f), "u_rqt": _rqt(f), "h_rqt": _rqt(),
+                "wd": _lin(f, d), "zp_g": _s((), I32)}
+    return {"wu": _lin(d, f), "u_tab": _act(kind, f), "wd": _lin(f, d)}
+
+
+def _moe(c: ArchConfig):
+    d, f, E = c.d_model, c.d_ff, c.n_experts
+    return {
+        "router": _lin(d, E), "router_scale": _s((E,), F32),
+        "wg_q": _s((E, d, f), I8), "wu_q": _s((E, d, f), I8),
+        "wd_q": _s((E, f, d), I8),
+        "g_rqt": _rqt2d(E, f), "g_lut": _s((256,), I8),
+        "u_rqt": _rqt2d(E, f), "h_rqt": _rqt(), "o_rqt": _rqt2d(E, d),
+        "zp_g": _s((), I32),
+    }
+
+
+def _rqt2d(E, n):
+    per = _s((E, n), I32)
+    return {"m": per, "d": _s((), I32), "s0": per, "lo": per, "hi": per,
+            "zp": _s((), I32)}
+
+
+def _mamba1(c: ArchConfig):
+    d = c.d_model
+    di = c.ssm_expand * d
+    ds = c.ssm_state
+    r = max(1, -(-d // 16))
+    K = 4
+    return {
+        "in_proj": _lin(d, 2 * di), "xz_rqt": _rqt(2 * di),
+        "conv_wq": _s((K, di), I8), "conv_bq": _s((di,), I32),
+        "conv_rqt": _rqt(), "conv_lut": _s((256,), I8),
+        "zp_conv": _s((), I32),
+        "x_proj": _lin(di, r + 2 * ds), "xdb_rqt": _rqt(r + 2 * ds),
+        "dt_proj": _lin(r, di), "dt_scale": _s((di,), F32),
+        "A": _s((di, ds), F32), "Dv": _s((di,), F32),
+        "eps_conv_f": _s((), F32), "zp_conv_f": _s((), F32),
+        "eps_xdb_f": _s((), F32), "eps_y_inv": _s((), F32),
+        "z_lut": _s((256,), I8), "zp_z": _s((), I32),
+        "gated_rqt": _rqt(), "out_proj": _lin(di, d),
+    }
+
+
+def _mamba2(c: ArchConfig):
+    d = c.d_model
+    di = c.ssm_expand * d
+    ds = c.ssm_state
+    H = di // c.ssm_head_dim
+    G = 1
+    d_in_proj = 2 * di + 2 * G * ds + H
+    d_conv_in = di + 2 * G * ds
+    K = 4
+    return {
+        "in_proj": _lin(d, d_in_proj), "p_rqt": _rqt(d_in_proj),
+        "conv_wq": _s((K, d_conv_in), I8), "conv_bq": _s((d_conv_in,), I32),
+        "conv_rqt": _rqt(), "conv_lut": _s((256,), I8),
+        "A": _s((H,), F32), "Dv": _s((H,), F32), "dt_bias": _s((H,), F32),
+        "eps_p_f": _s((), F32), "eps_conv_f": _s((), F32),
+        "zp_conv_f": _s((), F32), "norm_g_f": _s((di,), F32),
+        "eps_n_inv": _s((), F32), "out_proj": _lin(di, d),
+    }
+
+
+def _dense_block(c: ArchConfig, max_seq, moe: bool):
+    t = {
+        "norm1": _norm(c.d_model, c.norm, c.norm_bias),
+        "attn": _attn(c, max_seq),
+        "add1": _add(b_vec=c.d_model),
+        "norm2": _norm(c.d_model, c.norm, c.norm_bias),
+        "add2": _add(b_vec=None if moe else c.d_model),
+    }
+    if moe:
+        t["moe"] = _moe(c)
+        if c.shared_expert:
+            t["mlp"] = _mlp(c)
+            t["sh_rqt"] = _rqt(c.d_model)
+    else:
+        t["mlp"] = _mlp(c)
+    return t
+
+
+def _mamba_block(c: ArchConfig):
+    core = _mamba1(c) if c.ssm_kind == "mamba1" else _mamba2(c)
+    return {
+        "norm": _norm(c.d_model, c.norm, False),
+        "core": core,
+        "add": _add(b_vec=c.d_model),
+    }
+
+
+def _shared_block(c: ArchConfig, max_seq):
+    return {
+        "cat_rqt_x": _rqt(), "cat_rqt_x0": _rqt(),
+        "norm": _norm(2 * c.d_model, c.norm, False),
+        "attn": _attn(c, max_seq, d_in=2 * c.d_model),
+        "add": _add(b_vec=c.d_model),
+    }
+
+
+def _stack(tree, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+def deploy_specs(lm: DecoderLM) -> dict:
+    """ShapeDtypeStruct mirror of lm.deploy(...) (meta stripped)."""
+    c = lm.cfg
+    t: Dict[str, Any] = {}
+    if c.input_mode == "tokens":
+        t["embed"] = {"table_q": _s((c.vocab_padded, c.d_model), I8)}
+    segs = []
+    for kind, tpl, n in lm.plan():
+        if kind == "dense":
+            one = _dense_block(c, lm.max_seq, moe=(c.n_experts > 0
+                                                   and c.moe_every == 1))
+        elif kind == "pair":
+            one = {"a": _dense_block(c, lm.max_seq, False),
+                   "b": _dense_block(c, lm.max_seq, True)}
+        elif kind == "mamba":
+            one = _mamba_block(c)
+        elif kind == "hybrid":
+            one = {"m": _stack(_mamba_block(c), c.shared_attn_every),
+                   "sh": _shared_block(c, lm.max_seq)}
+        segs.append(_stack(one, n))
+    t["segments"] = segs
+    t["norm_f"] = _norm(c.d_model, c.norm, c.norm_bias)
+    t["head"] = _lin(c.d_model, c.vocab_padded)
+    return t
+
+
+def float_param_specs(lm: DecoderLM, dtype=jnp.float32) -> dict:
+    """ShapeDtypeStruct mirror of lm.init (train-side dry-run)."""
+    return jax.eval_shape(
+        lambda k: jax.tree.map(lambda x: x.astype(dtype), lm.init(k)),
+        jax.random.PRNGKey(0))
+
+
+def cache_specs(lm: DecoderLM, B: int, max_len: int, rep: Rep = Rep.ID):
+    return jax.eval_shape(lambda: lm.init_caches(B, max_len, rep))

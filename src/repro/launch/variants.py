@@ -1,0 +1,76 @@
+"""Perf-iteration variants (EXPERIMENTS.md §Perf).
+
+A variant is a named set of overrides applied during lowering; the
+hillclimb loop lowers baseline-vs-variant and diffs the roofline terms.
+Kept as a process-global so layer code can consult it without plumbing
+(the dry-run driver sets it from --variant k=v,k=v).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict
+
+_ACTIVE: Dict[str, Any] = {}
+
+DEFAULTS = {
+    # serving: replicate weights across the data axis (weight-stationary)
+    # instead of 2-D FSDP sharding — kills per-token weight all-gathers.
+    "serve_weight_stationary": False,
+    # SSM island compute dtype ("f32" | "bf16")
+    "ssm_island_dtype": "f32",
+    # SSM chunk length override (0 = layers/ssm.CHUNK default)
+    "ssm_chunk": 0,
+    # MoE: group size override (0 = config default)
+    "moe_group": 0,
+    # gradient-accumulation override (0 = MICROBATCH table default)
+    "microbatches": 0,
+    # ZeRO-2 training layout: params replicated across "data" (no per-use
+    # weight all-gathers), Adam moments stay 2-D sharded.  For models
+    # whose params fit replicated (<~8B at bf16/f32 per pod).
+    "train_zero2": False,
+    # decode KV cache layout: "seq" (sequence-sharded) | "batch"
+    "kv_shard": "seq",
+    # decode cache write: "onehot" (sharding-friendly masked rewrite) |
+    # "dus" (dynamic_update_slice; triggers GSPMD involuntary remat on a
+    # sequence-sharded cache)
+    "kv_update": "onehot",
+    # attention probability island: "float" (paper §3.8 fallback) |
+    # "int" (integer-only softmax, core/intsoftmax.py — no float ops
+    # left in attention at all)
+    "attn_softmax": "float",
+}
+
+
+def get(key: str):
+    return _ACTIVE.get(key, DEFAULTS[key])
+
+
+@contextlib.contextmanager
+def use_variants(**kw):
+    global _ACTIVE
+    bad = set(kw) - set(DEFAULTS)
+    if bad:
+        raise KeyError(f"unknown variants: {bad}")
+    prev = dict(_ACTIVE)
+    _ACTIVE.update(kw)
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def parse(spec: str) -> dict:
+    """'a=1,b=bf16' -> typed dict per DEFAULTS."""
+    out = {}
+    if not spec:
+        return out
+    for item in spec.split(","):
+        k, v = item.split("=")
+        ref = DEFAULTS[k]
+        if isinstance(ref, bool):
+            out[k] = v.lower() in ("1", "true", "yes")
+        elif isinstance(ref, int):
+            out[k] = int(v)
+        else:
+            out[k] = v
+    return out

@@ -1,0 +1,179 @@
+"""The Quantization/Activation operator (paper §3.1).
+
+This operator carries the double duty the paper assigns it: (i) the
+nonlinearity, (ii) squashing its input into the (smaller) target quantized
+space Z_y.  Input is either a Linear/Norm int32 accumulator (per-channel
+eps) or an int8 image; output is always an int8 image of Z_y.
+
+ID lowering by activation kind (DESIGN.md §3.6):
+
+  IDENTITY/RELU : pure requantization (Eq. 11).  ReLU is requant with the
+                  output clip floor at the zero level — NEMO's
+                  PACT_IntegerAct exactly.
+  RELU2         : relu -> requant to an int8 intermediate -> exact integer
+                  square (int16 range) -> requant.  (squared-ReLU is a
+                  monotone composition of staircases, so this stays within
+                  the Eq. 8 formalism.)
+  SILU/GELU     : requant to int8 -> 256-entry integer LUT (the explicit
+                  staircase of Eq. 8/9 with enumerated thresholds).
+
+FQ lowering: PACT with learnable clip (pact_act / pact_act_asymm) applied
+*after* the float nonlinearity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.intmath import apply_lut, build_lut
+from repro.core.pact import pact_act, pact_act_asymm
+from repro.core.quantum import fake_quantize, INT8, UINT8
+from repro.core.requant import apply_rqt, make_rqt
+from repro.core.rep import Rep
+from repro.layers.common import ACT_QMAX, ACT_QMIN, ActKind, DeployCtx, act_fn, act_fn_np
+
+
+@dataclasses.dataclass(frozen=True)
+class QAct:
+    kind: ActKind = ActKind.IDENTITY
+    n_bits: int = 8
+    name: str = "act"
+    # symmetric output space (zp=0) — required where the consumer assumes
+    # zero offset (residual stream, norm inputs, RoPE operands).
+    sym: bool = False
+    # widen the calibrated range (e.g. sqrt(2) for RoPE operands, whose
+    # rotation can exceed the per-component max by up to sqrt(2))
+    range_scale: float = 1.0
+
+    # -- FQ quant state --------------------------------------------------
+    def init_qstate(self) -> dict:
+        """Learnable clip parameters (PACT's alpha/beta, paper §2.2)."""
+        if self.kind.zero_lo:
+            return {"beta": jnp.float32(6.0)}
+        return {"alpha": jnp.float32(-6.0), "beta": jnp.float32(6.0)}
+
+    # -- float paths -------------------------------------------------------
+    def apply_fp(self, x, calib=None, scope: str = ""):
+        y = act_fn(self.kind, x)
+        if calib is not None:
+            if self.kind in (ActKind.SILU, ActKind.GELU):
+                calib.observe(f"{scope}{self.name}.pre", x)  # LUT input space
+            calib.observe(f"{scope}{self.name}", y)
+        return y
+
+    def apply_fq(self, qs, x):
+        y = act_fn(self.kind, x)
+        if self.kind.zero_lo:
+            return pact_act(y, qs["beta"], self.n_bits)
+        return pact_act_asymm(y, qs["alpha"], qs["beta"], self.n_bits)
+
+    def apply_qd(self, dstate, x):
+        """QuantizedDeployable: Eq. 10 with frozen calibrated eps."""
+        y = act_fn(self.kind, x)
+        eps = dstate["eps_y"]
+        alpha = dstate["alpha_y"]
+        q = jnp.clip(jnp.floor((y - alpha) / eps), 0, 2 ** self.n_bits - 1)
+        return alpha + q * eps
+
+    # -- transform ---------------------------------------------------------
+    def deploy(
+        self,
+        ctx: DeployCtx,
+        scope: str,
+        eps_in,
+        zp_in: int,
+        acc_bound: float,
+    ) -> Tuple[dict, float, int]:
+        """-> (tables, eps_out, zp_out).
+
+        eps_in may be per-channel (accumulator); output space is always
+        layer-wise int8.
+        """
+        full = f"{scope}{self.name}"
+        if self.kind.zero_lo or self.kind is ActKind.IDENTITY:
+            kind_key = "act" if self.kind.zero_lo else "resid"
+            lo, hi = ctx.range(full, kind_key)
+            lo, hi = lo * self.range_scale, hi * self.range_scale
+            if self.kind.zero_lo:
+                lo = 0.0
+            if self.sym and not self.kind.zero_lo:
+                amax = max(abs(lo), abs(hi), 1e-6)
+                lo, hi = -amax, amax
+            hi = max(hi, lo + 1e-6)
+            eps_y = (hi - lo) / (2 ** self.n_bits - 1)
+            # stored zero-point puts `lo` at ACT_QMIN (0 when symmetric)
+            zp = 0 if (self.sym and not self.kind.zero_lo) \
+                else ACT_QMIN - int(round(lo / eps_y))
+            if self.kind in (ActKind.IDENTITY, ActKind.RELU):
+                rqt = make_rqt(
+                    eps_in, eps_y, zp_out=zp, qmin=ACT_QMIN, qmax=ACT_QMAX,
+                    requant_factor=ctx.factor, acc_bound=acc_bound,
+                )
+                return {"rqt": rqt}, eps_y, zp
+            # RELU2: stage 1 requant to int8 (sqrt-range), exact square,
+            # stage 2 requant.
+            hi_sqrt = np.sqrt(hi)
+            eps_mid = hi_sqrt / (2 ** self.n_bits - 1)
+            rqt1 = make_rqt(
+                eps_in, eps_mid, zp_out=ACT_QMIN, qmin=ACT_QMIN, qmax=ACT_QMAX,
+                requant_factor=ctx.factor, acc_bound=acc_bound,
+            )
+            # square of image in [0, 255] -> [0, 65025]; eps = eps_mid^2
+            rqt2 = make_rqt(
+                eps_mid * eps_mid, eps_y, zp_out=zp, qmin=ACT_QMIN,
+                qmax=ACT_QMAX, requant_factor=ctx.factor,
+                acc_bound=float(255 ** 2),
+            )
+            return {"rqt": rqt1, "rqt2": rqt2}, eps_y, zp
+        # SILU / GELU: requant into a symmetric pre-act int8 space, LUT out.
+        lo_in, hi_in = ctx.range(f"{full}.pre", "attn")
+        amax = max(abs(lo_in), abs(hi_in), 1e-6)
+        eps_pre = 2.0 * amax / (2 ** self.n_bits - 1)
+        rqt = make_rqt(
+            eps_in, eps_pre, zp_out=0, qmin=ACT_QMIN, qmax=ACT_QMAX,
+            requant_factor=ctx.factor, acc_bound=acc_bound,
+        )
+        lo, hi = ctx.range(full, "act_asym")
+        hi = max(hi, lo + 1e-6)
+        eps_y = (hi - lo) / (2 ** self.n_bits - 1)
+        zp = ACT_QMIN - int(round(lo / eps_y))
+        lut = build_lut(
+            lambda v: act_fn_np(self.kind, v), eps_pre, 0, eps_y, zp,
+            qmin=ACT_QMIN, qmax=ACT_QMAX,
+        )
+        return {"rqt": rqt, "lut": lut}, eps_y, zp
+
+    def qd_state(self, ctx: DeployCtx, scope: str) -> dict:
+        full = f"{scope}{self.name}"
+        if self.kind.zero_lo:
+            lo, hi = 0.0, ctx.range(full, "act")[1]
+        else:
+            lo, hi = ctx.range(full, "act_asym" if self.kind in
+                               (ActKind.SILU, ActKind.GELU) else "resid")
+        eps = (max(hi, lo + 1e-6) - lo) / (2 ** self.n_bits - 1)
+        return {"eps_y": np.float32(eps), "alpha_y": np.float32(lo)}
+
+    # -- integer path --------------------------------------------------------
+    def apply_id(self, tables, acc, *, channel_axis: int = -1):
+        if self.kind in (ActKind.IDENTITY, ActKind.RELU):
+            return apply_rqt(acc, tables["rqt"], channel_axis=channel_axis)
+        if self.kind is ActKind.RELU2:
+            s = apply_rqt(acc, tables["rqt"], channel_axis=channel_axis)
+            img = s.astype(jnp.int32) - ACT_QMIN      # [0, 255] after ReLU-floor
+            img = jnp.maximum(img, 0)
+            sq = img * img                            # exact, <= 65025
+            return apply_rqt(sq, tables["rqt2"], channel_axis=channel_axis)
+        s = apply_rqt(acc, tables["rqt"], channel_axis=channel_axis)
+        return apply_lut(s, tables["lut"], qmin=ACT_QMIN)
+
+    def apply(self, state, x, rep, *, channel_axis: int = -1, calib=None, scope=""):
+        if rep is Rep.ID:
+            return self.apply_id(state, x, channel_axis=channel_axis)
+        if rep is Rep.FQ:
+            return self.apply_fq(state, x)
+        if rep is Rep.QD:
+            return self.apply_qd(state, x)
+        return self.apply_fp(x, calib=calib, scope=scope)

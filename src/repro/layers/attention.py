@@ -1,0 +1,362 @@
+"""Grouped-query attention with an integer-only serving path.
+
+ID dataflow (DESIGN.md §3.7 island (a)):
+
+    s_x  --wq/wk/wv (int8 dot)-->  int32 acc
+         --requant (QAct sym)-->   int8 q,k,v images          (zp=0)
+         --integer RoPE-->         int8 q,k                   (eps preserved)
+         --int8 QK^T-->            int32 scores
+         == float island ==        scores * (eps_q*eps_k/sqrt(hd)) + mask
+                                   softmax -> probs in [0,1]
+                                   round(probs * 127)  -> int8 (zp=0, eps=1/127)
+         == island exit ==
+         --int8 P.V-->             int32 acc  (bounded: sum p_img ~ 127)
+         --requant-->              int8 attention output
+         --wo (int8 dot)-->        int32 acc  (consumed by the block's Add)
+
+The probs space deliberately spends the sign bit (eps_p = 1/127, zp=0) so
+the P.V accumulator needs no dynamic zero-point correction — the paper's
+offset-correction economics (Eq. 15) applied to attention.
+
+KV cache: int8 images + static eps in ID; model dtype in FP/FQ.  Decode
+(`pos is not None`) updates the cache at one position and masks by index.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.requant import apply_rqt, make_rqt
+from repro.core.rep import Rep
+from repro.layers.act_quant import QAct
+from repro.layers.common import ACT_QMAX, ACT_QMIN, ActKind, DeployCtx
+from repro.layers.linear import QLinear
+from repro.layers.rope import (
+    apply_rope_fp, apply_rope_int, rope_tables_fp, rope_tables_int,
+)
+
+EPS_P = 1.0 / 127.0  # probability quantum (symmetric int8, zp=0)
+NEG_INF = -1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class QAttention:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_base: float = 10000.0
+    rope_fraction: float = 1.0
+    max_seq: int = 4096
+    name: str = "attn"
+    d_in: int = 0  # input width if != d_model (zamba2 shared block concat)
+
+    @property
+    def group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    def _sub(self):
+        H, K, hd = self.n_heads, self.n_kv_heads, self.head_dim
+        d_in = self.d_in or self.d_model
+        return {
+            "wq": QLinear(d_in, H * hd),
+            "wk": QLinear(d_in, K * hd),
+            "wv": QLinear(d_in, K * hd),
+            "wo": QLinear(H * hd, self.d_model),
+        }
+
+    def init(self, key) -> dict:
+        subs = self._sub()
+        keys = jax.random.split(key, len(subs))
+        return {n: l.init(k) for (n, l), k in zip(subs.items(), keys)}
+
+    # ------------------------------------------------------------------
+    def _shape_qkv(self, q, k, v, B, S):
+        H, K, hd = self.n_heads, self.n_kv_heads, self.head_dim
+        q = q.reshape(B, S, H, hd).transpose(0, 2, 1, 3)   # (B,H,S,hd)
+        k = k.reshape(B, S, K, hd).transpose(0, 2, 1, 3)   # (B,K,S,hd)
+        v = v.reshape(B, S, K, hd).transpose(0, 2, 1, 3)
+        return q, k, v
+
+    def _expand_kv(self, k):
+        """(B, K, S, hd) -> (B, H, S, hd): repeat so the head axis keeps
+        full H divisibility for model-axis sharding (the K,G grouped
+        layout would leave probs unshardable whenever K < mesh model)."""
+        if self.group == 1:
+            return k
+        return jnp.repeat(k, self.group, axis=1)
+
+    # -- float path ------------------------------------------------------
+    def apply_float(self, p, x, rep, *, cache=None, pos=None,
+                    calib=None, scope: str = ""):
+        """FP/FQ/QD forward.  x: (B, S, d) float.  Returns (y, cache)."""
+        from repro.sharding.hints import hint
+
+        subs = self._sub()
+        B, S, _ = x.shape
+        H, K, hd = self.n_heads, self.n_kv_heads, self.head_dim
+        q = subs["wq"].apply(p["wq"], x, rep)
+        k = subs["wk"].apply(p["wk"], x, rep)
+        v = subs["wv"].apply(p["wv"], x, rep)
+        if calib is not None:
+            calib.observe(f"{scope}{self.name}.q", q)
+            calib.observe(f"{scope}{self.name}.k", k)
+            calib.observe(f"{scope}{self.name}.v", v)
+        q, k, v = self._shape_qkv(q, k, v, B, S)
+        if S > 1:  # decode: q stays unhinted so GSPMD follows the
+            q = hint(q, "act_bhsd")  # sequence-sharded cache layout
+        rot, cos, sin = rope_tables_fp(hd, self.max_seq, self.rope_base,
+                                       self.rope_fraction)
+        positions = (jnp.arange(S) if pos is None
+                     else pos + jnp.arange(S))
+        q = apply_rope_fp(q, cos, sin, positions, rot)
+        k = apply_rope_fp(k, cos, sin, positions, rot)
+
+        if cache is not None:
+            k_all = _cache_write(cache["k"], k.astype(cache["k"].dtype), pos)
+            v_all = _cache_write(cache["v"], v.astype(cache["v"].dtype), pos)
+            cache = {"k": k_all, "v": v_all}
+            k, v = k_all.astype(x.dtype), v_all.astype(x.dtype)
+        T = k.shape[2]
+
+        # decode (S==1): keep the cache's sequence sharding — hinting to
+        # head-sharded would all-gather the whole KV cache every token
+        kh = self._expand_kv(k) if S == 1 else hint(
+            self._expand_kv(k), "act_bhsd")
+        vh = self._expand_kv(v) if S == 1 else hint(
+            self._expand_kv(v), "act_bhsd")
+        scores = jnp.einsum("bhsd,bhtd->bhst", q, kh,
+                            preferred_element_type=jnp.float32)
+        scores = scores / np.sqrt(hd)
+        scores = scores + _mask(S, T, pos)
+        probs = hint(jax.nn.softmax(scores, axis=-1),
+                     "probs_dec" if S == 1 else "probs")
+        if calib is not None:
+            calib.observe(f"{scope}{self.name}.probs", probs)
+        ctx_ = jnp.einsum("bhst,bhtd->bhsd", probs.astype(x.dtype), vh)
+        ctx_ = ctx_.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+        if calib is not None:
+            calib.observe(f"{scope}{self.name}.ctx", ctx_)
+        y = subs["wo"].apply(p["wo"], ctx_, rep)
+        return y, cache
+
+    # -- calibration helpers ----------------------------------------------
+    def _qkv_acts(self):
+        rt2 = float(np.sqrt(2.0))  # RoPE rotation headroom
+        return {
+            "q": QAct(ActKind.IDENTITY, sym=True, range_scale=rt2,
+                      name=f"{self.name}.q"),
+            "k": QAct(ActKind.IDENTITY, sym=True, range_scale=rt2,
+                      name=f"{self.name}.k"),
+            "v": QAct(ActKind.IDENTITY, sym=True, name=f"{self.name}.v"),
+            "ctx": QAct(ActKind.IDENTITY, sym=True, name=f"{self.name}.ctx"),
+        }
+
+    # -- transform ---------------------------------------------------------
+    def deploy(self, ctx: DeployCtx, scope: str, p_np: dict, eps_x: float,
+               zp_x: int) -> Tuple[dict, np.ndarray]:
+        """-> (tables, eps_acc_out per-channel of wo accumulator)."""
+        subs = self._sub()
+        acts = self._qkv_acts()
+        t: dict = {}
+        eps = {}
+        for nm in ("wq", "wk", "wv"):
+            ip, eps_acc = subs[nm].deploy(p_np[nm], eps_x, zp_x)
+            t[nm] = ip
+            short = nm[1]
+            a_t, a_eps, a_zp = acts[short].deploy(
+                ctx, scope, eps_acc, 0, subs[nm].acc_bound())
+            assert a_zp == 0
+            t[f"{short}_rqt"] = a_t["rqt"]
+            eps[short] = a_eps
+        # island scale: int32 scores * eps_q*eps_k/sqrt(hd) -> f32 logits
+        eps_s = eps["q"] * eps["k"] / np.sqrt(self.head_dim)
+        t["score_scale"] = np.float32(eps_s)
+        # integer-softmax tables (attn_softmax=int variant; all-int32)
+        from repro.core.intsoftmax import make_int_softmax_tables
+
+        t["sm_tabs"] = make_int_softmax_tables(float(eps_s))
+        # P.V accumulator -> int8 ctx image
+        ctx_t, ctx_eps, ctx_zp = acts["ctx"].deploy(
+            ctx, scope, EPS_P * eps["v"], 0,
+            acc_bound=260.0 * 127.0,  # sum p_img <~ 127 + S/2 quanta slack
+        )
+        assert ctx_zp == 0
+        t["ctx_rqt"] = ctx_t["rqt"]
+        ip, eps_acc_o = subs["wo"].deploy(p_np["wo"], ctx_eps, 0)
+        t["wo"] = ip
+        return t, eps_acc_o
+
+    # -- integer path -------------------------------------------------------
+    BLOCKWISE_THRESHOLD = 4096  # S_q above this -> streaming attention
+
+    def apply_id(self, t, s_x, *, cache=None, pos=None):
+        """s_x: (B, S, d) int8 (zp=0).  Returns (int32 wo-accumulator, cache)."""
+        from repro.sharding.hints import hint
+
+        subs = self._sub()
+        B, S, _ = s_x.shape
+        H, K, hd = self.n_heads, self.n_kv_heads, self.head_dim
+        q = subs["wq"].apply_id(t["wq"], s_x)
+        k = subs["wk"].apply_id(t["wk"], s_x)
+        v = subs["wv"].apply_id(t["wv"], s_x)
+        q = apply_rqt(q, t["q_rqt"])
+        k = apply_rqt(k, t["k_rqt"])
+        v = apply_rqt(v, t["v_rqt"])
+        q, k, v = self._shape_qkv(q, k, v, B, S)
+        if S > 1:
+            q = hint(q, "act_bhsd")
+        rot, cos_q, sin_q = rope_tables_int(hd, self.max_seq, self.rope_base,
+                                            self.rope_fraction)
+        positions = (jnp.arange(S) if pos is None else pos + jnp.arange(S))
+        q = apply_rope_int(q, cos_q, sin_q, positions, rot)
+        k = apply_rope_int(k, cos_q, sin_q, positions, rot)
+
+        if cache is not None:
+            k_all = _cache_write(cache["k"], k, pos)
+            v_all = _cache_write(cache["v"], v, pos)
+            cache = {"k": k_all, "v": v_all}
+            k, v = k_all, v_all
+        T = k.shape[2]
+
+        kh = self._expand_kv(k) if S == 1 else hint(
+            self._expand_kv(k), "act_bhsd")
+        vh = self._expand_kv(v) if S == 1 else hint(
+            self._expand_kv(v), "act_bhsd")
+        if S > self.BLOCKWISE_THRESHOLD:
+            s_ctx = self._blockwise_id(t, q, kh, vh, pos)
+        else:
+            from repro.launch import variants
+
+            scores = hint(
+                jnp.einsum("bhsd,bhtd->bhst", q, kh,
+                           preferred_element_type=jnp.int32),
+                "probs_dec" if S == 1 else "probs")
+            if variants.get("attn_softmax") == "int" and "sm_tabs" in t:
+                # integer-only softmax: NO float island at all
+                from repro.core.intsoftmax import int_softmax
+
+                bmask = _bool_mask(S, T, pos)
+                s_p = hint(int_softmax(scores, t["sm_tabs"], mask=bmask),
+                           "probs_dec" if S == 1 else "probs")
+            else:
+                # ---- float island (paper §3.8: exponentials) ----
+                logits = scores.astype(jnp.float32) * t["score_scale"]
+                logits = logits + _mask(S, T, pos)
+                probs = hint(jax.nn.softmax(logits, axis=-1),
+                             "probs_dec" if S == 1 else "probs")
+                s_p = jnp.round(probs * 127.0).astype(jnp.int8)
+            # ---- island exit ----
+            acc = jnp.einsum("bhst,bhtd->bhsd", s_p, vh,
+                             preferred_element_type=jnp.int32)
+            s_ctx = apply_rqt(acc, t["ctx_rqt"])
+        s_ctx = s_ctx.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+        return subs["wo"].apply_id(t["wo"], s_ctx), cache
+
+    def _blockwise_id(self, t, q, kh, vh, pos):
+        """Streaming (flash-style) ID attention: lax.scan over KV blocks,
+        per-block int8 probability images — the jnp twin of the
+        quant_attention Pallas kernel (kernels/ref.py algorithm).  Keeps
+        prefill memory O(S * block) instead of O(S^2)."""
+        B, H, S, hd = q.shape
+        T = kh.shape[2]
+        blk = self.BLOCKWISE_THRESHOLD // 2
+        n_blk = T // blk
+        assert T % blk == 0, (T, blk)
+        q32 = q.astype(jnp.int32)
+        k_blocks = kh.reshape(B, H, n_blk, blk, hd).transpose(2, 0, 1, 3, 4)
+        v_blocks = vh.reshape(B, H, n_blk, blk, hd).transpose(2, 0, 1, 3, 4)
+        q_pos = (jnp.arange(S) if pos is None else pos + jnp.arange(S))
+
+        def body(carry, xs):
+            m_run, l_run, acc = carry
+            j, kb, vb = xs
+            s = jnp.einsum("bhsd,bhtd->bhst", q32, kb.astype(jnp.int32),
+                           preferred_element_type=jnp.int32)
+            logits = s.astype(jnp.float32) * t["score_scale"]
+            k_pos = j * blk + jnp.arange(blk)
+            mask = k_pos[None, :] <= q_pos[:, None]
+            logits = jnp.where(mask, logits, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            qp = jnp.round(p * 127.0).astype(jnp.int8)
+            pv = jnp.einsum("bhst,bhtd->bhsd", qp, vb,
+                            preferred_element_type=jnp.int32)
+            corr = jnp.exp(m_run - m_new)
+            acc = acc * corr[..., None] + pv.astype(jnp.float32) / 127.0
+            l_new = l_run * corr + jnp.sum(qp.astype(jnp.float32), -1) / 127.0
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, S), jnp.float32)
+        a0 = jnp.zeros((B, H, S, hd), jnp.float32)
+        (m_f, l_f, acc_f), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.arange(n_blk), k_blocks, v_blocks))
+        ctx = acc_f / jnp.maximum(l_f, 1e-9)[..., None]
+        # quantize into the ctx image space (rqt on the scaled int value:
+        # ctx real units = eps_p * eps_v * acc; here acc_f is already
+        # p-normalized so ctx = sum(p*v_img): image units of eps_v. The
+        # ctx_rqt tables map eps_p*eps_v accumulators; multiply back 127.
+        acc_int = jnp.round(ctx * 127.0).astype(jnp.int32)
+        return apply_rqt(acc_int, t["ctx_rqt"])
+
+    # ------------------------------------------------------------------
+    def init_cache(self, B: int, max_len: int, rep: Rep, dtype=jnp.bfloat16):
+        K, hd = self.n_kv_heads, self.head_dim
+        dt = jnp.int8 if rep is Rep.ID else dtype
+        return {
+            "k": jnp.zeros((B, K, max_len, hd), dt),
+            "v": jnp.zeros((B, K, max_len, hd), dt),
+        }
+
+    def axes(self) -> dict:
+        return {
+            "wq": {"w": ("embed", "heads")},
+            "wk": {"w": ("embed", "heads")},
+            "wv": {"w": ("embed", "heads")},
+            "wo": {"w": ("heads", "embed")},
+        }
+
+
+def _cache_write(cache, new, pos):
+    """Write `new` (B,K,S,hd) at seq offset `pos` into `cache` (B,K,T,hd).
+
+    Single-token decode uses a one-hot masked rewrite: elementwise along
+    the (sequence-sharded) cache axis, so GSPMD never reshards the cache
+    (dynamic_update_slice at a traced offset forces an involuntary full
+    rematerialization — §Perf hillclimb A, iteration 2).  Multi-token
+    writes (prefill) keep dynamic_update_slice (offset is the static 0).
+    """
+    from repro.launch import variants
+
+    S, T = new.shape[2], cache.shape[2]
+    if S == T:
+        return new
+    if S == 1 and variants.get("kv_update") == "onehot":
+        oh = (jnp.arange(T) == pos).astype(cache.dtype)[None, None, :, None]
+        return cache * (1 - oh) + new.astype(cache.dtype) * oh
+    return jax.lax.dynamic_update_slice_in_dim(cache, new, pos, axis=2)
+
+
+def _bool_mask(S: int, T: int, pos):
+    """Causal keep-mask as booleans (integer-softmax island)."""
+    i = (jnp.arange(S) if pos is None else pos + jnp.arange(S))[:, None]
+    j = jnp.arange(T)[None, :]
+    return j <= i
+
+
+def _mask(S: int, T: int, pos):
+    """Causal (prefill) or length (decode) mask, f32 (island-side)."""
+    if pos is None and S == T:
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(T)[None, :]
+        return jnp.where(j <= i, 0.0, NEG_INF).astype(jnp.float32)
+    # decode: S new tokens at offset pos into a T-slot cache
+    i = pos + jnp.arange(S)[:, None]
+    j = jnp.arange(T)[None, :]
+    return jnp.where(j <= i, 0.0, NEG_INF).astype(jnp.float32)

@@ -1,0 +1,118 @@
+"""Shared layer scaffolding: activation kinds, observation naming, defaults.
+
+Conventions used across every layer (DESIGN.md §3):
+
+  * Stored activation images are int8 with a per-space zero point; the
+    *residual stream* and all norm inputs use symmetric spaces (zp=0).
+  * Weights are int8, symmetric, per-out-channel quanta.
+  * Linear accumulators are int32 with zero offset; the static bias
+    absorbs both the real bias and the activation zero-point correction.
+  * eps values exist only at transform time (host, float64) — the only
+    floats crossing into ID runtime are the §3.8 island scales.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ACT_QMIN, ACT_QMAX = -128, 127
+ACC_DTYPE = jnp.int32
+
+
+class ActKind(enum.Enum):
+    IDENTITY = "identity"
+    RELU = "relu"
+    RELU2 = "relu2"      # squared ReLU (nemotron-4)
+    SILU = "silu"
+    GELU = "gelu"
+
+    @property
+    def zero_lo(self) -> bool:
+        """Activations clipped at 0 from below (paper's canonical [0, beta))."""
+        return self in (ActKind.RELU, ActKind.RELU2)
+
+
+def act_fn(kind: ActKind, x):
+    """Full-precision activation (reference for FQ/QD and LUT building)."""
+    if kind is ActKind.IDENTITY:
+        return x
+    if kind is ActKind.RELU:
+        return jnp.maximum(x, 0.0)
+    if kind is ActKind.RELU2:
+        r = jnp.maximum(x, 0.0)
+        return r * r
+    if kind is ActKind.SILU:
+        return x * (1.0 / (1.0 + jnp.exp(-x)))
+    if kind is ActKind.GELU:
+        # tanh approximation (matches jax.nn.gelu(approximate=True));
+        # python-float constant keeps weak typing (no bf16->f32 promotion)
+        c = float(np.sqrt(2.0 / np.pi))
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x ** 3)))
+    raise ValueError(kind)
+
+
+def act_fn_np(kind: ActKind, x: np.ndarray) -> np.ndarray:
+    """numpy twin of act_fn for transform-time LUT construction."""
+    if kind is ActKind.IDENTITY:
+        return x
+    if kind is ActKind.RELU:
+        return np.maximum(x, 0.0)
+    if kind is ActKind.RELU2:
+        r = np.maximum(x, 0.0)
+        return r * r
+    if kind is ActKind.SILU:
+        return x / (1.0 + np.exp(-x))
+    if kind is ActKind.GELU:
+        c = np.sqrt(2.0 / np.pi)
+        return 0.5 * x * (1.0 + np.tanh(c * (x + 0.044715 * x ** 3)))
+    raise ValueError(kind)
+
+
+# Default calibration ranges per site type, used when a full-size model is
+# deployed without a calibration pass (dry-run / roofline lowering only —
+# values are placeholders with realistic dynamic ranges).
+DEFAULT_RANGES = {
+    "resid": (-8.0, 8.0),
+    "norm": (-8.0, 8.0),
+    "act": (0.0, 8.0),
+    "act_asym": (-1.0, 8.0),
+    "attn": (-8.0, 8.0),
+    "logits": (-32.0, 32.0),
+    "ssm": (-16.0, 16.0),
+}
+
+
+@dataclasses.dataclass
+class DeployCtx:
+    """Threaded through layer `deploy` walks (host-side transform state).
+
+    calib:   Calibrator or None (fall back to DEFAULT_RANGES)
+    factor:  requantization_factor (1/eta, Eq. 14)
+    n_bits:  activation/weight bit width (8 = the deployment model default)
+    """
+
+    calib: Optional[object] = None
+    factor: int = 256
+    n_bits: int = 8
+
+    def range(self, name: str, kind: str = "resid"):
+        if self.calib is not None and name in getattr(self.calib, "hi", {}):
+            return self.calib.range(name)
+        return DEFAULT_RANGES.get(kind, DEFAULT_RANGES["resid"])
+
+    def sym_eps(self, name: str, kind: str = "resid") -> float:
+        """Quantum of a *symmetric* int8 space covering the observed range."""
+        lo, hi = self.range(name, kind)
+        amax = max(abs(lo), abs(hi), 1e-6)
+        return 2.0 * amax / (2 ** self.n_bits - 1)
+
+
+def stack_trees(trees):
+    """Stack a list of per-layer (numpy) pytrees along a new leading axis
+    — the transform-time dual of lax.scan over stacked params."""
+    return jax.tree.map(lambda *xs: np.stack(xs, axis=0), *trees)

@@ -1,0 +1,178 @@
+"""2-D convolution + pooling under NEMO quantization (the paper's own
+operator set, §3.3-§3.6).  NHWC layout; weights HWIO.
+
+The ID path mirrors QLinear: int8 conv -> int32 accumulator (Eq. 16 with
+the reduction running over the receptive field), static bias with
+zero-point correction.  BN handling offers the paper's full menu:
+
+  * fold   (Eq. 18)  : transform-time, BN disappears into the conv;
+  * intbn  (Eq. 22)  : integer BN on the accumulator, then requant/act;
+  * thresh (Eq. 19-20): BN + quant/act absorbed into integer thresholds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bn import (
+    IntegerBNParams, apply_integer_bn, apply_thresholds, bn_apply_float,
+    fold_bn, make_bn_act_thresholds, make_integer_bn,
+)
+from repro.core.intmath import avgpool_requant_params, int_avgpool_combine
+from repro.core.pact import default_weight_beta, pact_weight
+from repro.core.requant import apply_rqt, make_rqt
+from repro.core.rep import Rep
+from repro.layers.common import ACT_QMAX, ACT_QMIN, DeployCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class QConv2d:
+    c_in: int
+    c_out: int
+    kernel: int = 3
+    stride: int = 1
+    padding: str = "SAME"
+    use_bias: bool = False
+    n_bits_w: int = 8
+
+    def init(self, key) -> dict:
+        k1, _ = jax.random.split(key)
+        fan_in = self.kernel * self.kernel * self.c_in
+        p = {"w": jax.random.normal(
+            k1, (self.kernel, self.kernel, self.c_in, self.c_out),
+            jnp.float32) / np.sqrt(fan_in)}
+        if self.use_bias:
+            p["b"] = jnp.zeros((self.c_out,), jnp.float32)
+        return p
+
+    def _conv(self, x, w, prefer=None):
+        return jax.lax.conv_general_dilated(
+            x, w, (self.stride, self.stride), self.padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            preferred_element_type=prefer)
+
+    def apply_fp(self, p, x):
+        y = self._conv(x, p["w"].astype(x.dtype))
+        if self.use_bias:
+            y = y + p["b"]
+        return y
+
+    def apply_fq(self, p, x):
+        beta_w = default_weight_beta(p["w"], channel_axis=-1)
+        w_hat = pact_weight(p["w"], beta_w, self.n_bits_w, -1)
+        y = self._conv(x, w_hat.astype(x.dtype))
+        if self.use_bias:
+            y = y + p["b"]
+        return y
+
+    def deploy(self, p_np: dict, eps_x: float, zp_x: int) -> Tuple[dict, np.ndarray]:
+        w = np.asarray(p_np["w"], np.float64)
+        beta = np.maximum(np.abs(w).reshape(-1, self.c_out).max(axis=0), 1e-8)
+        eps_w = 2.0 * beta / (2 ** self.n_bits_w - 1)
+        q_w = np.clip(np.floor(w / eps_w), -(2 ** (self.n_bits_w - 1)),
+                      2 ** (self.n_bits_w - 1) - 1).astype(np.int8)
+        eps_acc = eps_w * float(eps_x)
+        colsum = q_w.astype(np.int64).reshape(-1, self.c_out).sum(axis=0)
+        b_eff = -int(zp_x) * colsum
+        if self.use_bias:
+            b_eff = b_eff + np.round(
+                np.asarray(p_np["b"], np.float64) / eps_acc).astype(np.int64)
+        # zp kept for SAME padding: stored-domain pad must be the
+        # zero-point (stored 0 is NOT real 0 when zp != 0).
+        return {"w_q": q_w, "b_q": b_eff.astype(np.int32),
+                "zp_in": np.int32(zp_x)}, eps_acc
+
+    def acc_bound(self) -> float:
+        return min(self.kernel * self.kernel * self.c_in * 127.0 * 127.0,
+                   2.0 ** 30)
+
+    def apply_id(self, ip, s_x):
+        zp = int(np.asarray(ip["zp_in"]))  # static at transform time
+        if self.padding == "SAME" and zp != 0:
+            # pad with the input zero-point so the pad ring decodes to
+            # real 0 (stored 0 is real -zp*eps, NOT 0)
+            if self.stride != 1 or self.kernel % 2 != 1:
+                raise NotImplementedError("zp-pad needs stride 1, odd k")
+            pd = (self.kernel - 1) // 2
+            s_pad = jnp.pad(s_x, ((0, 0), (pd, pd), (pd, pd), (0, 0)),
+                            constant_values=zp)
+            conv = dataclasses.replace(self, padding="VALID")
+            acc = conv._conv(s_pad, ip["w_q"], prefer=jnp.int32)
+        else:
+            acc = self._conv(s_x, ip["w_q"], prefer=jnp.int32)
+        return acc + ip["b_q"].astype(jnp.int32)
+
+    def apply(self, p, x, rep):
+        if rep is Rep.ID:
+            return self.apply_id(p, x)
+        if rep is Rep.FQ:
+            return self.apply_fq(p, x)
+        return self.apply_fp(p, x)
+
+
+@dataclasses.dataclass(frozen=True)
+class QBatchNorm2d:
+    """BatchNorm with the paper's three deployment strategies."""
+
+    c: int
+    eps: float = 1e-5
+
+    def init(self, key) -> dict:
+        return {
+            "gamma": jnp.ones((self.c,), jnp.float32),
+            "beta": jnp.zeros((self.c,), jnp.float32),
+            "mu": jnp.zeros((self.c,), jnp.float32),
+            "sigma": jnp.ones((self.c,), jnp.float32),
+        }
+
+    def apply_fp(self, p, x):
+        return bn_apply_float(x, p["gamma"], p["beta"], p["mu"], p["sigma"])
+
+    def make_integer(self, p_np, eps_phi, acc_bound) -> IntegerBNParams:
+        return make_integer_bn(p_np["gamma"], p_np["beta"], p_np["mu"],
+                               p_np["sigma"], eps_phi, acc_bound=acc_bound)
+
+    def make_thresholds(self, p_np, eps_phi, eps_y, n_levels):
+        return make_bn_act_thresholds(p_np["gamma"], p_np["beta"],
+                                      p_np["mu"], p_np["sigma"],
+                                      eps_phi, eps_y, n_levels)
+
+
+@dataclasses.dataclass(frozen=True)
+class QAvgPool2d:
+    """Integer average pooling (Eq. 25)."""
+
+    k: int = 2
+
+    def apply_fp(self, x):
+        B, H, W, C = x.shape
+        x = x.reshape(B, H // self.k, self.k, W // self.k, self.k, C)
+        return jnp.mean(x, axis=(2, 4))
+
+    def apply_id(self, s_x, d: int = 15):
+        m, dd = avgpool_requant_params(self.k * self.k, d)
+        B, H, W, C = s_x.shape
+        acc = s_x.astype(jnp.int32).reshape(
+            B, H // self.k, self.k, W // self.k, self.k, C).sum(axis=(2, 4))
+        out = int_avgpool_combine(acc, m, dd)
+        return jnp.clip(out, ACT_QMIN, ACT_QMAX).astype(jnp.int8)
+
+    def apply(self, x, rep):
+        return self.apply_id(x) if rep is Rep.ID else self.apply_fp(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class QMaxPool2d:
+    """Max pooling — untouched by quantization (paper §3.6: Q preserves
+    relative ordering), so FP and ID share one implementation."""
+
+    k: int = 2
+
+    def apply(self, x, rep=None):
+        B, H, W, C = x.shape
+        x = x.reshape(B, H // self.k, self.k, W // self.k, self.k, C)
+        return jnp.max(x, axis=(2, 4))

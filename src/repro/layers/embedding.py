@@ -1,0 +1,69 @@
+"""Token embedding + LM head under quantization.
+
+Embedding lookup commutes with quantization (it is a gather), so in ID the
+table itself is the int8 integer image and the lookup output *is* the
+first activation image (symmetric, zp=0, layer-wise eps).
+
+The LM head is a QLinear whose int32 accumulator is the quantized logits
+tensor; it stays int32 (its quantum eps_head is reported to the sampler —
+argmax needs no dequantization at all, which keeps greedy decoding
+integer-only end to end).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pact import default_weight_beta, pact_weight
+from repro.core.rep import Rep
+from repro.layers.common import DeployCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class QEmbed:
+    vocab: int
+    d: int
+    name: str = "embed"
+
+    def init(self, key) -> dict:
+        return {"table": jax.random.normal(key, (self.vocab, self.d),
+                                           jnp.float32) * 0.02}
+
+    def apply_fp(self, p, tok, calib=None, scope: str = ""):
+        y = jnp.take(p["table"], tok, axis=0)
+        if calib is not None:
+            calib.observe(f"{scope}{self.name}", y)
+        return y
+
+    def apply_fq(self, p, tok):
+        # embeddings are weights of a Linear (one-hot matmul): restrict grid
+        beta = default_weight_beta(p["table"], channel_axis=-1)
+        t_hat = pact_weight(p["table"], beta, 8, -1)
+        return jnp.take(t_hat, tok, axis=0)
+
+    def deploy(self, ctx: DeployCtx, p_np: dict) -> Tuple[dict, float, int]:
+        t = np.asarray(p_np["table"], np.float64)
+        amax = max(float(np.max(np.abs(t))), 1e-8)
+        eps = 2.0 * amax / 255.0
+        q = np.clip(np.floor(t / eps), -128, 127).astype(np.int8)
+        return {"table_q": q}, eps, 0
+
+    def apply_id(self, ip, tok):
+        return jnp.take(ip["table_q"], tok, axis=0)
+
+    def apply(self, p, tok, rep, *, calib=None, scope=""):
+        if rep is Rep.ID:
+            return self.apply_id(p, tok)
+        if rep is Rep.FQ:
+            return self.apply_fq(p, tok)
+        return self.apply_fp(p, tok, calib=calib, scope=scope)
+
+    def axes(self) -> dict:
+        return {"table": ("vocab", "embed")}
+
+    def axes_id(self) -> dict:
+        return {"table_q": ("vocab", "embed")}

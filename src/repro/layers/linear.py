@@ -1,0 +1,151 @@
+"""Quantizable Linear operator (paper §1.1, §3.3).
+
+Forward paths:
+  FP : x @ w (+ b)
+  FQ : x @ pact_weight(w) (+ b)           -- weights restricted to the grid
+  QD : x_hat @ w_hat (+ b)                -- hardened weights, real values
+  ID : dot_general(int8, int8) -> int32 accumulator + static int32 bias
+       (Eq. 15-17; eps_phi = eps_w * eps_x per out-channel)
+
+The ID path returns the *accumulator* — the following operator (a
+Quantization/Activation, Norm, or Add) owns the requantization, exactly as
+in the paper where the quantization function lives in the activation.
+
+Offset handling (DESIGN.md §3.3): activations carry a zero-point; the
+correction  -zp_x * sum_k Q_w[k, c]  is static and folded into the int32
+bias at transform time (the TPU-friendly dual of the paper's Eq. 15 first
+term).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pact import default_weight_beta, pact_weight
+from repro.core.quantum import INT8
+from repro.layers.common import ACC_DTYPE, DeployCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class QLinear:
+    d_in: int
+    d_out: int
+    use_bias: bool = False
+    n_bits_w: int = 8
+    # initializer scale; 'fan_in' gives 1/sqrt(d_in)
+    init_scale: float = 1.0
+    # per-out-channel weight quanta (paper footnote a).  The LM head uses
+    # per-tensor (False) so int32 logits are comparable across vocab and
+    # greedy decoding stays integer-only.
+    per_channel: bool = True
+
+    # -- init ----------------------------------------------------------
+    def init(self, key) -> dict:
+        wkey, bkey = jax.random.split(key)
+        std = self.init_scale / np.sqrt(self.d_in)
+        p = {"w": jax.random.normal(wkey, (self.d_in, self.d_out), jnp.float32) * std}
+        if self.use_bias:
+            p["b"] = jnp.zeros((self.d_out,), jnp.float32)
+        return p
+
+    # -- float paths -----------------------------------------------------
+    def apply_fp(self, p, x):
+        y = x @ p["w"].astype(x.dtype)
+        if self.use_bias:
+            y = y + p["b"].astype(x.dtype)
+        return y
+
+    def apply_fq(self, p, x):
+        beta_w = default_weight_beta(p["w"], channel_axis=-1)
+        w_hat = pact_weight(p["w"], beta_w, self.n_bits_w, -1)
+        y = x @ w_hat.astype(x.dtype)
+        if self.use_bias:
+            y = y + p["b"].astype(x.dtype)
+        return y
+
+    # -- transform -------------------------------------------------------
+    def deploy(self, p_np: dict, eps_x: float, zp_x: int) -> Tuple[dict, np.ndarray]:
+        """-> (int params, eps_acc per out-channel).
+
+        eps_acc[c] = eps_w[c] * eps_x ; accumulator zero-point is 0.
+        """
+        w = np.asarray(p_np["w"], np.float64)
+        if self.per_channel:
+            beta = np.maximum(np.max(np.abs(w), axis=0), 1e-8)
+        else:
+            beta = np.broadcast_to(
+                np.maximum(np.max(np.abs(w)), 1e-8), (self.d_out,)).copy()
+        eps_w = 2.0 * beta / (2 ** self.n_bits_w - 1)
+        # floor, matching pact_weight exactly (FQ->ID bit-consistency)
+        q_w = np.clip(np.floor(w / eps_w[None, :]),
+                      -(2 ** (self.n_bits_w - 1)),
+                      2 ** (self.n_bits_w - 1) - 1).astype(np.int8)
+        eps_acc = eps_w * float(eps_x)
+        # static bias: real bias rescaled + zero-point correction
+        colsum = q_w.astype(np.int64).sum(axis=0)
+        b_eff = -int(zp_x) * colsum
+        if self.use_bias:
+            b_eff = b_eff + np.round(
+                np.asarray(p_np["b"], np.float64) / eps_acc
+            ).astype(np.int64)
+        if np.any(np.abs(b_eff) >= 2 ** 31):
+            raise ValueError("integer bias overflows int32")
+        return (
+            {"w_q": q_w, "b_q": b_eff.astype(np.int32)},
+            eps_acc,
+        )
+
+    def acc_bound(self) -> float:
+        """Static worst-case |accumulator| (used for requant scheduling).
+
+        The calibrated-range contract (DESIGN.md): genuine activations are
+        bounded by their clip ranges, so d_in * qmax_w * E|x| is loose; we
+        use the standard sqrt-scaled bound capped at int32 headroom.
+        """
+        worst = float(self.d_in) * 127.0 * 127.0
+        return min(worst, 2.0 ** 30)
+
+    # -- integer path ------------------------------------------------------
+    def apply_id(self, ip, s_x):
+        """s_x int8 -> int32 accumulator (Eq. 16 + folded bias)."""
+        acc = jax.lax.dot_general(
+            s_x, ip["w_q"],
+            (((s_x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=ACC_DTYPE,
+        )
+        return acc + ip["b_q"].astype(ACC_DTYPE)
+
+    def apply(self, p, x, rep):
+        from repro.core.rep import Rep
+
+        if rep is Rep.ID:
+            return self.apply_id(p, x)
+        if rep is Rep.FQ:
+            return self.apply_fq(p, x)
+        return self.apply_fp(p, x)  # FP and QD (weights pre-hardened)
+
+    # -- sharding ----------------------------------------------------------
+    def axes(self, in_axis: Optional[str], out_axis: Optional[str]) -> dict:
+        a = {"w": (in_axis, out_axis)}
+        if self.use_bias:
+            a["b"] = (out_axis,)
+        return a
+
+    def axes_id(self, in_axis, out_axis) -> dict:
+        return {"w_q": (in_axis, out_axis), "b_q": (out_axis,)}
+
+
+def harden_weights_np(p_np: dict, n_bits: int = 8) -> dict:
+    """FQ -> QD: replace w by its quantized version (net.harden_weights())."""
+    w = np.asarray(p_np["w"], np.float64)
+    beta = np.maximum(np.max(np.abs(w), axis=0), 1e-8)
+    eps_w = 2.0 * beta / (2 ** n_bits - 1)
+    q = np.clip(np.floor(w / eps_w[None, :]), -(2 ** (n_bits - 1)),
+                2 ** (n_bits - 1) - 1)
+    out = dict(p_np)
+    out["w"] = (q * eps_w[None, :]).astype(np.float32)
+    return out

@@ -1,0 +1,152 @@
+"""Feed-forward blocks: gated (SwiGLU) and plain (GELU / squared-ReLU).
+
+Gated ID dataflow:
+    s_x --wg--> acc --requant+LUT silu--> s_g  (asym int8)
+        --wu--> acc --requant (sym)----> s_u
+    prod = (s_g - zp_g) * s_u            int32, <= 255*127 exact
+        --requant (sym)--> s_h --wd--> int32 acc (block's Add requantizes)
+
+The elementwise product of two int8 images is exact in int32 with quantum
+eps_g*eps_u — multiplicativity of quanta (paper Eq. 15 applied pointwise).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.requant import apply_rqt, make_rqt
+from repro.core.rep import Rep
+from repro.layers.act_quant import QAct
+from repro.layers.common import ACT_QMIN, ActKind, DeployCtx, act_fn
+from repro.layers.linear import QLinear
+
+
+@dataclasses.dataclass(frozen=True)
+class QMLP:
+    d_model: int
+    d_ff: int
+    act: ActKind = ActKind.SILU
+    gated: bool = True
+    name: str = "mlp"
+
+    def _sub(self):
+        subs = {
+            "wu": QLinear(self.d_model, self.d_ff),
+            "wd": QLinear(self.d_ff, self.d_model),
+        }
+        if self.gated:
+            subs["wg"] = QLinear(self.d_model, self.d_ff)
+        return subs
+
+    def init(self, key) -> dict:
+        subs = self._sub()
+        keys = jax.random.split(key, len(subs))
+        return {n: l.init(k) for (n, l), k in zip(subs.items(), keys)}
+
+    def init_qstate(self) -> dict:
+        """FQ learnable clips for the nonlinear activation (paper §2.2)."""
+        if self.act.zero_lo:
+            return {"beta": jnp.float32(6.0)}
+        return {"alpha": jnp.float32(-1.0), "beta": jnp.float32(6.0)}
+
+    # -- float -------------------------------------------------------------
+    def apply_float(self, p, x, rep, *, qs=None, calib=None, scope: str = ""):
+        from repro.core.pact import pact_act, pact_act_asymm
+
+        subs = self._sub()
+
+        def maybe_fq(a):
+            if rep is Rep.FQ and qs is not None:
+                if self.act.zero_lo:
+                    return pact_act(a, qs["beta"], 8)
+                return pact_act_asymm(a, qs["alpha"], qs["beta"], 8)
+            return a
+
+        from repro.sharding.hints import hint
+
+        u = hint(subs["wu"].apply(p["wu"], x, rep), "ffn_h")
+        if self.gated:
+            g = hint(subs["wg"].apply(p["wg"], x, rep), "ffn_h")
+            g = maybe_fq(act_fn(self.act, g))
+            h = g * u
+        else:
+            h = maybe_fq(act_fn(self.act, u))
+        if calib is not None:
+            if self.gated:
+                calib.observe(f"{scope}{self.name}.gate.pre",
+                              subs["wg"].apply_fp(p["wg"], x))
+                calib.observe(f"{scope}{self.name}.gate",
+                              act_fn(self.act, subs["wg"].apply_fp(p["wg"], x)))
+                calib.observe(f"{scope}{self.name}.up", u)
+            else:
+                calib.observe(f"{scope}{self.name}.act.pre", u)
+                calib.observe(f"{scope}{self.name}.act", h)
+            calib.observe(f"{scope}{self.name}.h", h)
+        return subs["wd"].apply(p["wd"], h, rep)
+
+    # -- transform -----------------------------------------------------------
+    def deploy(self, ctx: DeployCtx, scope: str, p_np: dict, eps_x: float,
+               zp_x: int) -> Tuple[dict, np.ndarray]:
+        subs = self._sub()
+        t: dict = {}
+        if self.gated:
+            act_g = QAct(self.act, name=f"{self.name}.gate")
+            ip_g, eps_acc_g = subs["wg"].deploy(p_np["wg"], eps_x, zp_x)
+            tg, eps_g, zp_g = act_g.deploy(ctx, scope, eps_acc_g, 0,
+                                           subs["wg"].acc_bound())
+            act_u = QAct(ActKind.IDENTITY, sym=True, name=f"{self.name}.up")
+            ip_u, eps_acc_u = subs["wu"].deploy(p_np["wu"], eps_x, zp_x)
+            tu, eps_u, zp_u = act_u.deploy(ctx, scope, eps_acc_u, 0,
+                                           subs["wu"].acc_bound())
+            # product space -> symmetric int8 h
+            act_h = QAct(ActKind.IDENTITY, sym=True, name=f"{self.name}.h")
+            th, eps_h, _ = act_h.deploy(ctx, scope, eps_g * eps_u, 0,
+                                        acc_bound=float(256 * 128))
+            ip_d, eps_acc_d = subs["wd"].deploy(p_np["wd"], eps_h, 0)
+            t.update({
+                "wg": ip_g, "g_tab": tg, "wu": ip_u, "u_rqt": tu["rqt"],
+                "h_rqt": th["rqt"], "wd": ip_d,
+                "zp_g": np.int32(zp_g),
+            })
+            return t, eps_acc_d
+        act_u = QAct(self.act, name=f"{self.name}.act")
+        ip_u, eps_acc_u = subs["wu"].deploy(p_np["wu"], eps_x, zp_x)
+        tu, eps_h, zp_h = act_u.deploy(ctx, scope, eps_acc_u, 0,
+                                       subs["wu"].acc_bound())
+        ip_d, eps_acc_d = subs["wd"].deploy(p_np["wd"], eps_h, zp_h)
+        t.update({"wu": ip_u, "u_tab": tu, "wd": ip_d})
+        return t, eps_acc_d
+
+    # -- integer ---------------------------------------------------------------
+    def apply_id(self, t, s_x):
+        from repro.sharding.hints import hint
+
+        subs = self._sub()
+        if self.gated:
+            act_g = QAct(self.act, name=f"{self.name}.gate")
+            g_acc = hint(subs["wg"].apply_id(t["wg"], s_x), "ffn_h")
+            s_g = act_g.apply_id(t["g_tab"], g_acc)
+            u_acc = hint(subs["wu"].apply_id(t["wu"], s_x), "ffn_h")
+            s_u = apply_rqt(u_acc, t["u_rqt"])
+            prod = (s_g.astype(jnp.int32) - t["zp_g"]) * s_u.astype(jnp.int32)
+            s_h = apply_rqt(prod, t["h_rqt"])
+            return subs["wd"].apply_id(t["wd"], s_h)
+        act_u = QAct(self.act, name=f"{self.name}.act")
+        u_acc = subs["wu"].apply_id(t["wu"], s_x)
+        s_h = act_u.apply_id(t["u_tab"], u_acc)
+        return subs["wd"].apply_id(t["wd"], s_h)
+
+    def apply(self, p, x, rep, *, qs=None, calib=None, scope=""):
+        if rep is Rep.ID:
+            return self.apply_id(p, x)
+        return self.apply_float(p, x, rep, qs=qs, calib=calib, scope=scope)
+
+    def axes(self) -> dict:
+        a = {"wu": {"w": ("embed", "mlp")}, "wd": {"w": ("mlp", "embed")}}
+        if self.gated:
+            a["wg"] = {"w": ("embed", "mlp")}
+        return a

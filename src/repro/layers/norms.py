@@ -1,0 +1,181 @@
+"""RMSNorm / LayerNorm under the NEMO formalism (DESIGN.md §3.5).
+
+BatchNorm (the paper's §3.4) has *static* statistics, so its affine map
+folds into static integer tables.  RMS/LayerNorm statistics are per-token;
+we extend requantization with a *dynamic multiplier*:
+
+    y = x / rms(x) * gamma
+      = eps_g * (s . Gamma) * sqrt(d) / (eps_y * r)          (real algebra)
+
+with  r = isqrt( sum s^2 )  computed in integers.  The per-token factor
+1/r enters as a normalized fixed-point reciprocal:
+
+    e_r      = bitlen(r) - 1
+    r_n      = r << (NORM_BITS - e_r)            in [2^NORM_BITS, 2^NORM_BITS+1)
+    recip_n  = floor(2^(2*NORM_BITS+1) / r_n)    in (2^NORM_BITS, 2^NORM_BITS+1]
+    1/r      = recip_n * 2^(e_r - 3*NORM_BITS - 1 + ... )    (shift bookkeeping)
+
+so the whole chain is multiply/shift with one integer division per token
+(the reciprocal), exactly parallel to Eq. 13.  Relative error sources:
+isqrt floor (<= 1/2r), reciprocal floor (<= 2^-NORM_BITS), static scale
+floor (<= 1/m): all verified < 1% end-to-end by test.
+
+LayerNorm subtracts the mean first: we center at scale d (c = d*s - sum s)
+to avoid an integer division, then renormalize the extra d factor into the
+static multiplier.
+
+Norm inputs are symmetric int8 (zp = 0) by the residual-stream convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.intmath import int_isqrt
+from repro.core.requant import make_rqt, apply_rqt
+from repro.core.rep import Rep
+from repro.layers.common import ACT_QMAX, ACT_QMIN, DeployCtx
+
+NORM_BITS = 14  # reciprocal mantissa bits
+
+
+@dataclasses.dataclass(frozen=True)
+class QNorm:
+    d: int
+    kind: str = "rms"          # "rms" | "layer"
+    eps: float = 1e-6
+    use_bias: bool = False     # LayerNorm beta
+    name: str = "norm"
+
+    def init(self, key) -> dict:
+        p = {"g": jnp.ones((self.d,), jnp.float32)}
+        if self.use_bias:
+            p["b"] = jnp.zeros((self.d,), jnp.float32)
+        return p
+
+    # -- float paths -------------------------------------------------------
+    def apply_fp(self, p, x, calib=None, scope: str = ""):
+        xf = x.astype(jnp.float32)
+        if self.kind == "layer":
+            xf = xf - jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + self.eps) * p["g"]
+        if self.use_bias:
+            y = y + p["b"]
+        y = y.astype(x.dtype)
+        if calib is not None:
+            calib.observe(f"{scope}{self.name}", y)
+        return y
+
+    # FQ: norm runs in float (paper: only Linear weights and Activation
+    # outputs are restricted in FakeQuantized representation).
+    apply_fq = apply_fp
+
+    # -- transform ---------------------------------------------------------
+    def deploy(self, ctx: DeployCtx, scope: str, p_np: dict,
+               eps_in: float) -> Tuple[dict, float, int]:
+        """-> (tables, eps_out, zp_out=0). Input must be symmetric (zp=0)."""
+        g = np.asarray(p_np["g"], np.float64)
+        beta_g = np.maximum(np.max(np.abs(g)), 1e-8)
+        eps_g = 2.0 * beta_g / 255.0
+        q_g = np.clip(np.floor(g / eps_g), -128, 127).astype(np.int8)
+
+        lo, hi = ctx.range(f"{scope}{self.name}", "norm")
+        amax = max(abs(lo), abs(hi), 1e-6)
+        eps_y = 2.0 * amax / 255.0
+
+        # static scale: sqrt(d)*eps_g/eps_y.  eps_in cancels in x/rms(x);
+        # for layernorm the centering scale d and the c_shift both cancel
+        # between numerator and isqrt (see apply_id docstring).
+        static = np.sqrt(self.d) * eps_g / eps_y
+        # represent static as m / 2^sh with m in [2^15, 2^16)
+        sh = 16 - int(np.floor(np.log2(max(static, 1e-12)))) - 1
+        m_static = int(np.floor(static * 2.0 ** sh))
+        tables = {
+            "g_q": q_g,
+            "m": np.int32(m_static),
+            "sh": np.int32(sh),
+        }
+        if self.use_bias:
+            b = np.asarray(p_np.get("b", np.zeros(self.d)), np.float64)
+            tables["b_q"] = np.round(b / eps_y).astype(np.int32)
+        return tables, eps_y, 0
+
+    # -- integer path --------------------------------------------------------
+    def apply_id(self, t, s):
+        """s int8 (..., d), zp=0 -> int8 (..., d), zp=0.
+
+        Chain (all int32):
+          ss      = sum s^2                       <= d * 127^2 < 2^31
+          r       = isqrt(ss)                     in [1, 127*sqrt(d)]
+          e_r     = bitlen(r) - 1
+          r_n     = r << (NB - e_r)               [2^NB, 2^NB+1)
+          recip   = (2^(2NB+1)) // r_n            (2^NB, 2^NB+1]
+          t1      = s * Gamma                     |.| <= 2^14
+          t2      = (t1 * recip) >> (NB+1)        |.| <= 2^14
+          t3      = (t2 * m) >> (sh - NB + e_r)   == t1*m/(r*2^sh) scaled
+        Final real value: s*Gamma * sqrt(d)*eps_g/eps_y / r  — the dynamic
+        requant.  (shift bookkeeping verified against float oracle.)
+        """
+        s32 = s.astype(jnp.int32)
+        base_shift = 0
+        if self.kind == "layer":
+            # center at scale d: c = d*s - sum(s); then renormalize by d
+            ssum = jnp.sum(s32, axis=-1, keepdims=True)
+            c = s32 * jnp.int32(self.d) - ssum
+            # scale c down so sum(c'^2) fits int32: |c'| <= 2^((31-log2 d)/2)
+            bits_ok = int((31 - np.ceil(np.log2(self.d))) // 2)
+            c_bits = int(np.ceil(np.log2(2 * 127 * self.d)))
+            c_shift = max(0, c_bits - bits_ok)
+            cq = jnp.right_shift(c, c_shift)
+            ss = jnp.sum(cq * cq, axis=-1, keepdims=True)
+            r = int_isqrt(ss)  # the c_shift cancels between base and r
+            # the multiply chain t1*recip needs |base| <= 2^8
+            base_shift = max(0, c_bits - c_shift - 8)
+            base = jnp.right_shift(cq, base_shift)
+        else:
+            ss = jnp.sum(s32 * s32, axis=-1, keepdims=True)
+            r = int_isqrt(ss)
+            base = s32
+        r = jnp.maximum(r, 1)
+        # normalized reciprocal
+        bits = 32 - jax.lax.clz(r)
+        e_r = bits - 1
+        r_n = jnp.left_shift(r, jnp.maximum(NORM_BITS - e_r, 0))
+        r_n = jnp.right_shift(r_n, jnp.maximum(e_r - NORM_BITS, 0))
+        recip = (jnp.int32(1) << (2 * NORM_BITS + 1)) // jnp.maximum(r_n, 1)
+
+        g = t["g_q"].astype(jnp.int32)
+        t1 = base * g                                   # <= 2^10-ish * 127
+        t2 = jnp.right_shift(t1 * recip, NORM_BITS + 1)  # ~= t1 * 2^NB / r
+        # t3 = t2 * m >> (sh + NB - ... ) with the dynamic e_r correction:
+        # 1/r = recip/2^(NB+1) / 2^(e_r... ) — recip/2^(NB+1) ~= 2^NB/r_n and
+        # r = r_n * 2^(e_r-NB)  =>  1/r ~= recip / 2^(e_r + NB + 1)
+        # t2 already divided by 2^(NB+1):  t2 ~= t1 * recip / 2^(NB+1)
+        #                                      = t1 * 2^NB / r_n
+        #                                      = t1 * 2^e_r / r
+        # => y_img = t1 * m / (r * 2^sh) = (t2 * m) >> (sh + e_r)
+        t3 = t2 * t["m"]
+        shift = t["sh"] + e_r - base_shift
+        out = jnp.right_shift(t3, jnp.clip(shift, 0, 31))
+        out = jnp.left_shift(out, jnp.clip(-shift, 0, 31))
+        # guard pathological shift > 31 (degenerate tiny inputs)
+        out = jnp.where(shift > 31, 0, out)
+        if "b_q" in t:
+            out = out + t["b_q"].astype(jnp.int32)
+        return jnp.clip(out, ACT_QMIN, ACT_QMAX).astype(jnp.int8)
+
+    def apply(self, p_or_t, x, rep, *, calib=None, scope=""):
+        if rep is Rep.ID:
+            return self.apply_id(p_or_t, x)
+        return self.apply_fp(p_or_t, x, calib=calib, scope=scope)
+
+    def axes(self) -> dict:
+        a = {"g": (None,)}
+        if self.use_bias:
+            a["b"] = (None,)
+        return a

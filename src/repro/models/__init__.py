@@ -1,0 +1,2 @@
+from repro.models.lm import DecoderLM
+from repro.models.cnn import NemoCNN

@@ -1,0 +1,214 @@
+"""The paper's own model class: Conv-BN-ReLU CNN with the complete NEMO
+representation lifecycle, exercising every §3 operator:
+
+  FP  : conv -> BN -> ReLU stacks, avg-pool, linear classifier
+  FQ  : quantize_pact (PACT weights + activations)
+  QD  : bn_quantizer + harden_weights + set_deployment (Eq. 10 acts)
+  ID  : integerize — three selectable BN strategies per block:
+          'fold'   Eq. 18, 'intbn' Eq. 21-22, 'thresh' Eq. 19-20
+
+Input representation (§3.7): 8-bit images, eps_in = 1/255, zp at -128.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bn import apply_integer_bn, apply_thresholds, fold_bn
+from repro.core.calibrate import Calibrator
+from repro.core.pact import pact_act
+from repro.core.requant import apply_rqt, make_rqt
+from repro.core.rep import Rep
+from repro.layers.common import ACT_QMAX, ACT_QMIN, DeployCtx
+from repro.layers.conv import QAvgPool2d, QBatchNorm2d, QConv2d
+from repro.layers.linear import QLinear
+
+
+@dataclasses.dataclass(frozen=True)
+class NemoCNN:
+    channels: Tuple[int, ...] = (16, 32, 64)
+    in_channels: int = 3
+    n_classes: int = 10
+    img: int = 32
+    act_bits: int = 8
+
+    def _convs(self):
+        cs = (self.in_channels,) + self.channels
+        return [QConv2d(cs[i], cs[i + 1], kernel=3)
+                for i in range(len(self.channels))]
+
+    def _head(self):
+        side = self.img // (2 ** len(self.channels))
+        return QLinear(self.channels[-1] * side * side, self.n_classes,
+                       use_bias=True, per_channel=False)
+
+    def init(self, key) -> dict:
+        convs = self._convs()
+        keys = jax.random.split(key, len(convs) + 1)
+        p = {"blocks": [], "head": self._head().init(keys[-1])}
+        for conv, k in zip(convs, keys):
+            p["blocks"].append({
+                "conv": conv.init(k),
+                "bn": QBatchNorm2d(conv.c_out).init(k),
+            })
+        return p
+
+    def init_qstate(self) -> dict:
+        return {"beta": [jnp.float32(6.0) for _ in self.channels]}
+
+    # -- float paths ---------------------------------------------------------
+    def apply_float(self, p, x, rep, *, qstate=None, calib=None):
+        convs = self._convs()
+        pool = QAvgPool2d(2)
+        for i, conv in enumerate(convs):
+            bp = p["blocks"][i]
+            phi = conv.apply(bp["conv"], x, rep)
+            bn = QBatchNorm2d(conv.c_out).apply_fp(bp["bn"], phi)
+            if calib is not None:
+                calib.observe(f"b{i}.phi", phi)
+                calib.observe(f"b{i}.act", jnp.maximum(bn, 0.0))
+            if rep is Rep.FQ and qstate is not None:
+                x = pact_act(bn, qstate["beta"][i], self.act_bits)
+            else:
+                x = jnp.maximum(bn, 0.0)
+            x = pool.apply_fp(x)
+        x = x.reshape(x.shape[0], -1)
+        return self._head().apply(p["head"], x, rep)
+
+    def apply_qd(self, p, dstate, x):
+        """QuantizedDeployable: hardened weights (already in p), quantized
+        BN params, Eq. 10 activations with frozen eps — real arithmetic."""
+        convs = self._convs()
+        pool = QAvgPool2d(2)
+        for i, conv in enumerate(convs):
+            bp = p["blocks"][i]
+            phi = conv.apply_fp(bp["conv"], x)
+            d = dstate["blocks"][i]
+            # quantized BN (Eq. 21): kappa/lambda on their grids
+            bn = phi * d["kappa_hat"] + d["lambda_hat"]
+            eps_y = d["eps_y"]
+            q = jnp.clip(jnp.floor(bn / eps_y), 0, 2 ** self.act_bits - 1)
+            x = pool.apply_fp(q * eps_y)
+        x = x.reshape(x.shape[0], -1)
+        return self._head().apply_fp(p["head"], x)
+
+    # -- transforms -------------------------------------------------------------
+    def harden(self, p) -> dict:
+        """FQ -> QD weight hardening (net.harden_weights())."""
+        from repro.layers.linear import harden_weights_np
+
+        p_np = jax.tree.map(np.asarray, p)
+        out = {"blocks": [], "head": harden_weights_np(p_np["head"])}
+        for i, conv in enumerate(self._convs()):
+            bp = dict(p_np["blocks"][i])
+            w = bp["conv"]["w"]
+            beta = np.maximum(np.abs(w).reshape(-1, w.shape[-1]).max(axis=0),
+                              1e-8)
+            eps_w = 2.0 * beta / 255.0
+            q = np.clip(np.floor(w / eps_w), -128, 127)
+            bp = {"conv": {**bp["conv"], "w": (q * eps_w).astype(np.float32)},
+                  "bn": bp["bn"]}
+            out["blocks"].append(bp)
+        return out
+
+    def qd_state(self, p, calib: Calibrator) -> dict:
+        """bn_quantizer + set_deployment for the QD representation."""
+        p_np = jax.tree.map(np.asarray, p)
+        ds = {"blocks": []}
+        for i, conv in enumerate(self._convs()):
+            bn = p_np["blocks"][i]["bn"]
+            kappa = bn["gamma"] / bn["sigma"]
+            lam = bn["beta"] - kappa * bn["mu"]
+            beta_k = np.maximum(np.abs(kappa).max(), 1e-12)
+            eps_k = 2.0 * beta_k / 255.0
+            kappa_hat = np.clip(np.round(kappa / eps_k), -128, 127) * eps_k
+            beta_l = np.maximum(np.abs(lam).max(), 1e-12)
+            eps_l = 2.0 * beta_l / 255.0
+            lambda_hat = np.clip(np.round(lam / eps_l), -128, 127) * eps_l
+            beta_y = calib.beta(f"b{i}.act", default=6.0)
+            ds["blocks"].append({
+                "kappa_hat": kappa_hat.astype(np.float32),
+                "lambda_hat": lambda_hat.astype(np.float32),
+                "eps_y": np.float32(beta_y / (2 ** self.act_bits - 1)),
+            })
+        return ds
+
+    def deploy(self, p, calib: Calibrator, *, bn_mode: str = "intbn",
+               factor: int = 256, eps_in: float = 1.0 / 255.0,
+               zp_in: int = -128) -> dict:
+        """-> ID tables.  bn_mode in {'fold', 'intbn', 'thresh'}."""
+        p_np = jax.tree.map(np.asarray, p)
+        t = {"meta": {"eps_in": eps_in, "zp_in": zp_in, "bn_mode": bn_mode},
+             "blocks": []}
+        eps_x, zp_x = eps_in, zp_in
+        for i, conv in enumerate(self._convs()):
+            bp = p_np["blocks"][i]
+            bn = bp["bn"]
+            beta_y = calib.beta(f"b{i}.act", default=6.0)
+            eps_y = beta_y / (2 ** self.act_bits - 1)
+            blk = {}
+            if bn_mode == "fold":
+                w_f, b_f = fold_bn(bp["conv"]["w"], bp["conv"].get("b"),
+                                   bn["gamma"], bn["beta"], bn["mu"],
+                                   bn["sigma"], channel_axis=-1)
+                cf = QConv2d(conv.c_in, conv.c_out, conv.kernel,
+                             use_bias=True)
+                ip, eps_acc = cf.deploy(
+                    {"w": w_f, "b": b_f}, eps_x, zp_x)
+                blk["conv"] = ip
+                blk["rqt"] = make_rqt(
+                    eps_acc, eps_y, zp_out=ACT_QMIN, qmin=ACT_QMIN,
+                    qmax=ACT_QMAX, requant_factor=factor,
+                    acc_bound=conv.acc_bound())
+            else:
+                ip, eps_acc = conv.deploy(bp["conv"], eps_x, zp_x)
+                blk["conv"] = ip
+                if bn_mode == "intbn":
+                    ibn = QBatchNorm2d(conv.c_out).make_integer(
+                        bn, eps_acc, acc_bound=conv.acc_bound())
+                    blk["ibn"] = ibn
+                    blk["rqt"] = make_rqt(
+                        ibn.eps_out, eps_y, zp_out=ACT_QMIN, qmin=ACT_QMIN,
+                        qmax=ACT_QMAX, requant_factor=factor,
+                        acc_bound=2.0 ** 28)
+                else:  # thresh — exact integer thresholds (Eq. 19-20)
+                    # per-channel eps_acc -> per-channel thresholds
+                    th = []
+                    for ch in range(conv.c_out):
+                        th_c = QBatchNorm2d(1).make_thresholds(
+                            {k: bn[k][ch:ch + 1] for k in bn},
+                            float(eps_acc[ch]), eps_y,
+                            2 ** self.act_bits)
+                        th.append(th_c[0])
+                    blk["th"] = np.stack(th).astype(np.int64)
+            t["blocks"].append(blk)
+            eps_x, zp_x = eps_y, ACT_QMIN  # ReLU image: [0, 255] at zp -128
+        head = self._head()
+        ih, eps_logits = head.deploy(p_np["head"], eps_x, zp_x)
+        t["head"] = ih
+        t["meta"]["eps_logits"] = float(np.max(eps_logits))
+        return t
+
+    # -- integer path ---------------------------------------------------------------
+    def apply_id(self, t, s_x):
+        convs = self._convs()
+        pool = QAvgPool2d(2)
+        mode = t["meta"]["bn_mode"]
+        for i, conv in enumerate(convs):
+            blk = t["blocks"][i]
+            acc = conv.apply_id(blk["conv"], s_x)
+            if mode == "fold":
+                s_y = apply_rqt(acc, blk["rqt"])
+            elif mode == "intbn":
+                q_bn = apply_integer_bn(acc, blk["ibn"])
+                s_y = apply_rqt(q_bn, blk["rqt"])
+            else:
+                img = apply_thresholds(acc, blk["th"])   # [0, 255]
+                s_y = (img + ACT_QMIN).astype(jnp.int8)
+            s_x = pool.apply_id(s_y)
+        s_x = s_x.reshape(s_x.shape[0], -1)
+        return self._head().apply_id(t["head"], s_x)

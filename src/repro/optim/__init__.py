@@ -1,0 +1,5 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.optim.grad_compress import (
+    compress_decompress_grads, init_error_feedback,
+)

@@ -1,0 +1,49 @@
+"""AdamW with global-norm clipping — pure-pytree implementation.
+
+Moments mirror the param tree, so the sharding rules map onto them by
+path (rules.py).  `dtype` lets large configs keep moments in bf16 (a
+distributed-memory trick recorded in EXPERIMENTS.md §Perf when used).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, *, dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, clip_norm: Optional[float] = 1.0):
+    step = state["step"] + 1
+    if clip_norm is not None:
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    mu = jax.tree.map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(m.dtype), state["mu"], grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(v.dtype)),
+        state["nu"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        mhat = m.astype(jnp.float32) / bc1
+        vhat = v.astype(jnp.float32) / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "step": step}

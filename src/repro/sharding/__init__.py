@@ -1,0 +1,3 @@
+from repro.sharding.rules import (
+    batch_spec, cache_spec, caches_sharding, params_sharding, spec_for_path,
+)

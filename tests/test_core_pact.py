@@ -1,0 +1,92 @@
+"""PACT fake-quantization tests (paper §2): forward grids + STE gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pact import (
+    default_weight_beta, pact_act, pact_act_asymm, pact_weight,
+)
+
+
+def test_act_forward_on_grid():
+    beta = jnp.float32(6.0)
+    x = jnp.linspace(-2.0, 8.0, 113)
+    y = pact_act(x, beta, 8)
+    eps = 6.0 / 255
+    # all outputs on the quantized grid, in [0, beta)
+    q = np.asarray(y) / eps
+    assert np.allclose(q, np.round(q), atol=1e-4)
+    assert y.min() >= 0 and float(y.max()) <= 6.0
+    # clip behaviour
+    assert float(pact_act(jnp.float32(-1.0), beta, 8)) == 0.0
+    assert float(pact_act(jnp.float32(7.0), beta, 8)) == pytest.approx(255 * eps)
+
+
+def test_act_ste_gradients():
+    beta = jnp.float32(4.0)
+    x = jnp.asarray([-1.0, 0.5, 2.0, 3.9, 4.5, 10.0])
+    g = jax.grad(lambda x, b: jnp.sum(pact_act(x, b, 8)), argnums=(0, 1))
+    dx, dbeta = g(x, beta)
+    np.testing.assert_array_equal(np.asarray(dx), [0.0, 1.0, 1.0, 1.0, 0.0, 0.0])
+    assert float(dbeta) == 2.0  # two clipped-high elements
+
+
+def test_act_asymm_range_and_grads():
+    alpha, beta = jnp.float32(-1.0), jnp.float32(3.0)
+    x = jnp.asarray([-2.0, -0.5, 0.0, 2.9, 3.5])
+    y = pact_act_asymm(x, alpha, beta, 8)
+    eps = 4.0 / 255
+    assert float(y[0]) == pytest.approx(-1.0)           # clipped low -> alpha
+    assert float(y[-1]) == pytest.approx(-1.0 + 255 * eps)
+    da, db = jax.grad(
+        lambda a, b: jnp.sum(pact_act_asymm(x, a, b, 8)), argnums=(0, 1)
+    )(alpha, beta)
+    assert float(da) == 1.0 and float(db) == 1.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 8))
+def test_weight_quantization_levels(n_bits):
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (16, 8))
+    beta_w = default_weight_beta(w, channel_axis=-1)
+    w_hat = pact_weight(w, beta_w, n_bits, -1)
+    eps = 2.0 * np.asarray(beta_w) / (2 ** n_bits - 1)
+    q = np.asarray(w_hat) / eps[None, :]
+    assert np.allclose(q, np.round(q), atol=1e-4)
+    assert np.all(np.abs(q) <= 2 ** (n_bits - 1))
+    # at most 2^Q distinct levels per channel
+    for c in range(8):
+        assert len(np.unique(q[:, c].round())) <= 2 ** n_bits
+
+
+def test_weight_ste():
+    w = jnp.asarray([[-3.0, -0.5, 0.5, 3.0]])
+    beta_w = jnp.asarray([1.0, 1.0, 1.0, 1.0])
+    dw = jax.grad(lambda w: jnp.sum(pact_weight(w, beta_w, 8, -1)))(w)
+    np.testing.assert_array_equal(np.asarray(dw), [[0.0, 1.0, 1.0, 0.0]])
+
+
+def test_qat_step_reduces_loss():
+    """One SGD step through the fake-quantized graph should reduce loss —
+    the end-to-end STE sanity check (paper §2.2)."""
+    key = jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    w = jax.random.normal(k1, (8, 4)) * 0.5
+    x = jax.random.normal(k2, (32, 8))
+    y_tgt = jax.random.normal(k3, (32, 4))
+    beta = jnp.float32(2.0)
+
+    def loss_fn(w, beta):
+        w_hat = pact_weight(w, default_weight_beta(w), 4, -1)
+        h = x @ w_hat
+        y = pact_act(h, beta, 4)
+        return jnp.mean((y - y_tgt) ** 2)
+
+    l0 = loss_fn(w, beta)
+    gw, gb = jax.grad(loss_fn, argnums=(0, 1))(w, beta)
+    assert np.isfinite(np.asarray(gw)).all() and np.isfinite(float(gb))
+    l1 = loss_fn(w - 0.05 * gw, beta - 0.05 * gb)
+    assert float(l1) < float(l0)

@@ -1,0 +1,106 @@
+"""Machine-check the paper's integer-only claim on LM serving (DESIGN.md
+§3.7): in the IntegerDeployable decode step,
+
+  (1) every deployed table is an integer array EXCEPT the documented
+      §3.8 island scales (score_scale / router_scale / SSM constants);
+  (2) every dot_general / conv in the jaxpr runs on INTEGER operands —
+      no float matmul anywhere (matmuls are the compute; islands are
+      vector-ops only);
+  (3) logits are int32 and greedy decoding never dequantizes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.rep import Rep
+from repro.models.lm import DecoderLM
+
+ISLAND_KEYS = (
+    "score_scale", "router_scale", "dt_scale", "dt_bias",
+    "A", "Dv", "eps_conv_f", "zp_conv_f", "eps_xdb_f", "eps_y_inv",
+    "eps_p_f", "eps_n_inv", "norm_g_f",
+)
+
+
+def _deployed(arch):
+    cfg = get_config(arch).reduced()
+    lm = DecoderLM(cfg, max_seq=32)
+    key = jax.random.PRNGKey(0)
+    p = lm.init(key)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    calib = lm.calibrate(p, tokens)
+    t = lm.deploy(p, calib)
+    return lm, t, tokens
+
+
+@pytest.mark.parametrize("arch", ["granite_3_2b", "olmoe_1b_7b",
+                                  "falcon_mamba_7b", "zamba2_1_2b"])
+def test_tables_integer_except_islands(arch):
+    lm, t, _ = _deployed(arch)
+    t.pop("meta")
+    bad = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(t)[0]:
+        ps = jax.tree_util.keystr(path)
+        if not isinstance(leaf, np.ndarray):
+            continue
+        if np.issubdtype(leaf.dtype, np.floating):
+            if not any(k in ps for k in ISLAND_KEYS):
+                bad.append((ps, leaf.dtype))
+    assert not bad, bad[:10]
+
+
+# SSM-family archs run their scan core in the §3.8 float island; the only
+# float contraction allowed there is the y = h . C state read-out.
+SSM_ISLAND_DOT_BUDGET = {"falcon_mamba_7b": 2, "zamba2_1_2b": 2}
+
+
+@pytest.mark.parametrize("arch", ["granite_3_2b", "olmoe_1b_7b",
+                                  "falcon_mamba_7b", "zamba2_1_2b"])
+def test_all_matmuls_integer(arch):
+    lm, t, tokens = _deployed(arch)
+    t_j = jax.tree.map(jnp.asarray, t,
+                       is_leaf=lambda x: isinstance(x, np.ndarray))
+    caches = lm.init_caches(2, 32, Rep.ID)
+    tok = tokens[:, :1]
+
+    jaxpr = jax.make_jaxpr(
+        lambda tok, c: lm.decode_step(t_j, tok, c, 4))(tok, caches)
+
+    float_dots = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name in ("dot_general", "conv_general_dilated"):
+                if any(hasattr(v, "aval") and jnp.issubdtype(
+                        v.aval.dtype, jnp.floating) for v in eqn.invars):
+                    float_dots.append(
+                        (eqn.primitive.name,
+                         [tuple(v.aval.shape) for v in eqn.invars]))
+            for sub in eqn.params.values():
+                if hasattr(sub, "eqns"):
+                    walk(sub)
+                elif hasattr(sub, "jaxpr"):
+                    walk(sub.jaxpr)
+                elif isinstance(sub, (list, tuple)):
+                    for s2 in sub:
+                        if hasattr(s2, "jaxpr"):
+                            walk(s2.jaxpr)
+
+    walk(jaxpr.jaxpr)
+    budget = SSM_ISLAND_DOT_BUDGET.get(arch, 0)
+    assert len(float_dots) <= budget, (len(float_dots), float_dots[:10])
+
+
+def test_greedy_decode_integer_logits():
+    lm, t, tokens = _deployed("granite_3_2b")
+    t_j = jax.tree.map(jnp.asarray, t,
+                       is_leaf=lambda x: isinstance(x, np.ndarray))
+    caches = lm.init_caches(2, 32, Rep.ID)
+    logits, caches = jax.jit(lm.prefill)(t_j, tokens, caches)
+    assert logits.dtype == jnp.int32
+    tok = jnp.argmax(logits[:, -1], axis=-1)  # pure integer argmax
+    assert tok.dtype in (jnp.int32, jnp.int64)
+    # padded vocab slots never win the argmax
+    assert int(tok.max()) < lm.cfg.vocab

@@ -1,0 +1,245 @@
+"""Integer-path layer tests: each ID lowering vs its float oracle.
+
+Tolerances derive from the paper's bounds: requant scale error eta=1/256,
+activation grids 1/255 of range, plus the staged-shift single quantum.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.calibrate import Calibrator
+from repro.core.rep import Rep
+from repro.layers.act_quant import QAct
+from repro.layers.add import QAdd
+from repro.layers.attention import QAttention
+from repro.layers.common import ActKind, DeployCtx
+from repro.layers.embedding import QEmbed
+from repro.layers.linear import QLinear
+from repro.layers.mlp import QMLP
+from repro.layers.norms import QNorm
+from repro.layers.rope import (
+    apply_rope_fp, apply_rope_int, rope_tables_fp, rope_tables_int,
+)
+
+RNG = np.random.default_rng(7)
+
+
+def _sym_quant(x, amax):
+    """Host helper: real -> (int8 image, eps), symmetric."""
+    eps = 2.0 * amax / 255.0
+    s = np.clip(np.floor(x / eps), -128, 127).astype(np.int8)
+    return s, eps
+
+
+def test_linear_id_matches_float():
+    lin = QLinear(64, 32, use_bias=True)
+    p = lin.init(jax.random.PRNGKey(0))
+    p = {"w": np.asarray(p["w"]), "b": np.asarray(RNG.normal(size=32) * 0.1,
+                                                  np.float32)}
+    x = RNG.normal(size=(16, 64)).astype(np.float32)
+    s_x, eps_x = _sym_quant(x, np.abs(x).max())
+    ip, eps_acc = lin.deploy(p, eps_x, 0)
+    acc = np.asarray(lin.apply_id(ip, jnp.asarray(s_x)))
+    got = acc * eps_acc[None, :]
+    # oracle: dequantized x through quantized weights
+    w_hat = ip["w_q"].astype(np.float64) * (eps_acc / eps_x)[None, :]
+    ref = (s_x.astype(np.float64) * eps_x) @ w_hat + p["b"]
+    # bias rounding: one acc quantum per channel
+    tol = eps_acc.max() * 1.0 + 1e-6
+    assert np.max(np.abs(got - ref)) <= tol
+
+
+def test_act_relu_and_identity():
+    for kind in (ActKind.RELU, ActKind.IDENTITY):
+        act = QAct(kind, sym=(kind is ActKind.IDENTITY), name="a")
+        ctx = DeployCtx()
+        eps_in = np.float64(1e-3)
+        t, eps_y, zp = act.deploy(ctx, "", eps_in, 0, acc_bound=2.0 ** 20)
+        q = jnp.asarray(RNG.integers(-(1 << 13), 1 << 13, size=(256,)), jnp.int32)
+        s = np.asarray(act.apply_id(t, q))
+        real_in = np.asarray(q, np.float64) * eps_in
+        if kind is ActKind.RELU:
+            ref = np.clip(real_in, 0.0, 8.0)
+        else:
+            ref = np.clip(real_in, -8.0, 8.0)
+        got = (s.astype(np.float64) - zp) * eps_y
+        # 3 quanta: Eq.10 floor + staged shift + zp rounding; Eq.14 scale err
+        assert np.max(np.abs(got - ref)) <= eps_y * 3 + np.abs(ref).max() / 256
+
+
+@pytest.mark.parametrize("kind", [ActKind.SILU, ActKind.GELU, ActKind.RELU2])
+def test_act_nonlinear_lut(kind):
+    act = QAct(kind, name="a")
+    calib = Calibrator()
+    x = RNG.normal(size=(4096,)).astype(np.float32) * 2.5
+    act.apply_fp(jnp.asarray(x), calib=calib, scope="")
+    ctx = DeployCtx(calib=calib)
+    eps_in = np.float64(2e-3)
+    t, eps_y, zp = act.deploy(ctx, "", eps_in, 0, acc_bound=2.0 ** 16)
+    q = jnp.asarray(np.round(x / eps_in).astype(np.int32))
+    s = np.asarray(act.apply_id(t, q))
+    got = (s.astype(np.float64) - zp) * eps_y
+    from repro.layers.common import act_fn_np
+    ref = act_fn_np(kind, np.asarray(q) * eps_in)
+    # two chained 8-bit grids -> a few quanta of slack
+    tol = 4 * eps_y + np.abs(ref).max() / 128 + 1e-3
+    assert np.max(np.abs(got - ref)) <= tol, (kind, np.max(np.abs(got - ref)), tol)
+
+
+@pytest.mark.parametrize("kind,d", [("rms", 256), ("rms", 1024),
+                                    ("layer", 256), ("layer", 2048)])
+def test_norm_integer_vs_float(kind, d):
+    norm = QNorm(d, kind=kind, use_bias=(kind == "layer"), name="n")
+    key = jax.random.PRNGKey(1)
+    p = norm.init(key)
+    g = 1.0 + 0.3 * RNG.normal(size=d).astype(np.float32)
+    b = (0.1 * RNG.normal(size=d).astype(np.float32) if kind == "layer" else None)
+    p_np = {"g": g} | ({"b": b} if b is not None else {})
+    x = RNG.normal(size=(64, d)).astype(np.float32) * 1.7
+    s_x, eps_x = _sym_quant(x, 6.0)
+    calib = Calibrator()
+    ref = np.asarray(norm.apply_fp(
+        {k: jnp.asarray(v) for k, v in p_np.items()},
+        jnp.asarray(s_x.astype(np.float32) * eps_x), calib=calib, scope=""))
+    ctx = DeployCtx(calib=calib)
+    t, eps_y, zp = norm.deploy(ctx, "", p_np, eps_x)
+    s_y = np.asarray(norm.apply_id(
+        {k: jnp.asarray(v) for k, v in t.items()}, jnp.asarray(s_x)))
+    got = s_y.astype(np.float64) * eps_y
+    err = np.abs(got - ref)
+    scale = np.abs(ref).max()
+    assert np.quantile(err, 0.99) <= 0.02 * scale + 2 * eps_y, (
+        kind, d, float(err.max()), float(np.quantile(err, 0.99)), scale)
+
+
+def test_add_eq24():
+    add = QAdd(name="add")
+    ctx = DeployCtx()
+    a = RNG.normal(size=(128,)).astype(np.float64) * 2
+    b = RNG.normal(size=(128,)).astype(np.float64) * 3
+    s_a, eps_a = _sym_quant(a, 6.0)
+    s_b, eps_b = _sym_quant(b, 7.0)
+    t, eps_s, zp_s = add.deploy(ctx, "", eps_a, 0, eps_b, 0)
+    s = np.asarray(add.apply_id(
+        {k: (jnp.asarray(v) if not isinstance(v, dict) else
+             {kk: jnp.asarray(vv) for kk, vv in v.items()})
+         for k, v in t.items()},
+        jnp.asarray(s_a), jnp.asarray(s_b)))
+    got = s.astype(np.float64) * eps_s
+    ref = s_a * eps_a + s_b * eps_b
+    tol = 2 * eps_s + np.abs(ref).max() / 256
+    assert np.max(np.abs(got - np.clip(ref, -8, 8))) <= tol
+
+
+def test_rope_int_vs_float():
+    hd, S = 64, 128
+    rot, cos, sin = rope_tables_fp(hd, S)
+    rot_i, cos_q, sin_q = rope_tables_int(hd, S)
+    x = RNG.normal(size=(2, 4, S, hd)).astype(np.float32)
+    s_x, eps_x = _sym_quant(x, 4.0)
+    pos = jnp.arange(S)
+    ref = np.asarray(apply_rope_fp(jnp.asarray(s_x, jnp.float32) * 1.0,
+                                   cos, sin, pos, rot))
+    got = np.asarray(apply_rope_int(jnp.asarray(s_x), cos_q, sin_q, pos, rot_i))
+    # integer rotation with 14-bit trig: error ~ 1 lsb; the int8 grid
+    # saturates (the sqrt(2) headroom is applied at the q/k spaces)
+    assert np.max(np.abs(got - np.clip(ref, -128, 127))) <= 1.5
+
+
+def test_rope_partial_fraction():
+    hd, S = 64, 32
+    rot, cos, sin = rope_tables_fp(hd, S, fraction=0.5)
+    assert rot == 32
+    x = jnp.asarray(RNG.normal(size=(1, 2, S, hd)), jnp.float32)
+    y = apply_rope_fp(x, cos, sin, jnp.arange(S), rot)
+    # pass-through half untouched
+    np.testing.assert_allclose(np.asarray(y[..., rot:]), np.asarray(x[..., rot:]))
+
+
+def _calibrate_and_deploy_attn(attn, p, x):
+    calib = Calibrator()
+    y_fp, _ = attn.apply_float(p, x, Rep.FP, calib=calib, scope="")
+    ctx = DeployCtx(calib=calib)
+    p_np = jax.tree.map(np.asarray, p)
+    t, eps_acc_o = attn.deploy(ctx, "", p_np, eps_x=2 * 4.0 / 255, zp_x=0)
+    return calib, t, eps_acc_o, y_fp
+
+
+def test_attention_id_close_to_float():
+    attn = QAttention(d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      max_seq=64)
+    p = attn.init(jax.random.PRNGKey(2))
+    x = jnp.asarray(RNG.normal(size=(2, 32, 64)), jnp.float32)
+    calib, t, eps_acc_o, y_fp = _calibrate_and_deploy_attn(attn, p, x)
+    eps_x = 2 * 4.0 / 255
+    s_x = jnp.asarray(np.clip(np.floor(np.asarray(x) / eps_x), -128, 127),
+                      jnp.int8)
+    t_j = jax.tree.map(jnp.asarray, t)
+    acc, _ = attn.apply_id(t_j, s_x)
+    got = np.asarray(acc).astype(np.float64) * np.asarray(eps_acc_o)[None, None, :]
+    ref = np.asarray(y_fp, np.float64)
+    # int8 all the way through: several % relative of the output range
+    scale = np.abs(ref).max() + 1e-6
+    rel = np.abs(got - ref).max() / scale
+    assert rel <= 0.15, rel
+    # correlation is the robust signal for stacked quantization
+    cc = np.corrcoef(got.ravel(), ref.ravel())[0, 1]
+    assert cc > 0.99, cc
+
+
+def test_attention_decode_matches_prefill():
+    """ID: decoding token-by-token == prefill attention (same cache math)."""
+    attn = QAttention(d_model=32, n_heads=2, n_kv_heads=1, head_dim=16,
+                      max_seq=16)
+    p = attn.init(jax.random.PRNGKey(3))
+    x = jnp.asarray(RNG.normal(size=(1, 8, 32)), jnp.float32)
+    calib, t, eps_acc_o, _ = _calibrate_and_deploy_attn(attn, p, x)
+    eps_x = 2 * 4.0 / 255
+    s_x = jnp.asarray(np.clip(np.floor(np.asarray(x) / eps_x), -128, 127),
+                      jnp.int8)
+    t_j = jax.tree.map(jnp.asarray, t)
+    # full prefill (no cache)
+    acc_full, _ = attn.apply_id(t_j, s_x)
+    # token-by-token with cache
+    cache = attn.init_cache(1, 8, Rep.ID)
+    outs = []
+    for i in range(8):
+        acc_i, cache = attn.apply_id(t_j, s_x[:, i:i + 1, :], cache=cache,
+                                     pos=i)
+        outs.append(np.asarray(acc_i)[0, 0])
+    got = np.stack(outs)
+    ref = np.asarray(acc_full)[0]
+    np.testing.assert_allclose(got, ref, atol=2, rtol=0)
+
+
+def test_mlp_gated_id():
+    mlp = QMLP(d_model=48, d_ff=96, act=ActKind.SILU, gated=True)
+    p = mlp.init(jax.random.PRNGKey(4))
+    x = jnp.asarray(RNG.normal(size=(16, 48)), jnp.float32)
+    calib = Calibrator()
+    ref = np.asarray(mlp.apply_float(p, x, Rep.FP, calib=calib, scope=""))
+    ctx = DeployCtx(calib=calib)
+    p_np = jax.tree.map(np.asarray, p)
+    eps_x = 2 * 4.0 / 255
+    t, eps_acc = mlp.deploy(ctx, "", p_np, eps_x, 0)
+    s_x = jnp.asarray(np.clip(np.floor(np.asarray(x) / eps_x), -128, 127),
+                      jnp.int8)
+    t_j = jax.tree.map(jnp.asarray, t)
+    acc = mlp.apply_id(t_j, s_x)
+    got = np.asarray(acc).astype(np.float64) * np.asarray(eps_acc)[None, :]
+    scale = np.abs(ref).max() + 1e-6
+    assert np.abs(got - ref).max() / scale <= 0.12
+    cc = np.corrcoef(got.ravel(), ref.ravel())[0, 1]
+    assert cc > 0.99, cc
+
+
+def test_embed_id():
+    emb = QEmbed(vocab=128, d=32)
+    p = emb.init(jax.random.PRNGKey(5))
+    ip, eps, zp = emb.deploy(DeployCtx(), jax.tree.map(np.asarray, p))
+    tok = jnp.asarray(RNG.integers(0, 128, size=(4, 7)))
+    s = np.asarray(emb.apply_id({"table_q": jnp.asarray(ip["table_q"])}, tok))
+    ref = np.asarray(emb.apply_fp(p, tok))
+    got = s * eps
+    assert np.abs(got - ref).max() <= eps

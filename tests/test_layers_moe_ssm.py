@@ -1,0 +1,189 @@
+"""MoE and SSM layer tests: routing invariants, scan correctness, ID paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.calibrate import Calibrator
+from repro.core.rep import Rep
+from repro.layers.common import ActKind, DeployCtx
+from repro.layers.moe import QMoE
+from repro.layers.ssm import QMamba1, QMamba2, _assoc_scan, _chunked_scan
+
+RNG = np.random.default_rng(11)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def _moe():
+    return QMoE(d_model=32, d_ff=64, n_experts=8, top_k=2, group_size=64,
+                capacity_factor=1.5)
+
+
+def test_moe_routing_slots_unique():
+    moe = _moe()
+    logits = jnp.asarray(RNG.normal(size=(2, 64, 8)), jnp.float32)
+    gates, experts, pos, tfs, C = moe._route(logits)
+    tfs_np = np.asarray(tfs)
+    # every slot holds either the sentinel (64) or a unique token per expert
+    for g in range(2):
+        for e in range(8):
+            toks = tfs_np[g, e][tfs_np[g, e] < 64]
+            assert len(np.unique(toks)) == len(toks)
+    # gates of kept assignments are nonneg and rows sum <= 1 + tol
+    g_np = np.asarray(gates)
+    assert (g_np >= 0).all() and (g_np.sum(-1) <= 1.0 + 1e-5).all()
+
+
+def test_moe_scan_matches_dense_reference():
+    """Gather-based MoE == explicit loop over experts (no capacity drops)."""
+    moe = QMoE(d_model=16, d_ff=32, n_experts=4, top_k=2, group_size=32,
+               capacity_factor=4.0)  # capacity ample -> no drops
+    p = moe.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(RNG.normal(size=(32, 16)), jnp.float32)
+    y, aux = moe.apply_float(p, x, Rep.FP)
+    # reference: dense per-token expert evaluation
+    logits = x @ np.asarray(p["router"]["w"])
+    probs = jax.nn.softmax(jnp.asarray(logits), axis=-1)
+    gates, experts = jax.lax.top_k(probs, 2)
+    gates = gates / gates.sum(-1, keepdims=True)
+    ref = np.zeros((32, 16), np.float32)
+    xn = np.asarray(x)
+    for t in range(32):
+        for i in range(2):
+            e = int(experts[t, i])
+            g = np.asarray(xn[t] @ np.asarray(p["wg"])[e])
+            u = np.asarray(xn[t] @ np.asarray(p["wu"])[e])
+            h = (g / (1 + np.exp(-g))) * u
+            ref[t] += float(gates[t, i]) * (h @ np.asarray(p["wd"])[e])
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-4)
+    assert float(aux) > 0
+
+
+def test_moe_id_close_to_float():
+    moe = _moe()
+    p = moe.init(jax.random.PRNGKey(1))
+    x = jnp.asarray(RNG.normal(size=(128, 32)), jnp.float32)
+    calib = Calibrator()
+    ref, _ = moe.apply_float(p, x, Rep.FP, calib=calib, scope="")
+    ctx = DeployCtx(calib=calib)
+    eps_x = 2 * 4.0 / 255
+    t, eps_comb = moe.deploy(ctx, "", jax.tree.map(np.asarray, p), eps_x, 0)
+    s_x = jnp.asarray(np.clip(np.floor(np.asarray(x) / eps_x), -128, 127),
+                      jnp.int8)
+    acc = moe.apply_id(jax.tree.map(jnp.asarray, t), s_x)
+    got = np.asarray(acc, np.float64) * float(eps_comb[0])
+    ref = np.asarray(ref, np.float64)
+    scale = np.abs(ref).max() + 1e-6
+    # routing may differ on near-ties between float/int paths; compare
+    # robustly: 95th percentile error small, correlation high
+    err = np.abs(got - ref)
+    # ~5 chained int8 stages + near-tie routing flips between paths
+    assert np.quantile(err, 0.95) / scale < 0.2, np.quantile(err, 0.95) / scale
+    cc = np.corrcoef(got.ravel(), ref.ravel())[0, 1]
+    assert cc > 0.97, cc
+
+
+# ---------------------------------------------------------------------------
+# scan primitives
+# ---------------------------------------------------------------------------
+
+
+def test_assoc_scan_matches_loop():
+    B, L, D = 2, 37, 5
+    a = jnp.asarray(RNG.uniform(0.5, 1.0, size=(B, L, D)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(B, L, D)), jnp.float32)
+    h = np.zeros((B, D), np.float32)
+    ref = []
+    for t in range(L):
+        h = np.asarray(a[:, t]) * h + np.asarray(u[:, t])
+        ref.append(h.copy())
+    ref = np.stack(ref, axis=1)
+    got = np.asarray(_assoc_scan(a, u))
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_chunked_scan_matches_assoc():
+    B, L, D = 2, 512, 3  # L = 4 * CHUNK
+    a = jnp.asarray(RNG.uniform(0.8, 1.0, size=(B, L, D)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(B, L, D)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(_chunked_scan(a, u)),
+                               np.asarray(_assoc_scan(a, u)),
+                               rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Mamba blocks
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cls,kw", [
+    (QMamba1, dict(d_model=32, d_state=8)),
+    (QMamba2, dict(d_model=32, d_state=16, head_dim=16)),
+])
+def test_mamba_fp_shapes_and_decode_consistency(cls, kw):
+    m = cls(**kw)
+    p = m.init(jax.random.PRNGKey(2))
+    x = jnp.asarray(RNG.normal(size=(2, 16, 32)) * 0.5, jnp.float32)
+    y, _ = m.apply_float(p, x, Rep.FP)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    # step-by-step with cache == full sequence
+    cache = m.init_cache(2, Rep.FP, dtype=jnp.float32)
+    outs = []
+    for i in range(16):
+        yi, cache = m.apply_float(p, x[:, i:i + 1], Rep.FP, cache=cache)
+        outs.append(np.asarray(yi)[:, 0])
+    got = np.stack(outs, axis=1)
+    np.testing.assert_allclose(got, np.asarray(y), rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("cls,kw", [
+    (QMamba1, dict(d_model=32, d_state=8)),
+    (QMamba2, dict(d_model=32, d_state=16, head_dim=16)),
+])
+def test_mamba_id_close_to_float(cls, kw):
+    m = cls(**kw)
+    p = m.init(jax.random.PRNGKey(3))
+    x = jnp.asarray(RNG.normal(size=(2, 32, 32)) * 0.5, jnp.float32)
+    calib = Calibrator()
+    ref, _ = m.apply_float(p, x, Rep.FP, calib=calib, scope="")
+    ctx = DeployCtx(calib=calib)
+    eps_x = 2 * 4.0 / 255
+    t, eps_acc = m.deploy(ctx, "", jax.tree.map(np.asarray, p), eps_x, 0)
+    s_x = jnp.asarray(np.clip(np.floor(np.asarray(x) / eps_x), -128, 127),
+                      jnp.int8)
+    acc, _ = m.apply_id(jax.tree.map(jnp.asarray, t), s_x)
+    got = np.asarray(acc, np.float64) * np.asarray(eps_acc)[None, None, :]
+    ref = np.asarray(ref, np.float64)
+    scale = np.abs(ref).max() + 1e-6
+    cc = np.corrcoef(got.ravel(), ref.ravel())[0, 1]
+    assert cc > 0.98, cc
+    assert np.abs(got - ref).max() / scale < 0.25
+
+
+def test_mamba1_id_decode_matches_prefill():
+    m = QMamba1(d_model=16, d_state=4)
+    p = m.init(jax.random.PRNGKey(4))
+    x = jnp.asarray(RNG.normal(size=(1, 8, 16)) * 0.5, jnp.float32)
+    calib = Calibrator()
+    m.apply_float(p, x, Rep.FP, calib=calib, scope="")
+    ctx = DeployCtx(calib=calib)
+    eps_x = 2 * 4.0 / 255
+    t, eps_acc = m.deploy(ctx, "", jax.tree.map(np.asarray, p), eps_x, 0)
+    t_j = jax.tree.map(jnp.asarray, t)
+    s_x = jnp.asarray(np.clip(np.floor(np.asarray(x) / eps_x), -128, 127),
+                      jnp.int8)
+    full, _ = m.apply_id(t_j, s_x)
+    cache = m.init_cache(1, Rep.ID)
+    outs = []
+    for i in range(8):
+        acc_i, cache = m.apply_id(t_j, s_x[:, i:i + 1], cache=cache)
+        outs.append(np.asarray(acc_i)[0, 0])
+    got = np.stack(outs)
+    ref = np.asarray(full)[0]
+    # islands re-quantize per step; allow a couple of accumulator quanta
+    assert np.abs(got - ref).max() <= 3, np.abs(got - ref).max()

@@ -1,0 +1,60 @@
+"""Configurable cardinality (paper §2.2: 'the smaller C(Z_t), the fewer
+bits'): 4-bit weights on Linear, and the 4-bit-activation CNN where the
+paper's threshold strategy (Eq. 19-20) is at its best (15 thresholds)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.calibrate import Calibrator
+from repro.core.rep import Rep
+from repro.layers.linear import QLinear
+from repro.models.cnn import NemoCNN
+
+RNG = np.random.default_rng(9)
+
+
+@pytest.mark.parametrize("bits", [4, 6, 8])
+def test_linear_wbits_sweep(bits):
+    lin = QLinear(64, 32, n_bits_w=bits)
+    p = jax.tree.map(np.asarray, lin.init(jax.random.PRNGKey(0)))
+    eps_x = 0.03
+    ip, eps_acc = lin.deploy(p, eps_x, 0)
+    qmax = 2 ** (bits - 1) - 1
+    assert ip["w_q"].min() >= -(qmax + 1) and ip["w_q"].max() <= qmax
+    x = RNG.normal(size=(64, 64)).astype(np.float32)
+    s_x = jnp.asarray(np.clip(np.floor(x / eps_x), -128, 127), jnp.int8)
+    acc = np.asarray(lin.apply_id(jax.tree.map(jnp.asarray, ip), s_x))
+    got = acc * eps_acc[None, :]
+    ref = (np.asarray(s_x, np.float64) * eps_x) @ p["w"]
+    # error scales with the weight grid: ~2^(8-bits) coarser than W8
+    err = np.abs(got - ref).max() / (np.abs(ref).max() + 1e-9)
+    budget = {4: 0.25, 6: 0.08, 8: 0.03}[bits]
+    assert err <= budget, (bits, err)
+    cc = np.corrcoef(got.ravel(), ref.ravel())[0, 1]
+    assert cc > {4: 0.97, 6: 0.995, 8: 0.999}[bits]
+
+
+def test_cnn_4bit_thresholds():
+    """4-bit activations: the threshold merge needs only 15 integer
+    thresholds per channel — the paper's sweet spot."""
+    model = NemoCNN(channels=(8, 16), in_channels=3, n_classes=10, img=16,
+                    act_bits=4)
+    p = model.init(jax.random.PRNGKey(1))
+    img = RNG.integers(0, 256, size=(8, 16, 16, 3))
+    x = jnp.asarray(img / 255.0, jnp.float32)
+    s_x = jnp.asarray(img - 128, jnp.int8)
+    calib = Calibrator()
+    y_fp = np.asarray(model.apply_float(p, x, Rep.FP, calib=calib))
+    t = model.deploy(p, calib, bn_mode="thresh")
+    for blk in t["blocks"]:
+        assert blk["th"].shape[-1] == 15  # 2^4 - 1 thresholds
+    y_id = np.asarray(model.apply_id(t, s_x), np.float64) \
+        * t["meta"]["eps_logits"]
+    cc = np.corrcoef(y_id.ravel(), y_fp.ravel())[0, 1]
+    assert cc > 0.95, cc  # 4-bit: coarse but faithful
+    # thresh == intbn within the coarser grid
+    t2 = model.deploy(p, calib, bn_mode="intbn")
+    y_id2 = np.asarray(model.apply_id(t2, s_x), np.float64) \
+        * t2["meta"]["eps_logits"]
+    assert np.corrcoef(y_id.ravel(), y_id2.ravel())[0, 1] > 0.98

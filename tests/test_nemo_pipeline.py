@@ -1,0 +1,134 @@
+"""Paper-faithful pipeline validation on the NEMO CNN (DESIGN.md §7).
+
+Claims reproduced from the paper:
+  (1) FQ forward == FP forward restricted to quantized grids (PACT);
+  (2) QD: quantized BN + hardened weights + Eq. 10 activations track FQ;
+  (3) ID == QD up to the Eq. 14 requantization bound (integer-only loses
+      nothing beyond the stated approximation);
+  (4) the three BN strategies (fold / integer BN / thresholds) agree;
+  (5) the ID path is integer-only: every dot/conv in its jaxpr has
+      integer operands, and all its tables are integer arrays.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.calibrate import Calibrator
+from repro.core.rep import Rep
+from repro.models.cnn import NemoCNN
+
+RNG = np.random.default_rng(3)
+
+
+@pytest.fixture(scope="module")
+def cnn_setup():
+    model = NemoCNN(channels=(8, 16), in_channels=3, n_classes=10, img=16)
+    key = jax.random.PRNGKey(0)
+    p = model.init(key)
+    # make BN stats non-trivial
+    p_np = jax.tree.map(np.asarray, p)
+    for blk in p_np["blocks"]:
+        blk["bn"]["mu"] = RNG.normal(size=blk["bn"]["mu"].shape).astype(np.float32) * 0.05
+        blk["bn"]["sigma"] = (1.0 + 0.3 * RNG.random(blk["bn"]["sigma"].shape)).astype(np.float32)
+        blk["bn"]["gamma"] = (0.7 + 0.6 * RNG.random(blk["bn"]["gamma"].shape)).astype(np.float32)
+        blk["bn"]["beta"] = RNG.normal(size=blk["bn"]["beta"].shape).astype(np.float32) * 0.1
+    p = jax.tree.map(jnp.asarray, p_np)
+    # 8-bit image input (paper §3.7): eps=1/255, zp=-128
+    img_u8 = RNG.integers(0, 256, size=(8, 16, 16, 3))
+    x = jnp.asarray(img_u8 / 255.0, jnp.float32)
+    s_x = jnp.asarray(img_u8 - 128, jnp.int8)
+    calib = Calibrator()
+    y_fp = model.apply_float(p, x, Rep.FP, calib=calib)
+    return model, p, x, s_x, calib, y_fp
+
+
+def test_fq_close_to_fp(cnn_setup):
+    model, p, x, s_x, calib, y_fp = cnn_setup
+    qs = {"beta": [jnp.float32(calib.beta(f"b{i}.act")) for i in range(2)]}
+    y_fq = model.apply_float(p, x, Rep.FQ, qstate=qs)
+    ref = np.asarray(y_fp)
+    got = np.asarray(y_fq)
+    scale = np.abs(ref).max()
+    assert np.abs(got - ref).max() / scale < 0.15
+    cc = np.corrcoef(got.ravel(), ref.ravel())[0, 1]
+    assert cc > 0.99, cc
+
+
+def test_qd_tracks_fq(cnn_setup):
+    model, p, x, s_x, calib, y_fp = cnn_setup
+    p_hard = jax.tree.map(jnp.asarray, model.harden(p))
+    ds = model.qd_state(p, calib)
+    y_qd = model.apply_qd(p_hard, ds, x)
+    qs = {"beta": [jnp.float32(calib.beta(f"b{i}.act")) for i in range(2)]}
+    y_fq = model.apply_float(p, x, Rep.FQ, qstate=qs)
+    ref = np.asarray(y_fq)
+    got = np.asarray(y_qd)
+    scale = np.abs(ref).max()
+    # differences: BN param quantization only
+    assert np.abs(got - ref).max() / scale < 0.1
+    assert np.corrcoef(got.ravel(), ref.ravel())[0, 1] > 0.995
+
+
+@pytest.mark.parametrize("bn_mode", ["fold", "intbn", "thresh"])
+def test_id_matches_qd_within_eq14(cnn_setup, bn_mode):
+    model, p, x, s_x, calib, y_fp = cnn_setup
+    t = model.deploy(p, calib, bn_mode=bn_mode)
+    logits_q = np.asarray(model.apply_id(t, s_x), np.float64)
+    got = logits_q * t["meta"]["eps_logits"]
+    ref = np.asarray(y_fp, np.float64)
+    scale = np.abs(ref).max()
+    assert np.abs(got - ref).max() / scale < 0.2, (
+        bn_mode, np.abs(got - ref).max() / scale)
+    cc = np.corrcoef(got.ravel(), ref.ravel())[0, 1]
+    assert cc > 0.98, (bn_mode, cc)
+
+
+def test_bn_strategies_agree(cnn_setup):
+    model, p, x, s_x, calib, y_fp = cnn_setup
+    outs = {}
+    for mode in ("fold", "intbn", "thresh"):
+        t = model.deploy(p, calib, bn_mode=mode)
+        outs[mode] = np.asarray(model.apply_id(t, s_x), np.float64) \
+            * t["meta"]["eps_logits"]
+    for a in ("fold", "intbn"):
+        d = np.abs(outs[a] - outs["thresh"]).max()
+        scale = np.abs(outs["thresh"]).max()
+        assert d / scale < 0.12, (a, d / scale)
+
+
+def test_id_integer_only(cnn_setup):
+    """Claim (5): machine-check the integer-only property of ID."""
+    model, p, x, s_x, calib, y_fp = cnn_setup
+    t = model.deploy(p, calib, bn_mode="intbn")
+    # all table arrays are integer
+    for leaf in jax.tree.leaves(t):
+        if isinstance(leaf, np.ndarray):
+            assert np.issubdtype(leaf.dtype, np.integer), leaf.dtype
+    jaxpr = jax.make_jaxpr(lambda s: model.apply_id(t, s))(s_x)
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name in ("dot_general", "conv_general_dilated"):
+                for v in eqn.invars:
+                    dt = v.aval.dtype
+                    assert jnp.issubdtype(dt, jnp.integer), (
+                        eqn.primitive.name, dt)
+            for sub in eqn.params.values():
+                if hasattr(sub, "eqns"):
+                    walk(sub)
+                elif isinstance(sub, (list, tuple)):
+                    for s2 in sub:
+                        if hasattr(s2, "jaxpr"):
+                            walk(s2.jaxpr)
+        return True
+
+    walk(jaxpr.jaxpr)
+    # and NO floating-point intermediates at all in the CNN ID path
+    # (CNNs have no §3.8 islands — softmax-free, scan-free)
+    float_eqns = [
+        e for e in jaxpr.jaxpr.eqns
+        if any(jnp.issubdtype(ov.aval.dtype, jnp.floating)
+               for ov in e.outvars)
+    ]
+    assert not float_eqns, [e.primitive.name for e in float_eqns]
