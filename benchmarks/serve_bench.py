@@ -1,0 +1,147 @@
+"""Serving benchmark: continuous-batching engine vs lockstep path.
+
+Measures integer-only decode throughput (tok/s) and time-to-first-token
+for (a) the old fixed-shape lockstep `serve_batch` (sequential batches
+of `slots` requests) and (b) `ServingEngine` on the same uniform
+workload, plus (c) the engine on a ragged workload the lockstep path
+cannot express.  Emits BENCH_serving.json so later PRs can track the
+trajectory.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.launch.serve import deploy_model, serve_batch
+from repro.serving import SchedulerConfig, ServingEngine
+
+
+def bench_lockstep(lm, tables, prompts, gen, slots):
+    """Sequential lockstep batches; TTFT of a request = time until its
+    batch's prefill logits (queueing behind earlier batches included).
+
+    serve_batch jits per call, so this mirrors its loop with SHARED
+    jitted step functions (compiled once, warmed before timing) — the
+    comparison against the engine is then compile-free on both sides.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.rep import Rep
+
+    prefill = jax.jit(lm.prefill)
+    decode = jax.jit(lm.decode_step)
+    n, P = prompts.shape
+    max_len = P + gen
+
+    def serve(batch):
+        caches = lm.init_caches(batch.shape[0], max_len, Rep.ID)
+        logits, caches = prefill(tables, batch, caches)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out = [tok]
+        for i in range(gen - 1):
+            logits, caches = decode(tables, tok, caches, P + i)
+            tok = jnp.argmax(logits[:, 0], axis=-1)[:, None]
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)
+
+    pad = (-n) % slots  # fixed batch shape: pad the tail, count real rows
+    padded = np.concatenate(
+        [prompts, np.zeros((pad, P), prompts.dtype)]) if pad else prompts
+    serve(jnp.asarray(padded[:slots], jnp.int32)).block_until_ready()
+
+    t0 = time.perf_counter()
+    ttfts, done = [], 0
+    for i in range(0, n, slots):
+        real = min(slots, n - i)
+        serve(jnp.asarray(padded[i:i + slots],
+                          jnp.int32)).block_until_ready()
+        # lockstep emits nothing until the whole batch finishes
+        ttfts += [time.perf_counter() - t0] * real
+        done += real * gen
+    wall = time.perf_counter() - t0
+    return {"wall_s": wall, "tok_s": done / wall,
+            "mean_ttft_s": float(np.mean(ttfts))}
+
+
+def bench_engine(lm, tables, workload, slots, max_len, bucket):
+    eng = ServingEngine(
+        lm, tables, n_slots=slots, max_len=max_len,
+        scheduler=SchedulerConfig(prefill_bucket=bucket))
+    # warm THIS engine's jit wrappers (one prefill compile per distinct
+    # prompt length bucket in the workload + the fused decode), then
+    # zero the stats so compile time stays outside the timed window
+    seen = set()
+    for prompt, _ in workload:
+        p = int(np.size(prompt))
+        if p not in seen and p + 2 <= max_len:
+            seen.add(p)
+            eng.submit(prompt, max_new_tokens=2)
+    eng.run_until_drained()
+    eng.reset_stats()
+    for prompt, gen in workload:
+        eng.submit(prompt, max_new_tokens=gen)
+    eng.run_until_drained()
+    s = eng.stats()
+    return {"wall_s": s["wall_s"], "tok_s": s["throughput_tok_s"],
+            "mean_ttft_s": s["mean_ttft_s"],
+            "mean_occupancy": s["mean_occupancy"]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_3_2b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--prefill-bucket", type=int, default=16)
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+
+    max_len = args.prompt_len + args.gen
+    lm, tables = deploy_model(args.arch, reduced=args.reduced,
+                              max_seq=max_len)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(
+        0, lm.cfg.vocab, size=(args.requests, args.prompt_len))
+
+    # warm the lockstep path's compile outside its timed region (each
+    # benched engine warms its own jit wrappers inside bench_engine)
+    serve_batch(lm, tables,
+                np.asarray(prompts[:args.slots], np.int32),
+                args.gen).block_until_ready()
+
+    uniform = [(prompts[i], args.gen) for i in range(args.requests)]
+    ragged = [(prompts[i][: int(rng.integers(
+                  max(1, args.prompt_len // 4), args.prompt_len + 1))],
+               int(rng.integers(1, args.gen + 1)))
+              for i in range(args.requests)]
+
+    result = {
+        "arch": args.arch, "reduced": args.reduced,
+        "requests": args.requests, "slots": args.slots,
+        "prompt_len": args.prompt_len, "gen": args.gen,
+        "lockstep_uniform": bench_lockstep(
+            lm, tables, prompts, args.gen, args.slots),
+        "engine_uniform": bench_engine(
+            lm, tables, uniform, args.slots, max_len,
+            args.prefill_bucket),
+        "engine_ragged": bench_engine(
+            lm, tables, ragged, args.slots, max_len,
+            args.prefill_bucket),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+    print(json.dumps(result, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -85,14 +85,19 @@ def quant_flash_attention_ref(q, k, v, *, score_scale: float,
 
 
 def attention_unfused_ref(q, k, v, *, score_scale: float, eps_ctx: float,
-                          causal: bool = True, q_offset: int = 0):
+                          causal: bool = True, q_offset=0):
     """The model's unfused ID attention (global softmax then one global
-    int8 probability image) — used to bound kernel divergence."""
+    int8 probability image) — used to bound kernel divergence.
+
+    q_offset: scalar, or per-row vector (BH,) mirroring the per-slot
+    decode positions of the serving engine (layers/attention._mask).
+    """
     BH, S_q, hd = q.shape
     s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.int32), k.astype(jnp.int32))
     logits = s.astype(jnp.float32) * score_scale
     if causal:
-        q_pos = q_offset + jnp.arange(S_q)[:, None]
+        off = jnp.asarray(q_offset)
+        q_pos = off[..., None, None] + jnp.arange(S_q)[:, None]
         k_pos = jnp.arange(k.shape[1])[None, :]
         logits = jnp.where(k_pos <= q_pos, logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)

@@ -1,19 +1,21 @@
-"""Integer-only serving entry point: batched prefill + greedy decode on
-the IntegerDeployable representation (the paper's deployment target).
+"""Integer-only serving entry point (the paper's deployment target).
 
-Request batching: fixed-shape batch slots; prompts are right-aligned into
-the slot, decode advances all slots in lockstep (continuous batching is a
-scheduling layer above this step function).  Greedy sampling is argmax on
-int32 logits — no dequantization anywhere (DESIGN.md §2).
+The real serving loop lives in repro.serving.ServingEngine: a
+continuous-batching scheduler over the ID-representation
+prefill/decode_step — slot-pooled KV arena, FCFS admission, fused
+per-slot-position decode, greedy argmax on int32 logits (DESIGN.md
+§Serving).  This module is the thin CLI over it, plus `serve_batch`,
+the original fixed-shape lockstep loop, kept as the parity reference
+(tests/test_serving.py asserts the engine reproduces it token-for-token
+for simultaneous same-length requests).
 
 CPU-scale example:
   PYTHONPATH=src python -m repro.launch.serve --arch granite_3_2b \
-      --reduced --batch 4 --prompt-len 16 --gen 16
+      --reduced --requests 8 --slots 4 --prompt-len 16 --gen 16 --ragged
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +25,7 @@ from repro.configs.base import get_config
 from repro.core.rep import Rep
 from repro.data.synthetic import SyntheticConfig, SyntheticStream
 from repro.models.lm import DecoderLM
+from repro.serving import SchedulerConfig, ServingEngine
 
 
 def deploy_model(arch: str, *, reduced: bool, max_seq: int,
@@ -45,7 +48,12 @@ def deploy_model(arch: str, *, reduced: bool, max_seq: int,
 
 
 def serve_batch(lm, tables, prompts, gen_len: int):
-    """prompts (B, P) int32 -> generated (B, gen_len) int32 (greedy)."""
+    """Lockstep reference: prompts (B, P) int32 -> (B, gen_len) int32.
+
+    All slots prefill together and advance in lockstep at one shared
+    scalar position — the pre-engine serving path, kept as the parity
+    oracle for ServingEngine.
+    """
     B, P = prompts.shape
     max_len = P + gen_len
     caches = lm.init_caches(B, max_len, Rep.ID)
@@ -65,26 +73,47 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite_3_2b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="arena sequence capacity (0: prompt-len + gen)")
+    ap.add_argument("--ragged", action="store_true",
+                    help="vary prompt/gen lengths per request")
+    ap.add_argument("--prefill-bucket", type=int, default=16)
     args = ap.parse_args()
 
-    max_seq = args.prompt_len + args.gen
+    max_len = args.max_len or (args.prompt_len + args.gen)
     lm, tables = deploy_model(args.arch, reduced=args.reduced,
-                              max_seq=max_seq)
-    cfg = lm.cfg
+                              max_seq=max_len)
+    engine = ServingEngine(
+        lm, tables, n_slots=args.slots, max_len=max_len,
+        scheduler=SchedulerConfig(prefill_bucket=args.prefill_bucket))
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len)),
-        jnp.int32)
-    t0 = time.time()
-    gen = serve_batch(lm, tables, prompts, args.gen)
-    dt = time.time() - t0
-    toks = args.batch * args.gen
-    print(f"generated {gen.shape} in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s integer-only)")
-    print(np.asarray(gen[: min(2, args.batch)]))
+    for i in range(args.requests):
+        if args.ragged:
+            # p <= max_len - 1 keeps >= 1 position for generation
+            hi = min(args.prompt_len, max_len - 1)
+            p = int(rng.integers(max(1, min(args.prompt_len // 4, hi)),
+                                 hi + 1))
+            g = int(rng.integers(1, min(args.gen, max_len - p) + 1))
+        else:
+            p, g = args.prompt_len, args.gen
+        engine.submit(rng.integers(0, lm.cfg.vocab, size=(p,)),
+                      max_new_tokens=g)
+        engine.step()  # arrivals interleave with decoding
+    completions = engine.run_until_drained()
+    s = engine.stats()
+    print(f"drained {s['n_completed']} requests / "
+          f"{s['n_generated']} tokens in {s['wall_s']:.2f}s "
+          f"({s['throughput_tok_s']:.1f} tok/s integer-only, "
+          f"mean TTFT {s['mean_ttft_s'] * 1e3:.0f} ms, "
+          f"occupancy {s['mean_occupancy']:.2f})")
+    for c in completions[: min(4, len(completions))]:
+        print(f"  req {c.req_id}: P={c.prompt_len} "
+              f"-> {c.n_generated} toks [{c.finish_reason}] "
+              f"{np.asarray(c.tokens)[:8]}")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,12 @@ offset-correction economics (Eq. 15) applied to attention.
 
 KV cache: int8 images + static eps in ID; model dtype in FP/FQ.  Decode
 (`pos is not None`) updates the cache at one position and masks by index.
+
+Continuous batching (repro.serving): `pos` may be a per-slot vector
+(B,) instead of a scalar — every batch row then decodes at its *own*
+sequence offset (ragged positions).  RoPE gather, causal masking, and
+the one-hot cache write all broadcast the per-row position; the math at
+each row is identical to the scalar-pos path at that row's offset.
 """
 from __future__ import annotations
 
@@ -111,8 +117,7 @@ class QAttention:
             q = hint(q, "act_bhsd")  # sequence-sharded cache layout
         rot, cos, sin = rope_tables_fp(hd, self.max_seq, self.rope_base,
                                        self.rope_fraction)
-        positions = (jnp.arange(S) if pos is None
-                     else pos + jnp.arange(S))
+        positions = _positions(S, pos)
         q = apply_rope_fp(q, cos, sin, positions, rot)
         k = apply_rope_fp(k, cos, sin, positions, rot)
 
@@ -212,7 +217,7 @@ class QAttention:
             q = hint(q, "act_bhsd")
         rot, cos_q, sin_q = rope_tables_int(hd, self.max_seq, self.rope_base,
                                             self.rope_fraction)
-        positions = (jnp.arange(S) if pos is None else pos + jnp.arange(S))
+        positions = _positions(S, pos)
         q = apply_rope_int(q, cos_q, sin_q, positions, rot)
         k = apply_rope_int(k, cos_q, sin_q, positions, rot)
 
@@ -270,7 +275,7 @@ class QAttention:
         q32 = q.astype(jnp.int32)
         k_blocks = kh.reshape(B, H, n_blk, blk, hd).transpose(2, 0, 1, 3, 4)
         v_blocks = vh.reshape(B, H, n_blk, blk, hd).transpose(2, 0, 1, 3, 4)
-        q_pos = (jnp.arange(S) if pos is None else pos + jnp.arange(S))
+        q_pos = _positions(S, pos)
 
         def body(carry, xs):
             m_run, l_run, acc = carry
@@ -279,7 +284,10 @@ class QAttention:
                            preferred_element_type=jnp.int32)
             logits = s.astype(jnp.float32) * t["score_scale"]
             k_pos = j * blk + jnp.arange(blk)
-            mask = k_pos[None, :] <= q_pos[:, None]
+            if q_pos.ndim == 2:  # per-slot positions -> (B,1,S,blk)
+                mask = k_pos[None, None, None, :] <= q_pos[:, None, :, None]
+            else:
+                mask = k_pos[None, :] <= q_pos[:, None]
             logits = jnp.where(mask, logits, NEG_INF)
             m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
             p = jnp.exp(logits - m_new[..., None])
@@ -306,9 +314,9 @@ class QAttention:
         return apply_rqt(acc_int, t["ctx_rqt"])
 
     # ------------------------------------------------------------------
-    def init_cache(self, B: int, max_len: int, rep: Rep, dtype=jnp.bfloat16):
+    def init_cache(self, B: int, max_len: int, rep: Rep, dtype=None):
         K, hd = self.n_kv_heads, self.head_dim
-        dt = jnp.int8 if rep is Rep.ID else dtype
+        dt = jnp.int8 if rep is Rep.ID else (dtype or jnp.bfloat16)
         return {
             "k": jnp.zeros((B, K, max_len, hd), dt),
             "v": jnp.zeros((B, K, max_len, hd), dt),
@@ -323,6 +331,18 @@ class QAttention:
         }
 
 
+def _positions(S: int, pos):
+    """Query positions for S new tokens at offset `pos`.
+
+    pos None -> (S,) [prefill at 0]; scalar -> (S,); per-slot vector
+    (B,) -> (B, S) [continuous-batching decode, ragged offsets].
+    """
+    if pos is None:
+        return jnp.arange(S)
+    pos = jnp.asarray(pos)
+    return pos[..., None] + jnp.arange(S)
+
+
 def _cache_write(cache, new, pos):
     """Write `new` (B,K,S,hd) at seq offset `pos` into `cache` (B,K,T,hd).
 
@@ -331,12 +351,23 @@ def _cache_write(cache, new, pos):
     (dynamic_update_slice at a traced offset forces an involuntary full
     rematerialization — §Perf hillclimb A, iteration 2).  Multi-token
     writes (prefill) keep dynamic_update_slice (offset is the static 0).
+
+    A per-slot `pos` vector (B,) writes each batch row at its own offset
+    (one-hot per row; dynamic_update_slice has no per-row offsets).
     """
     from repro.launch import variants
 
     S, T = new.shape[2], cache.shape[2]
     if S == T:
         return new
+    pos_v = None if pos is None else jnp.asarray(pos)
+    if pos_v is not None and pos_v.ndim == 1:
+        if S != 1:
+            raise NotImplementedError(
+                "per-slot cache writes are single-token (decode) only")
+        oh = (jnp.arange(T)[None, :] == pos_v[:, None])
+        oh = oh.astype(cache.dtype)[:, None, :, None]       # (B,1,T,1)
+        return cache * (1 - oh) + new.astype(cache.dtype) * oh
     if S == 1 and variants.get("kv_update") == "onehot":
         oh = (jnp.arange(T) == pos).astype(cache.dtype)[None, None, :, None]
         return cache * (1 - oh) + new.astype(cache.dtype) * oh
@@ -344,19 +375,18 @@ def _cache_write(cache, new, pos):
 
 
 def _bool_mask(S: int, T: int, pos):
-    """Causal keep-mask as booleans (integer-softmax island)."""
-    i = (jnp.arange(S) if pos is None else pos + jnp.arange(S))[:, None]
-    j = jnp.arange(T)[None, :]
-    return j <= i
+    """Causal keep-mask as booleans (integer-softmax island).
+
+    (S, T) for shared positions; (B, 1, S, T) for per-slot `pos` (B,) —
+    broadcasts against (B, H, S, T) scores either way.
+    """
+    i = _positions(S, pos)
+    j = jnp.arange(T)
+    if i.ndim == 2:
+        return j[None, None, None, :] <= i[:, None, :, None]
+    return j[None, :] <= i[:, None]
 
 
 def _mask(S: int, T: int, pos):
     """Causal (prefill) or length (decode) mask, f32 (island-side)."""
-    if pos is None and S == T:
-        i = jnp.arange(S)[:, None]
-        j = jnp.arange(T)[None, :]
-        return jnp.where(j <= i, 0.0, NEG_INF).astype(jnp.float32)
-    # decode: S new tokens at offset pos into a T-slot cache
-    i = pos + jnp.arange(S)[:, None]
-    j = jnp.arange(T)[None, :]
-    return jnp.where(j <= i, 0.0, NEG_INF).astype(jnp.float32)
+    return jnp.where(_bool_mask(S, T, pos), 0.0, NEG_INF).astype(jnp.float32)

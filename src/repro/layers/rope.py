@@ -61,10 +61,20 @@ def _merge(y1, y2, x_pass):
     return jnp.concatenate([y, x_pass], axis=-1) if x_pass.shape[-1] else y
 
 
+def _gather_trig(cos, sin, positions, dtype):
+    """positions (S,) -> trig (S, rot/2); positions (B, S) -> (B, 1, S,
+    rot/2) so per-slot decode positions (continuous batching) broadcast
+    over the head axis of (B, H, S, hd) activations."""
+    c = jnp.take(cos, positions, axis=0).astype(dtype)
+    s = jnp.take(sin, positions, axis=0).astype(dtype)
+    if positions.ndim == 2:
+        c, s = c[:, None], s[:, None]
+    return c, s
+
+
 def apply_rope_fp(x, cos, sin, positions, rot):
-    """x: (..., S, head_dim) float; positions: (S,) or (..., S) int."""
-    c = jnp.take(cos, positions, axis=0).astype(x.dtype)  # (S, rot/2)
-    s = jnp.take(sin, positions, axis=0).astype(x.dtype)
+    """x: (..., S, head_dim) float; positions: (S,) or (B, S) int."""
+    c, s = _gather_trig(cos, sin, positions, x.dtype)
     x1, x2, x_pass = _split(x, rot)
     y1 = x1 * c - x2 * s
     y2 = x1 * s + x2 * c
@@ -74,11 +84,11 @@ def apply_rope_fp(x, cos, sin, positions, rot):
 def apply_rope_int(s_x, cos_q, sin_q, positions, rot):
     """s_x: (..., S, head_dim) int8 (zp=0) -> int8, same quantum.
 
+    positions: (S,) shared, or (B, S) per-slot (continuous batching).
     Accumulator: |x1*c + x2*s| <= 2*127*2^TRIG_BITS < 2^22 (int32-safe);
     exact power-of-two requant with round-to-nearest (+2^(B-1) >> B).
     """
-    c = jnp.take(cos_q, positions, axis=0).astype(jnp.int32)
-    s = jnp.take(sin_q, positions, axis=0).astype(jnp.int32)
+    c, s = _gather_trig(cos_q, sin_q, positions, jnp.int32)
     x1, x2, x_pass = _split(s_x.astype(jnp.int32), rot)
     half = jnp.int32(1 << (TRIG_BITS - 1))
     y1 = jnp.right_shift(x1 * c - x2 * s + half, TRIG_BITS)

@@ -375,9 +375,9 @@ class QMamba1:
                      if cache is not None else None)
         return out, new_cache
 
-    def init_cache(self, B: int, rep: Rep, dtype=jnp.bfloat16):
+    def init_cache(self, B: int, rep: Rep, dtype=None):
         di, ds = self.d_inner, self.d_state
-        dt = jnp.int8 if rep is Rep.ID else dtype
+        dt = jnp.int8 if rep is Rep.ID else (dtype or jnp.bfloat16)
         return {
             "conv": jnp.zeros((B, self.conv_k - 1, di), dt),
             "h": jnp.zeros((B, di, ds), jnp.float32),
@@ -627,8 +627,8 @@ class QMamba2:
                      if cache is not None else None)
         return out, new_cache
 
-    def init_cache(self, B: int, rep: Rep, dtype=jnp.bfloat16):
-        dt = jnp.int8 if rep is Rep.ID else dtype
+    def init_cache(self, B: int, rep: Rep, dtype=None):
+        dt = jnp.int8 if rep is Rep.ID else (dtype or jnp.bfloat16)
         return {
             "conv": jnp.zeros((B, self.conv_k - 1, self.d_conv_in), dt),
             "h": jnp.zeros((B, self.n_heads, self.head_dim, self.d_state),

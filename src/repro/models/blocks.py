@@ -187,7 +187,7 @@ class DenseBlock:
         s_out = subs["add2"].apply_id(t["add2"], s_r, m_acc)
         return s_out, cache
 
-    def init_cache(self, B, max_len, rep, dtype=jnp.bfloat16):
+    def init_cache(self, B, max_len, rep, dtype=None):
         return self._subs()["attn"].init_cache(B, max_len, rep, dtype)
 
 
@@ -266,7 +266,7 @@ class MambaBlock:
         s_out = subs["add"].apply_id(t["add"], s_x, acc)
         return s_out, cache
 
-    def init_cache(self, B, max_len, rep, dtype=jnp.bfloat16):
+    def init_cache(self, B, max_len, rep, dtype=None):
         return self._subs()["core"].init_cache(B, rep, dtype)
 
 
@@ -344,5 +344,5 @@ class SharedAttnBlock:
         s_out = subs["add"].apply_id(t["add"], s_x, acc)
         return s_out, cache
 
-    def init_cache(self, B, max_len, rep, dtype=jnp.bfloat16):
+    def init_cache(self, B, max_len, rep, dtype=None):
         return self._subs()["attn"].init_cache(B, max_len, rep, dtype)

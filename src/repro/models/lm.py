@@ -472,20 +472,46 @@ class DecoderLM:
             logits = jnp.where(mask, logits, jnp.int32(-(2 ** 30)))
         return logits
 
-    def prefill(self, t, batch, caches):
-        """ID prefill: fill caches at pos 0, return last-token logits."""
+    def prefill(self, t, batch, caches, *, last_only: bool = True,
+                last_index=None):
+        """ID prefill: fill caches at pos 0, return last-token logits.
+
+        last_index (traced scalar) gathers the hidden state at that
+        sequence position before the vocab projection — the serving
+        engine's bucketed prefill right-pads prompts to a shape bucket
+        and reads the logits of the TRUE last prompt token without
+        materializing (B, bucket, V) logits.  last_only=False returns
+        logits for every position instead.
+        """
         x = self.embed_in_id(t, batch)
         x, caches, _ = self.apply(t, x, Rep.ID, caches=caches, pos=0)
-        return self.logits_id(t, x[:, -1:, :]), caches
+        if last_index is not None:
+            h = jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1)
+        else:
+            h = x[:, -1:, :] if last_only else x
+        return self.logits_id(t, h), caches
 
     def decode_step(self, t, token, caches, pos):
-        """ID single-token decode. token (B,1) -> int32 logits (B,1,V)."""
+        """ID single-token decode. token (B,1) -> int32 logits (B,1,V).
+
+        pos: scalar (lockstep batch) or per-slot vector (B,) — the
+        continuous-batching engine advances each slot at its own offset.
+        """
         x = self.embed_in_id(t, token)
         x, caches, _ = self.apply(t, x, Rep.ID, caches=caches, pos=pos)
         return self.logits_id(t, x), caches
 
-    def init_caches(self, B: int, max_len: int, rep: Rep,
-                    dtype=jnp.bfloat16):
+    def init_caches(self, B: int, max_len: int, rep: Rep, dtype=None):
+        """Allocate the cache pytree for `B` slots of length `max_len`.
+
+        dtype None resolves by representation: int8 for Rep.ID (KV
+        caches hold integer *images*; a float KV cache would silently
+        break the integer-only serving invariant) and bfloat16 for
+        FP/FQ.  SSM recurrent `h` state stays f32 in all reps — that is
+        the documented scan float island (DESIGN.md), not a KV cache.
+        """
+        if dtype is None:
+            dtype = jnp.int8 if rep is Rep.ID else jnp.bfloat16
         caches = []
         for kind, tpl, n in self.plan():
             if kind in ("dense", "mamba"):

@@ -1,0 +1,134 @@
+"""Slot-pooled KV-cache arena for continuous batching.
+
+One fixed-shape cache pytree (`n_slots` batch rows x `max_len`
+positions) is allocated ONCE at engine construction and never
+reallocated — every jit'd decode step sees the same shapes, so there is
+exactly one decode compilation for the lifetime of the engine.  Slots
+are leased to admitted requests and recycled on completion; a slot's
+stale contents after release are never visible because per-slot causal
+masking (layers/attention._mask with a position *vector*) hides every
+position a new tenant has not yet written.
+
+Prefill runs at batch 1 into a scratch cache of identical per-slot
+shape, then is scattered into the arena at the leased slot's batch row.
+The batch axis of each cache leaf is discovered structurally (the axis
+whose extent tracks B between two `eval_shape` templates), so the
+scatter works for every cache layout the model zoo produces:
+attention KV (n_layers, B, K, T, hd), paired blocks (n_layers, 2, B,
+...), SSM recurrent state (n_layers, B, ...), and hybrid groups.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rep import Rep
+
+
+def float_cache_leaves(caches) -> List[Tuple[str, Any]]:
+    """(path, dtype) of every floating-point leaf in a cache pytree.
+
+    The integer-only serving invariant: an ID-representation run must
+    keep KV caches as int8 images.  The single sanctioned exception is
+    the SSM recurrent `h` state — the scan float island (DESIGN.md
+    §Serving), which is per-slot state, not a KV cache.
+    """
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            out.append((jax.tree_util.keystr(path), leaf.dtype))
+    return out
+
+
+def assert_integer_caches(caches, *, allow_ssm_state: bool = False):
+    """Raise if an ID cache pytree holds float leaves (see above)."""
+    bad = float_cache_leaves(caches)
+    if allow_ssm_state:
+        bad = [(p, d) for p, d in bad if "'h'" not in p]
+    if bad:
+        raise AssertionError(
+            "float leaves in ID serving caches (integer-only invariant "
+            f"violated): {bad}")
+
+
+class SlotArena:
+    """Owns the cache arena + slot lifecycle (free -> leased -> free)."""
+
+    def __init__(self, lm, n_slots: int, max_len: int):
+        if max_len > lm.max_seq:
+            raise ValueError(
+                f"max_len {max_len} exceeds model max_seq {lm.max_seq}")
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.caches = lm.init_caches(n_slots, max_len, Rep.ID)
+
+        # Discover each leaf's batch axis: the one axis whose extent
+        # differs between a B=1 and a B=2 template (shape-only, no
+        # allocation).
+        s1 = jax.eval_shape(lambda: lm.init_caches(1, max_len, Rep.ID))
+        s2 = jax.eval_shape(lambda: lm.init_caches(2, max_len, Rep.ID))
+        self._treedef = jax.tree.structure(s1)
+        axes = []
+        for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+            diff = [i for i, (u, v) in enumerate(zip(a.shape, b.shape))
+                    if u != v]
+            if len(diff) != 1:
+                raise ValueError(
+                    f"cannot identify batch axis: {a.shape} vs {b.shape}")
+            axes.append(diff[0])
+        self._batch_axes = tuple(axes)
+
+        def _scatter(arena, single, slot):
+            la = jax.tree.leaves(arena)
+            ls = jax.tree.leaves(single)
+            out = [jax.lax.dynamic_update_slice_in_dim(x, y, slot, axis=ax)
+                   for x, y, ax in zip(la, ls, self._batch_axes)]
+            return jax.tree.unflatten(self._treedef, out)
+
+        self._scatter = jax.jit(_scatter)
+
+        # slot bookkeeping (host-side)
+        self._free = list(range(n_slots - 1, -1, -1))  # pop() -> slot 0 first
+        self.lengths = np.zeros(n_slots, np.int32)     # written positions
+        self.owner: List[Optional[int]] = [None] * n_slots
+
+    # -- lifecycle ------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_leased(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def alloc(self, req_id: int, prompt_len: int) -> int:
+        """Lease a free slot to `req_id`; returns the slot index."""
+        if not self._free:
+            raise RuntimeError("no free slots")
+        slot = self._free.pop()
+        self.owner[slot] = req_id
+        self.lengths[slot] = prompt_len
+        return slot
+
+    def release(self, slot: int):
+        """Recycle a slot.  Contents stay stale in the arena — masked
+        until the next tenant's prefill/decode overwrites them."""
+        if self.owner[slot] is None:
+            raise RuntimeError(f"slot {slot} is not leased")
+        self.owner[slot] = None
+        self.lengths[slot] = 0
+        self._free.append(slot)
+
+    # -- cache plumbing -------------------------------------------------
+    def write_slot(self, slot: int, single_caches):
+        """Scatter a B=1 cache pytree (a finished prefill) into the
+        arena at `slot`'s batch row.  One jit'd scatter, slot traced —
+        no per-slot recompilation."""
+        self.caches = self._scatter(self.caches, single_caches,
+                                    jnp.int32(slot))
+
+    def advance(self, slot: int, n: int = 1):
+        self.lengths[slot] += n

@@ -1,0 +1,228 @@
+"""`ServingEngine`: continuous batching over the integer-only model.
+
+The engine owns a fixed-shape slot arena (cache.SlotArena) and drives
+the ID-representation `prefill` / `decode_step` of models/lm.py:
+
+  submit()            enqueue a Request (FCFS)
+  step()              one scheduler iteration:
+                        1. admit pending requests into free slots —
+                           bucketed B=1 prefill, scatter into the arena,
+                           first token from the true-last-prompt logits
+                        2. one FUSED decode step over the whole arena
+                           with a per-slot position vector; per-slot
+                           done-masking is host-side (finished slots are
+                           released and their rows become don't-cares)
+  run_until_drained() step until queue + slots are empty
+
+Greedy sampling is argmax on int32 logits — no dequantization anywhere
+(the paper's integer-only deployment invariant; asserted on the cache
+arena at construction).  Requests stream tokens through an optional
+`on_token` callback the moment they are decoded.
+
+Decode rows of free slots compute garbage that is never read; for pure
+dense/ssm/hybrid families rows are independent so active slots are
+bit-exact with the lockstep path.  MoE capacity routing couples rows
+(a garbage row can compete for expert capacity) — see DESIGN.md
+§Serving for the caveat.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rep import Rep
+from repro.serving.cache import SlotArena, assert_integer_caches
+from repro.serving.request import (
+    FINISH_LENGTH, FINISH_MAX_LEN, FINISH_STOP, Completion, Request,
+    RequestState,
+)
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+class ServingEngine:
+    def __init__(self, lm, tables, *, n_slots: int = 8, max_len: int = 256,
+                 scheduler: Optional[SchedulerConfig] = None,
+                 on_token: Optional[Callable[[int, int], None]] = None):
+        if lm.cfg.input_mode != "tokens":
+            raise ValueError("ServingEngine serves token LMs "
+                             f"(input_mode={lm.cfg.input_mode!r})")
+        self.lm = lm
+        self.tables = tables
+        self.arena = SlotArena(lm, n_slots, max_len)
+        assert_integer_caches(
+            self.arena.caches,
+            allow_ssm_state=lm.cfg.family in ("ssm", "hybrid"))
+        self.sched = Scheduler(scheduler or SchedulerConfig(), max_len)
+        self.on_token = on_token
+
+        self.active: Dict[int, RequestState] = {}   # slot -> state
+        self.completed: List[Completion] = []
+        self._next_id = 0
+
+        self._decode = jax.jit(lm.decode_step)
+
+        def _prefill_one(t, prompt, last_index):
+            caches = lm.init_caches(1, max_len, Rep.ID)
+            return lm.prefill(t, prompt, caches, last_index=last_index)
+
+        # compiles once per prompt-shape bucket (scheduler.bucket_len)
+        self._prefill = jax.jit(_prefill_one)
+        # Bucket-padded prefill is exact only when batch rows/positions
+        # are causally independent: attention hides padded positions by
+        # masking.  MoE capacity routing mixes tokens (padded tokens
+        # would compete for expert capacity) and SSM/hybrid recurrent
+        # conv/scan state integrates every prefilled position — those
+        # families prefill at exact prompt length (one compile per
+        # distinct length) instead.  DESIGN.md §Serving.
+        self._bucketed_prefill = lm.cfg.family == "dense"
+
+        # run statistics
+        self._steps = 0
+        self._occupancy_sum = 0.0
+        self._n_generated = 0
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # -- submission -----------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 16,
+               stop_token: Optional[int] = None) -> int:
+        """Enqueue a request; returns its req_id.  `prompt` may be a
+        token array or an already-built Request."""
+        req = (prompt if isinstance(prompt, Request)
+               else Request(prompt, max_new_tokens, stop_token))
+        req.req_id = self._next_id
+        self._next_id += 1
+        req.arrival_time = time.perf_counter()
+        self.sched.submit(req)
+        return req.req_id
+
+    # -- one scheduler iteration ---------------------------------------
+    def step(self) -> bool:
+        """Admit + fused-decode once.  Returns False if idle."""
+        if self._t_first is None:
+            self._t_first = time.perf_counter()
+        progressed = False
+
+        for req in self.sched.admit(self.arena.n_free):
+            self._admit(req)
+            progressed = True
+
+        self._occupancy_sum += self.arena.n_leased / self.arena.n_slots
+        self._steps += 1
+
+        if self.active:
+            progressed = True
+            B = self.arena.n_slots
+            toks = np.zeros((B, 1), np.int32)
+            pos = np.zeros((B,), np.int32)
+            for slot, st in self.active.items():
+                toks[slot, 0] = st.last_token
+                pos[slot] = st.pos
+            logits, self.arena.caches = self._decode(
+                self.tables, jnp.asarray(toks), self.arena.caches,
+                jnp.asarray(pos))
+            nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+            now = time.perf_counter()
+            for slot in list(self.active):
+                st = self.active[slot]
+                tok = int(nxt[slot])
+                st.tokens.append(tok)
+                st.last_token = tok
+                st.pos += 1
+                self.arena.advance(slot)
+                self._emit(st.request, tok)
+                self._maybe_finish(st, now)
+
+        self._t_last = time.perf_counter()
+        return progressed
+
+    def run_until_drained(self, max_steps: int = 1_000_000
+                          ) -> List[Completion]:
+        """Step until the queue and every slot are empty."""
+        steps = 0
+        while self.sched.n_pending or self.active:
+            if steps >= max_steps:
+                raise RuntimeError(f"not drained after {max_steps} steps")
+            self.step()
+            steps += 1
+        return list(self.completed)
+
+    # -- internals ------------------------------------------------------
+    def _admit(self, req: Request):
+        """Prefill `req` at batch 1 (bucketed shape) and lease a slot."""
+        slot = self.arena.alloc(req.req_id, req.prompt_len)
+        P = req.prompt_len
+        Pb = self.sched.bucket_len(P) if self._bucketed_prefill else P
+        padded = np.zeros((1, Pb), np.int32)
+        padded[0, :P] = req.prompt
+        # first token: greedy on the TRUE last prompt position (padded
+        # positions after it are causally invisible to it)
+        logits, single = self._prefill(self.tables, jnp.asarray(padded),
+                                       jnp.int32(P - 1))
+        first = int(jnp.argmax(logits[0, 0]))
+        self.arena.write_slot(slot, single)
+        now = time.perf_counter()
+        st = RequestState(request=req, slot=slot, tokens=[first],
+                          last_token=first, pos=P, first_token_time=now)
+        self.active[slot] = st
+        self._emit(req, first)
+        self._maybe_finish(st, now)
+
+    def _emit(self, req: Request, tok: int):
+        self._n_generated += 1
+        if self.on_token is not None:
+            self.on_token(req.req_id, tok)
+
+    def _maybe_finish(self, st: RequestState, now: float):
+        req = st.request
+        reason = None
+        if req.stop_token is not None and st.last_token == req.stop_token:
+            reason = FINISH_STOP
+        elif len(st.tokens) >= req.max_new_tokens:
+            reason = FINISH_LENGTH
+        elif st.pos >= self.arena.max_len:
+            reason = FINISH_MAX_LEN  # unreachable when submit() validates
+        if reason is None:
+            return
+        self.completed.append(Completion(
+            req_id=req.req_id, prompt_len=req.prompt_len,
+            tokens=list(st.tokens), finish_reason=reason,
+            arrival_time=req.arrival_time,
+            first_token_time=st.first_token_time, finish_time=now))
+        del self.active[st.slot]
+        self.arena.release(st.slot)
+
+    # -- statistics -----------------------------------------------------
+    def reset_stats(self):
+        """Zero run statistics and the completion log (e.g. after a
+        warmup workload that pre-compiled the jit'd steps).  Requires
+        an idle engine — in-flight state would skew the next window."""
+        if self.sched.n_pending or self.active:
+            raise RuntimeError("reset_stats on a non-idle engine")
+        self.completed.clear()
+        self._steps = 0
+        self._occupancy_sum = 0.0
+        self._n_generated = 0
+        self._t_first = None
+        self._t_last = None
+
+    def stats(self) -> dict:
+        wall = ((self._t_last - self._t_first)
+                if self._t_first is not None and self._t_last is not None
+                else 0.0)
+        ttfts = [c.ttft for c in self.completed]
+        return {
+            "n_completed": len(self.completed),
+            "n_generated": self._n_generated,
+            "steps": self._steps,
+            "wall_s": wall,
+            "throughput_tok_s": (self._n_generated / wall) if wall else 0.0,
+            "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "max_ttft_s": float(np.max(ttfts)) if ttfts else 0.0,
+            "mean_occupancy": (self._occupancy_sum / self._steps
+                               if self._steps else 0.0),
+        }

@@ -1,0 +1,84 @@
+"""Request / response contract for the continuous-batching engine.
+
+A `Request` is the unit of admission: one prompt, a generation budget,
+and an optional stop token.  The engine stamps `req_id` and
+`arrival_time` at submit().  A `Completion` is the terminal record —
+all timing fields are host wall-clock (time.perf_counter) stamps so
+TTFT / latency are directly comparable across requests within one run
+(DESIGN.md §Serving).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+FINISH_STOP = "stop"        # generated the request's stop token
+FINISH_LENGTH = "length"    # hit max_new_tokens
+FINISH_MAX_LEN = "max_len"  # hit the arena's sequence capacity (defensive)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (prompt tokens + budget)."""
+
+    prompt: np.ndarray              # (P,) int32 token ids
+    max_new_tokens: int
+    stop_token: Optional[int] = None
+    req_id: int = -1                # stamped by ServingEngine.submit()
+    arrival_time: float = 0.0       # stamped by ServingEngine.submit()
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size < 1:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.size)
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Engine-internal per-slot decode state (one active request).
+
+    `pos` is the next cache write position: always prompt_len +
+    len(tokens) — the slot's KV cache holds the prompt at [0, P) and
+    generated tokens at [P, pos).
+    """
+
+    request: Request
+    slot: int
+    tokens: List[int]
+    last_token: int
+    pos: int
+    first_token_time: float
+
+
+@dataclasses.dataclass
+class Completion:
+    """Terminal record for a drained request."""
+
+    req_id: int
+    prompt_len: int
+    tokens: List[int]               # generated ids (incl. stop token)
+    finish_reason: str              # FINISH_STOP | FINISH_LENGTH | FINISH_MAX_LEN
+    arrival_time: float
+    first_token_time: float
+    finish_time: float
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.tokens)
+
+    @property
+    def ttft(self) -> float:
+        """Time-to-first-token (queueing + prefill), seconds."""
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.arrival_time

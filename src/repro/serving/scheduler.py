@@ -1,0 +1,78 @@
+"""Admission / iteration scheduler for the continuous-batching engine.
+
+Each engine step the scheduler decides two things (DESIGN.md §Serving):
+
+  admission — which pending requests to prefill into free slots this
+  step.  Policy: FCFS by arrival, up to `max_prefills_per_step` (bounds
+  per-step prefill latency so active decodes are not starved — the
+  unified prefill+decode batch idea from the lmdeploy/turbomind
+  decoder, specialized to per-slot prefill + fused decode).
+
+  iteration — every leased slot advances one token through a single
+  fused decode step with a per-slot position vector; completed slots
+  are recycled the same step.
+
+Prompts are right-padded to a shape *bucket* (`prefill_bucket`
+multiple) before prefill, so the number of distinct prefill
+compilations is bounded by max_len / prefill_bucket regardless of how
+ragged the workload's prompt lengths are.  Padding is exact for
+causally masked (dense-family) prefill: padded positions sit strictly
+after the true last token, masking hides them from every real
+position, and the first decode writes over them.  The engine disables
+bucketing for families whose prefill state integrates every position
+(MoE routing, SSM/hybrid recurrences) — see DESIGN.md §Serving.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, List
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_prefills_per_step: int = 2   # admission cap per engine step
+    prefill_bucket: int = 16         # prompt-shape bucket (compile bound)
+
+
+class Scheduler:
+    """FCFS admission queue + prefill shape bucketing."""
+
+    def __init__(self, cfg: SchedulerConfig, max_len: int):
+        if cfg.prefill_bucket < 1:
+            raise ValueError(f"prefill_bucket must be >= 1, "
+                             f"got {cfg.prefill_bucket}")
+        if cfg.max_prefills_per_step < 1:
+            raise ValueError(f"max_prefills_per_step must be >= 1, "
+                             f"got {cfg.max_prefills_per_step}")
+        self.cfg = cfg
+        self.max_len = max_len
+        self.pending: Deque[Request] = collections.deque()
+
+    # -- queue ----------------------------------------------------------
+    def submit(self, req: Request):
+        if req.prompt_len + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request needs {req.prompt_len + req.max_new_tokens} "
+                f"positions but the arena holds {self.max_len}")
+        self.pending.append(req)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self.pending)
+
+    # -- admission ------------------------------------------------------
+    def admit(self, free_slots: int) -> List[Request]:
+        """Pop the requests to prefill this step (FCFS)."""
+        n = min(free_slots, self.cfg.max_prefills_per_step,
+                len(self.pending))
+        return [self.pending.popleft() for _ in range(n)]
+
+    # -- shape bucketing ------------------------------------------------
+    def bucket_len(self, prompt_len: int) -> int:
+        """Padded prefill length for a prompt: next bucket multiple,
+        capped at the arena's sequence capacity."""
+        b = self.cfg.prefill_bucket
+        return min(-(-prompt_len // b) * b, self.max_len)

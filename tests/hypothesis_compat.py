@@ -1,0 +1,36 @@
+"""Optional-dependency shim for hypothesis.
+
+Tier-1 must collect and pass without the optional `hypothesis` extra
+(ISSUE 1 satellite).  Property tests import `given`/`settings`/`st`
+from here: with hypothesis installed they run as normal property tests;
+without it they collect as skips, and the plain (non-property) tests in
+the same module still run instead of the whole module dying at import.
+"""
+try:
+    from hypothesis import assume, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - the no-extra CI leg
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed (optional extra)")(f)
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    def assume(condition):
+        return bool(condition)
+
+    class _AnyStrategy:
+        """Stand-in for `strategies`: every attribute is a no-op factory
+        (the decorated test is skipped before any strategy is drawn)."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

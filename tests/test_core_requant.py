@@ -12,7 +12,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 import jax.numpy as jnp
 
@@ -70,7 +70,7 @@ def test_eq13_tracks_ideal_rescale(eps_in, eps_out, data):
 def test_staged_within_one_quantum_of_pure(eps_out, ratio, data):
     """((q>>s0)*m)>>(d-s0) vs floor(q*m/2^d): differ by <= 1 (pre-clip and
     output clip aside)."""
-    from hypothesis import assume
+    from hypothesis_compat import assume
     eps_in = eps_out * ratio  # down-scaling sites (d >= 0)
     acc_bound = 1 << 28  # forces staging when m is large
     q = np.asarray(

@@ -1,0 +1,222 @@
+"""Continuous-batching serving engine (repro.serving) tests.
+
+Acceptance (ISSUE 1): lockstep parity token-for-token; a ragged
+workload (>= 8 requests, >= 3 distinct prompt lengths, staggered
+arrivals, slot reuse) drains completely in the ID representation with
+zero float tensors in caches or logits.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.rep import Rep
+from repro.launch.serve import deploy_model, serve_batch
+from repro.serving import (
+    SchedulerConfig, ServingEngine, SlotArena, assert_integer_caches,
+    float_cache_leaves,
+)
+
+MAX_LEN = 40
+
+
+@pytest.fixture(scope="module")
+def deployed():
+    return deploy_model("granite_3_2b", reduced=True, max_seq=MAX_LEN)
+
+
+# ---------------------------------------------------------------------
+# per-slot position primitives (no model needed)
+# ---------------------------------------------------------------------
+def test_mask_vector_matches_scalar_rows():
+    from repro.layers.attention import _bool_mask, _mask
+
+    T = 12
+    pos = jnp.asarray([0, 3, 7, 11])
+    mv = _mask(1, T, pos)                      # (B,1,1,T)
+    bv = _bool_mask(1, T, pos)
+    assert mv.shape == (4, 1, 1, T)
+    for b, p in enumerate([0, 3, 7, 11]):
+        ms = _mask(1, T, p)                    # (1,T)
+        assert np.array_equal(np.asarray(mv[b, 0]), np.asarray(ms))
+        assert np.array_equal(np.asarray(bv[b, 0]),
+                              np.asarray(_bool_mask(1, T, p)))
+
+
+def test_cache_write_per_slot_offsets():
+    from repro.layers.attention import _cache_write
+
+    B, K, T, hd = 4, 2, 10, 3
+    cache = jnp.zeros((B, K, T, hd), jnp.int8)
+    new = jnp.arange(1, B + 1, dtype=jnp.int8).reshape(B, 1, 1, 1)
+    new = jnp.broadcast_to(new, (B, K, 1, hd))
+    pos = jnp.asarray([0, 2, 5, 9])
+    out = np.asarray(_cache_write(cache, new, pos))
+    for b, p in enumerate([0, 2, 5, 9]):
+        assert (out[b, :, p] == b + 1).all()
+        rest = np.delete(out[b], p, axis=1)
+        assert (rest == 0).all()
+
+
+def test_rope_vector_positions_match_scalar():
+    from repro.layers.rope import apply_rope_int, rope_tables_int
+
+    hd, B, H = 8, 3, 2
+    rot, cos_q, sin_q = rope_tables_int(hd, 32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-128, 128, size=(B, H, 1, hd)), jnp.int8)
+    pos = jnp.asarray([1, 9, 30])
+    yv = np.asarray(apply_rope_int(x, cos_q, sin_q, pos[:, None], rot))
+    for b, p in enumerate([1, 9, 30]):
+        ys = apply_rope_int(x[b:b + 1], cos_q, sin_q,
+                            jnp.asarray([p]), rot)
+        assert np.array_equal(yv[b], np.asarray(ys)[0])
+
+
+# ---------------------------------------------------------------------
+# slot arena lifecycle
+# ---------------------------------------------------------------------
+def test_slot_arena_lifecycle(deployed):
+    lm, _ = deployed
+    arena = SlotArena(lm, n_slots=3, max_len=16)
+    assert arena.n_free == 3
+    s0 = arena.alloc(req_id=10, prompt_len=4)
+    s1 = arena.alloc(req_id=11, prompt_len=7)
+    assert arena.n_free == 1 and s0 != s1
+    assert arena.owner[s0] == 10 and arena.lengths[s1] == 7
+    arena.release(s0)
+    assert arena.n_free == 2 and arena.owner[s0] is None
+    s2 = arena.alloc(req_id=12, prompt_len=2)   # slot reuse
+    assert s2 == s0
+    arena.release(s1)
+    with pytest.raises(RuntimeError):
+        arena.release(s1)                        # double release
+    arena.alloc(13, 1), arena.alloc(14, 1)
+    with pytest.raises(RuntimeError):
+        arena.alloc(15, 1)                       # exhausted
+
+
+def test_integer_cache_invariant(deployed):
+    lm, tables = deployed
+    arena = SlotArena(lm, n_slots=2, max_len=16)
+    assert float_cache_leaves(arena.caches) == []
+    assert_integer_caches(arena.caches)          # must not raise
+    # ID logits are int32 end-to-end (no dequantization anywhere)
+    prompts = jnp.zeros((2, 4), jnp.int32)
+    logits, caches = lm.prefill(tables, prompts,
+                                lm.init_caches(2, 16, Rep.ID))
+    assert logits.dtype == jnp.int32
+    assert float_cache_leaves(caches) == []
+    # FP caches would trip the assertion
+    with pytest.raises(AssertionError):
+        assert_integer_caches(lm.init_caches(1, 8, Rep.FP))
+
+
+# ---------------------------------------------------------------------
+# engine behavior
+# ---------------------------------------------------------------------
+def test_parity_with_lockstep_serve_batch(deployed):
+    """Simultaneous same-length requests == old lockstep serve_batch,
+    token for token (including a prompt length that exercises the
+    bucket-padded prefill gather)."""
+    lm, tables = deployed
+    rng = np.random.default_rng(1)
+    for P in (8, 6):  # 6: padded to the 8-bucket; 8: exact bucket
+        G, B = 6, 4
+        prompts = rng.integers(0, lm.cfg.vocab, size=(B, P))
+        ref = np.asarray(serve_batch(
+            lm, tables, jnp.asarray(prompts, jnp.int32), G))
+        eng = ServingEngine(
+            lm, tables, n_slots=B, max_len=P + G,
+            scheduler=SchedulerConfig(max_prefills_per_step=B,
+                                      prefill_bucket=8))
+        ids = [eng.submit(prompts[i], max_new_tokens=G) for i in range(B)]
+        got = {c.req_id: c.tokens for c in eng.run_until_drained()}
+        for i, rid in enumerate(ids):
+            assert got[rid] == list(ref[i]), f"P={P} slot {i} diverged"
+
+
+def test_parity_ssm_family_exact_prefill():
+    """SSM recurrent state integrates every prefilled position, so the
+    engine must prefill at exact prompt length (no bucket padding) —
+    parity with lockstep pins it, at a length that WOULD be padded."""
+    lm, tables = deploy_model("falcon_mamba_7b", reduced=True, max_seq=12)
+    rng = np.random.default_rng(4)
+    P, G, B = 5, 4, 2   # P=5 would pad to 8 under the dense bucketing
+    prompts = rng.integers(0, lm.cfg.vocab, size=(B, P))
+    ref = np.asarray(serve_batch(
+        lm, tables, jnp.asarray(prompts, jnp.int32), G))
+    eng = ServingEngine(
+        lm, tables, n_slots=B, max_len=P + G,
+        scheduler=SchedulerConfig(max_prefills_per_step=B,
+                                  prefill_bucket=8))
+    assert not eng._bucketed_prefill
+    ids = [eng.submit(prompts[i], max_new_tokens=G) for i in range(B)]
+    got = {c.req_id: c.tokens for c in eng.run_until_drained()}
+    for i, rid in enumerate(ids):
+        assert got[rid] == list(ref[i]), f"ssm slot {i} diverged"
+
+
+def test_ragged_arrivals_drain(deployed):
+    """>= 8 requests, >= 3 distinct prompt lengths, staggered arrivals,
+    fewer slots than requests (forced queueing + slot reuse): every
+    request completes with exactly its requested token budget."""
+    lm, tables = deployed
+    rng = np.random.default_rng(2)
+    streamed = {}
+    eng = ServingEngine(
+        lm, tables, n_slots=3, max_len=MAX_LEN,
+        scheduler=SchedulerConfig(max_prefills_per_step=2,
+                                  prefill_bucket=8),
+        on_token=lambda rid, t: streamed.setdefault(rid, []).append(t))
+    specs = [(5, 7), (12, 4), (9, 10), (3, 3), (20, 6), (12, 9),
+             (5, 2), (17, 5), (9, 12)]
+    assert len(specs) >= 8
+    assert len({p for p, _ in specs}) >= 3
+    ids = []
+    for p, g in specs:
+        ids.append(eng.submit(rng.integers(0, lm.cfg.vocab, size=(p,)),
+                              max_new_tokens=g))
+        eng.step()                      # staggered arrival
+    done = {c.req_id: c for c in eng.run_until_drained()}
+    assert len(done) == len(specs)
+    for rid, (p, g) in zip(ids, specs):
+        c = done[rid]
+        assert c.prompt_len == p
+        assert c.n_generated == g and c.finish_reason == "length"
+        assert streamed[rid] == c.tokens          # streaming == record
+        assert c.ttft >= 0.0 and c.latency >= c.ttft
+    s = eng.stats()
+    assert s["n_completed"] == len(specs)
+    assert s["n_generated"] == sum(g for _, g in specs)
+    assert 0.0 < s["mean_occupancy"] <= 1.0
+    # integer-only invariant held for the whole run
+    assert float_cache_leaves(eng.arena.caches) == []
+
+
+def test_stop_token_finishes_early(deployed):
+    lm, tables = deployed
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, lm.cfg.vocab, size=(6,))
+    eng = ServingEngine(lm, tables, n_slots=1, max_len=24,
+                        scheduler=SchedulerConfig(prefill_bucket=8))
+    rid = eng.submit(prompt, max_new_tokens=10)
+    (full,) = eng.run_until_drained()
+    assert full.n_generated == 10
+    stop = full.tokens[3]
+    eng2 = ServingEngine(lm, tables, n_slots=1, max_len=24,
+                         scheduler=SchedulerConfig(prefill_bucket=8))
+    eng2.submit(prompt, max_new_tokens=10, stop_token=stop)
+    (early,) = eng2.run_until_drained()
+    assert early.finish_reason == "stop"
+    assert early.tokens == full.tokens[:early.n_generated]
+    assert early.tokens[-1] == stop
+    assert early.n_generated <= 4  # greedy is deterministic
+
+
+def test_submit_validation(deployed):
+    lm, tables = deployed
+    eng = ServingEngine(lm, tables, n_slots=1, max_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(12, np.int32), max_new_tokens=8)  # 20 > 16
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(0, np.int32), max_new_tokens=1)   # empty
