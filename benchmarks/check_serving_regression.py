@@ -1,0 +1,94 @@
+"""CI throughput gate over BENCH_serving.json trajectories.
+
+Gates every engine `tok_s` metric in a candidate benchmark result
+against the committed baseline and fails (exit 1) when any regressed
+by more than --max-regression (default 30%).
+
+The committed baseline and the CI runner are different hardware, so
+absolute tok/s is not comparable across them.  Engine metrics are
+therefore normalized by the SAME RUN's lockstep `serve_batch`
+throughput — the frozen pre-engine reference path — before comparing:
+a real scheduling/arena regression moves the engine-to-lockstep ratio,
+while a uniformly slower runner moves numerator and denominator
+together and cancels.  Absolute values are printed for trajectory
+inspection but not gated.  Baseline metrics missing from the candidate
+fail (a silently dropped benchmark is a regression too).
+
+  python benchmarks/check_serving_regression.py \
+      --baseline BENCH_serving.json --candidate BENCH_new.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+LOCKSTEP_KEY = "lockstep_uniform"
+
+
+def tok_s_metrics(tree, prefix=""):
+    """Flatten {path: tok_s} for every nested dict carrying 'tok_s'."""
+    out = {}
+    if not isinstance(tree, dict):
+        return out
+    for key, val in tree.items():
+        if key == "tok_s":
+            out[prefix.rstrip(".")] = float(val)
+        elif isinstance(val, dict):
+            out.update(tok_s_metrics(val, f"{prefix}{key}."))
+    return out
+
+
+def normalized(metrics):
+    """Engine metrics as ratios to the same run's lockstep tok/s."""
+    ref = metrics.get(LOCKSTEP_KEY)
+    if not ref:
+        raise SystemExit(f"no {LOCKSTEP_KEY}.tok_s in benchmark result")
+    return {p: v / ref for p, v in metrics.items() if p != LOCKSTEP_KEY}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_serving.json")
+    ap.add_argument("--candidate", required=True)
+    ap.add_argument("--max-regression", type=float, default=0.30,
+                    help="maximal tolerated fractional drop of the "
+                         "engine-to-lockstep throughput ratio")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base_abs = tok_s_metrics(json.load(f))
+    with open(args.candidate) as f:
+        cand_abs = tok_s_metrics(json.load(f))
+    base = normalized(base_abs)
+    cand = normalized(cand_abs)
+
+    print(f"lockstep reference: {base_abs[LOCKSTEP_KEY]:.2f} tok/s "
+          f"(baseline) vs {cand_abs[LOCKSTEP_KEY]:.2f} tok/s (candidate)")
+    failures = []
+    for path, ref in sorted(base.items()):
+        if path not in cand:
+            failures.append(f"{path}: missing from candidate")
+            continue
+        got = cand[path]
+        drop = 1.0 - got / ref if ref > 0 else 0.0
+        status = "FAIL" if drop > args.max_regression else "ok"
+        print(f"{status:4s} {path}: ratio {ref:.3f} -> {got:.3f} "
+              f"({-drop:+.1%}; {cand_abs[path]:.2f} tok/s absolute)")
+        if drop > args.max_regression:
+            failures.append(
+                f"{path}: engine/lockstep ratio {ref:.3f} -> {got:.3f} "
+                f"({drop:.1%} drop > {args.max_regression:.0%})")
+    for path in sorted(set(cand) - set(base)):
+        print(f"new  {path}: ratio {cand[path]:.3f} (no baseline)")
+
+    if failures:
+        print("\nthroughput regression gate FAILED:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        sys.exit(1)
+    print("\nthroughput regression gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,14 @@
 
 Measures integer-only decode throughput (tok/s) and time-to-first-token
 for (a) the old fixed-shape lockstep `serve_batch` (sequential batches
-of `slots` requests) and (b) `ServingEngine` on the same uniform
-workload, plus (c) the engine on a ragged workload the lockstep path
-cannot express.  Emits BENCH_serving.json so later PRs can track the
-trajectory.
+of `slots` requests), (b) `ServingEngine` on the same uniform workload,
+(c) the engine on a ragged workload the lockstep path cannot express,
+and (d) a paged-vs-slot arena comparison: a short-request workload on
+EQUAL arena positions, where the paged arena's per-request page budgets
+admit more concurrent requests than the slot arena's worst-case rows
+(DESIGN.md §Serving ¶Paged KV).  Emits BENCH_serving.json so CI can
+track the trajectory (.github/workflows/ci.yml `bench` job +
+benchmarks/check_serving_regression.py).
 
   PYTHONPATH=src python benchmarks/serve_bench.py --reduced
 """
@@ -69,10 +73,14 @@ def bench_lockstep(lm, tables, prompts, gen, slots):
             "mean_ttft_s": float(np.mean(ttfts))}
 
 
-def bench_engine(lm, tables, workload, slots, max_len, bucket):
+def bench_engine(lm, tables, workload, slots, max_len, bucket, *,
+                 paged=False, page_size=8, n_pages=None,
+                 max_prefills=2, collect_tokens=None):
     eng = ServingEngine(
         lm, tables, n_slots=slots, max_len=max_len,
-        scheduler=SchedulerConfig(prefill_bucket=bucket))
+        paged=paged, page_size=page_size, n_pages=n_pages,
+        scheduler=SchedulerConfig(prefill_bucket=bucket,
+                                  max_prefills_per_step=max_prefills))
     # warm THIS engine's jit wrappers (one prefill compile per distinct
     # prompt length bucket in the workload + the fused decode), then
     # zero the stats so compile time stays outside the timed window
@@ -84,13 +92,58 @@ def bench_engine(lm, tables, workload, slots, max_len, bucket):
             eng.submit(prompt, max_new_tokens=2)
     eng.run_until_drained()
     eng.reset_stats()
-    for prompt, gen in workload:
-        eng.submit(prompt, max_new_tokens=gen)
-    eng.run_until_drained()
+    ids = [eng.submit(prompt, max_new_tokens=gen)
+           for prompt, gen in workload]
+    done = {c.req_id: c.tokens for c in eng.run_until_drained()}
+    if collect_tokens is not None:
+        collect_tokens.extend(done[rid] for rid in ids)
     s = eng.stats()
-    return {"wall_s": s["wall_s"], "tok_s": s["throughput_tok_s"],
-            "mean_ttft_s": s["mean_ttft_s"],
-            "mean_occupancy": s["mean_occupancy"]}
+    out = {"wall_s": s["wall_s"], "tok_s": s["throughput_tok_s"],
+           "mean_ttft_s": s["mean_ttft_s"],
+           "mean_occupancy": s["mean_occupancy"],
+           "max_active": s["max_active"],
+           "arena_positions": s["arena_positions"]}
+    if paged:
+        out["max_pages_in_use"] = s["max_pages_in_use"]
+    return out
+
+
+def bench_paged_vs_slot(lm, tables, rng, *, slots, max_len, page_size,
+                        bucket):
+    """Short-request workload on EQUAL arena positions: the slot arena
+    caps concurrency at `slots` worst-case rows, while the paged arena
+    spends the same positions as per-request page budgets and admits
+    more requests at once.  Both engines must agree token-for-token
+    (greedy decode is deterministic per request)."""
+    total = max(4, max_len // 4)          # P + G per short request
+    p_len = max(1, total // 2)
+    gen = total - p_len
+    n_requests = 4 * slots
+    workload = [
+        (rng.integers(0, lm.cfg.vocab, size=(p_len,)), gen)
+        for _ in range(n_requests)
+    ]
+    arena_positions = slots * max_len
+    n_pages = arena_positions // page_size
+    # decode rows sized to what the page budget can actually admit
+    paged_slots = min(n_requests,
+                      max(1, arena_positions // total))
+    # admission uncapped on both sides: concurrency is then limited by
+    # the arena alone (slots for the slot arena, pages for the paged)
+    slot_tokens, paged_tokens = [], []
+    slot = bench_engine(lm, tables, workload, slots, max_len, bucket,
+                        max_prefills=n_requests,
+                        collect_tokens=slot_tokens)
+    paged = bench_engine(lm, tables, workload, paged_slots, max_len,
+                         bucket, paged=True, page_size=page_size,
+                         n_pages=n_pages, max_prefills=n_requests,
+                         collect_tokens=paged_tokens)
+    assert paged_tokens == slot_tokens, "paged/slot token divergence"
+    return {
+        "requests": n_requests, "prompt_len": p_len, "gen": gen,
+        "slot": slot, "paged": paged,
+        "concurrency_gain": paged["max_active"] / slot["max_active"],
+    }
 
 
 def main():
@@ -102,6 +155,7 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--prefill-bucket", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
 
@@ -136,6 +190,9 @@ def main():
         "engine_ragged": bench_engine(
             lm, tables, ragged, args.slots, max_len,
             args.prefill_bucket),
+        "paged_vs_slot": bench_paged_vs_slot(
+            lm, tables, rng, slots=args.slots, max_len=max_len,
+            page_size=args.page_size, bucket=args.prefill_bucket),
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)

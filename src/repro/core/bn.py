@@ -118,13 +118,21 @@ def apply_integer_bn(q_phi, p: IntegerBNParams, *, channel_axis: int = -1):
 
 
 def make_bn_act_thresholds(
-    gamma, beta, mu, sigma, eps_phi, eps_y, n_levels: int
+    gamma, beta, mu, sigma, eps_phi, eps_y, n_levels: int,
+    *, rounded: bool = False,
 ) -> np.ndarray:
     """TH_i = ceil( 1/eps_phi * (sigma/gamma * i * eps_y - beta*sigma/gamma + mu) ).
 
     Returns (C, n_levels-1) int64 thresholds for i = 1..n_levels-1 (level 0
     needs no threshold); assumes gamma, sigma > 0 (paper: 'by construction
     or simple transformations').
+
+    ``rounded=True`` places the thresholds at (i - 1/2) * eps_y instead of
+    i * eps_y, which turns the absorbed quantizer from Eq. 10's floor into
+    round-to-nearest — still EXACT integer thresholds, but without floor's
+    half-quantum downward bias.  At 8 bits the bias is invisible; at 4 bits
+    (15 coarse levels) it dominates the deployment error, so the low-
+    bitwidth CNN deploys use the rounded variant (models/cnn.py).
     """
     gamma = np.asarray(gamma, np.float64)
     beta = np.asarray(beta, np.float64)
@@ -133,6 +141,8 @@ def make_bn_act_thresholds(
     if np.any(gamma <= 0) or np.any(sigma <= 0):
         raise ValueError("threshold merge requires gamma, sigma > 0")
     i = np.arange(1, n_levels, dtype=np.float64)[None, :]  # (1, L-1)
+    if rounded:
+        i = i - 0.5
     s_over_g = (sigma / gamma)[:, None]
     th = (s_over_g * i * float(eps_y) - beta[:, None] * s_over_g + mu[:, None]) / float(eps_phi)
     return np.ceil(th).astype(np.int64)

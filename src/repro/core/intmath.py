@@ -74,5 +74,13 @@ def avgpool_requant_params(k_total: int, d: int = 15):
 
 
 def int_avgpool_combine(acc, m: int, d: int):
-    """(m * sum) >> d on an int32 pooled sum (Eq. 25)."""
-    return jnp.right_shift(acc.astype(jnp.int32) * jnp.int32(m), d)
+    """(m * sum + 2^(d-1)) >> d on an int32 pooled sum (Eq. 25).
+
+    The 2^(d-1) bias makes the fixed-point divide round-to-nearest
+    instead of floor: still within Eq. 25's 1/2^d error of the exact
+    mean, but without floor's half-quantum downward drift — which is
+    what low-bitwidth activation images (15-level 4-bit grids) cannot
+    afford to lose per pooling stage.
+    """
+    acc = acc.astype(jnp.int32) * jnp.int32(m) + jnp.int32(1 << (d - 1))
+    return jnp.right_shift(acc, d)

@@ -82,6 +82,12 @@ def main():
     ap.add_argument("--ragged", action="store_true",
                     help="vary prompt/gen lengths per request")
     ap.add_argument("--prefill-bucket", type=int, default=16)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV arena (page budgets instead of "
+                         "worst-case slot rows)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=0,
+                    help="page pool size (0: slots*max_len/page_size)")
     args = ap.parse_args()
 
     max_len = args.max_len or (args.prompt_len + args.gen)
@@ -89,6 +95,8 @@ def main():
                               max_seq=max_len)
     engine = ServingEngine(
         lm, tables, n_slots=args.slots, max_len=max_len,
+        paged=args.paged, page_size=args.page_size,
+        n_pages=args.pages or None,
         scheduler=SchedulerConfig(prefill_bucket=args.prefill_bucket))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -110,6 +118,10 @@ def main():
           f"({s['throughput_tok_s']:.1f} tok/s integer-only, "
           f"mean TTFT {s['mean_ttft_s'] * 1e3:.0f} ms, "
           f"occupancy {s['mean_occupancy']:.2f})")
+    if args.paged:
+        print(f"  paged arena: peak {s['max_pages_in_use']}/{s['n_pages']} "
+              f"pages of {s['page_size']} positions, "
+              f"peak concurrency {s['max_active']}")
     for c in completions[: min(4, len(completions))]:
         print(f"  req {c.req_id}: P={c.prompt_len} "
               f"-> {c.n_generated} toks [{c.finish_reason}] "

@@ -26,6 +26,14 @@ Continuous batching (repro.serving): `pos` may be a per-slot vector
 sequence offset (ragged positions).  RoPE gather, causal masking, and
 the one-hot cache write all broadcast the per-row position; the math at
 each row is identical to the scalar-pos path at that row's offset.
+
+Paged KV (serving.cache.PagedArena): a decode cache dict may carry a
+per-slot page "table" (B, pages_per_slot) next to its pooled "k"/"v"
+leaves (n_pages + 1, K, page_size, hd).  The new column is scattered
+into the page holding each row's `pos`, then the logical (B, K, T, hd)
+view is gathered back through the table; positions past `pos` (stale
+pages, the PAGE_NULL trash page) are hidden by the existing per-slot
+causal masking, so paged decode is bit-exact with the contiguous path.
 """
 from __future__ import annotations
 
@@ -122,9 +130,14 @@ class QAttention:
         k = apply_rope_fp(k, cos, sin, positions, rot)
 
         if cache is not None:
-            k_all = _cache_write(cache["k"], k.astype(cache["k"].dtype), pos)
-            v_all = _cache_write(cache["v"], v.astype(cache["v"].dtype), pos)
-            cache = {"k": k_all, "v": v_all}
+            if "table" in cache:
+                k_all, v_all, cache = _paged_cache_update(cache, k, v, pos)
+            else:
+                k_all = _cache_write(cache["k"],
+                                     k.astype(cache["k"].dtype), pos)
+                v_all = _cache_write(cache["v"],
+                                     v.astype(cache["v"].dtype), pos)
+                cache = {"k": k_all, "v": v_all}
             k, v = k_all.astype(x.dtype), v_all.astype(x.dtype)
         T = k.shape[2]
 
@@ -222,9 +235,12 @@ class QAttention:
         k = apply_rope_int(k, cos_q, sin_q, positions, rot)
 
         if cache is not None:
-            k_all = _cache_write(cache["k"], k, pos)
-            v_all = _cache_write(cache["v"], v, pos)
-            cache = {"k": k_all, "v": v_all}
+            if "table" in cache:
+                k_all, v_all, cache = _paged_cache_update(cache, k, v, pos)
+            else:
+                k_all = _cache_write(cache["k"], k, pos)
+                v_all = _cache_write(cache["v"], v, pos)
+                cache = {"k": k_all, "v": v_all}
             k, v = k_all, v_all
         T = k.shape[2]
 
@@ -341,6 +357,57 @@ def _positions(S: int, pos):
         return jnp.arange(S)
     pos = jnp.asarray(pos)
     return pos[..., None] + jnp.arange(S)
+
+
+def _paged_kv_view(pool, table):
+    """Gather the logical (B, K, T, hd) KV view through a page table.
+
+    pool: (n_pages + 1, K, page_size, hd); table: (B, pages_per_slot)
+    int32 physical page ids (PAGE_NULL entries point at the trash page
+    and surface garbage that per-slot masking hides — every position a
+    request has written lives in a page its table row owns).
+    T = pages_per_slot * page_size (>= the arena's max_len).
+    """
+    B, pps = table.shape
+    x = jnp.take(pool, table.reshape(-1), axis=0)
+    x = x.reshape((B, pps) + pool.shape[1:])
+    x = jnp.moveaxis(x, 1, 2)                     # (B, K, pps, ps, hd)
+    return x.reshape(x.shape[0], x.shape[1], -1, x.shape[-1])
+
+
+def _paged_column_write(pool, new, pos, table):
+    """Scatter a single-token column (B, K, 1, hd) into each row's page.
+
+    Row b writes page table[b, pos[b] // page_size] at in-page offset
+    pos[b] % page_size.  Free rows carry PAGE_NULL tables, so their
+    garbage columns land on the shared trash page (write order among
+    trash collisions is irrelevant — the trash page is never unmasked).
+    """
+    ps = pool.shape[2]
+    blk = pos // ps
+    page = jnp.take_along_axis(table, blk[:, None], axis=1)[:, 0]
+    return pool.at[page, :, pos % ps, :].set(
+        new[:, :, 0, :].astype(pool.dtype))
+
+
+def _paged_cache_update(cache, k, v, pos):
+    """Paged decode cache step: write the new column through the page
+    table, then gather the logical dense view (write-then-gather keeps
+    the contiguous-path semantics: the view includes the new token).
+    Returns (k_view, v_view, new_cache)."""
+    if k.shape[2] != 1:
+        raise NotImplementedError(
+            "paged KV caches support single-token decode only")
+    pos_v = jnp.asarray(pos)
+    if pos_v.ndim != 1:
+        raise NotImplementedError(
+            "paged KV caches need a per-slot position vector (B,)")
+    table = cache["table"]
+    k_pool = _paged_column_write(cache["k"], k, pos_v, table)
+    v_pool = _paged_column_write(cache["v"], v, pos_v, table)
+    new_cache = {"k": k_pool, "v": v_pool, "table": table}
+    return _paged_kv_view(k_pool, table), _paged_kv_view(v_pool, table), \
+        new_cache
 
 
 def _cache_write(cache, new, pos):

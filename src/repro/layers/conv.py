@@ -136,10 +136,12 @@ class QBatchNorm2d:
         return make_integer_bn(p_np["gamma"], p_np["beta"], p_np["mu"],
                                p_np["sigma"], eps_phi, acc_bound=acc_bound)
 
-    def make_thresholds(self, p_np, eps_phi, eps_y, n_levels):
+    def make_thresholds(self, p_np, eps_phi, eps_y, n_levels,
+                        rounded: bool = False):
         return make_bn_act_thresholds(p_np["gamma"], p_np["beta"],
                                       p_np["mu"], p_np["sigma"],
-                                      eps_phi, eps_y, n_levels)
+                                      eps_phi, eps_y, n_levels,
+                                      rounded=rounded)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -4,6 +4,13 @@ layers, with the full FP/FQ -> deploy -> ID lifecycle per block.
 Residual-stream contract (DESIGN.md): between blocks the activation is a
 *symmetric int8 image* (zp=0) with a per-block-boundary quantum chosen by
 the Add operator's calibrated range (Eq. 24).
+
+Cache contract (DESIGN.md §Serving): every attention cache a block
+threads is a {'k', 'v'} dict whose leaves carry (batch, ..., seq, ...)
+axes in that order — the serving arenas rely on that structure to
+scatter prefills per slot and, for the paged arena, to thread a page
+"table" next to the KV leaves through lax.scan (layers/attention.py
+handles both cache layouts transparently).
 """
 from __future__ import annotations
 

@@ -140,7 +140,16 @@ class NemoCNN:
     def deploy(self, p, calib: Calibrator, *, bn_mode: str = "intbn",
                factor: int = 256, eps_in: float = 1.0 / 255.0,
                zp_in: int = -128) -> dict:
-        """-> ID tables.  bn_mode in {'fold', 'intbn', 'thresh'}."""
+        """-> ID tables.  bn_mode in {'fold', 'intbn', 'thresh'}.
+
+        The deployed activation quantizer is round-to-nearest rather
+        than Eq. 10's floor: a transform-time half-quantum shift folded
+        into the integer tables of every strategy (thresholds at
+        (i - 1/2)*eps_y; +eps_y/2 on the folded bias / integer-BN
+        lambda).  Runtime stays identical integers; at 4-bit
+        activations (15 levels) removing floor's eps_y/2 downward bias
+        is what keeps the ID path faithful to FP (test_low_bitwidth).
+        """
         p_np = jax.tree.map(np.asarray, p)
         t = {"meta": {"eps_in": eps_in, "zp_in": zp_in, "bn_mode": bn_mode},
              "blocks": []}
@@ -158,7 +167,7 @@ class NemoCNN:
                 cf = QConv2d(conv.c_in, conv.c_out, conv.kernel,
                              use_bias=True)
                 ip, eps_acc = cf.deploy(
-                    {"w": w_f, "b": b_f}, eps_x, zp_x)
+                    {"w": w_f, "b": b_f + 0.5 * eps_y}, eps_x, zp_x)
                 blk["conv"] = ip
                 blk["rqt"] = make_rqt(
                     eps_acc, eps_y, zp_out=ACT_QMIN, qmin=ACT_QMIN,
@@ -170,6 +179,10 @@ class NemoCNN:
                 if bn_mode == "intbn":
                     ibn = QBatchNorm2d(conv.c_out).make_integer(
                         bn, eps_acc, acc_bound=conv.acc_bound())
+                    half = np.round(0.5 * eps_y / ibn.eps_out)
+                    ibn = dataclasses.replace(
+                        ibn, q_lambda=(ibn.q_lambda
+                                       + half).astype(np.int32))
                     blk["ibn"] = ibn
                     blk["rqt"] = make_rqt(
                         ibn.eps_out, eps_y, zp_out=ACT_QMIN, qmin=ACT_QMIN,
@@ -182,7 +195,7 @@ class NemoCNN:
                         th_c = QBatchNorm2d(1).make_thresholds(
                             {k: bn[k][ch:ch + 1] for k in bn},
                             float(eps_acc[ch]), eps_y,
-                            2 ** self.act_bits)
+                            2 ** self.act_bits, rounded=True)
                         th.append(th_c[0])
                     blk["th"] = np.stack(th).astype(np.int64)
             t["blocks"].append(blk)

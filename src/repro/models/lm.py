@@ -496,6 +496,13 @@ class DecoderLM:
 
         pos: scalar (lockstep batch) or per-slot vector (B,) — the
         continuous-batching engine advances each slot at its own offset.
+
+        caches: the pytree layout of init_caches, OR a paged layout
+        where each attention {'k','v'} dict additionally carries a
+        per-slot page "table" and its KV leaves are page pools
+        (serving.cache.PagedArena.decode_view) — the table is scanned
+        alongside the layer-stacked leaves, so paging needs no change
+        to this step function or its single compilation.
         """
         x = self.embed_in_id(t, token)
         x, caches, _ = self.apply(t, x, Rep.ID, caches=caches, pos=pos)
@@ -509,6 +516,13 @@ class DecoderLM:
         break the integer-only serving invariant) and bfloat16 for
         FP/FQ.  SSM recurrent `h` state stays f32 in all reps — that is
         the documented scan float island (DESIGN.md), not a KV cache.
+
+        The serving arenas treat this pytree as the structural
+        template: the batch axis of every leaf and the sequence axis of
+        every KV leaf are discovered by comparing eval_shape templates
+        (serving.cache._probe_axes), so new cache layouts page/scatter
+        correctly as long as KV leaves live in {'k','v'} dicts and keep
+        the sequence axis after the batch axis.
         """
         if dtype is None:
             dtype = jnp.int8 if rep is Rep.ID else jnp.bfloat16

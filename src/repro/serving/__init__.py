@@ -1,20 +1,39 @@
 """Continuous-batching integer serving engine (DESIGN.md §Serving).
 
 The scheduling layer above models/lm.py's ID `prefill`/`decode_step`:
-slot-pooled KV arena, FCFS admission with bucketed prefill, fused
-per-slot-position decode, greedy argmax on int32 logits throughout.
+slot-pooled or paged KV arena, FCFS admission with bucketed prefill,
+fused per-slot-position decode, greedy argmax on int32 logits.
 """
+
 from repro.serving.cache import (
-    SlotArena, assert_integer_caches, float_cache_leaves,
+    PAGE_NULL,
+    PagedArena,
+    SlotArena,
+    assert_integer_caches,
+    float_cache_leaves,
 )
 from repro.serving.engine import ServingEngine
 from repro.serving.request import (
-    FINISH_LENGTH, FINISH_MAX_LEN, FINISH_STOP, Completion, Request,
+    FINISH_LENGTH,
+    FINISH_MAX_LEN,
+    FINISH_STOP,
+    Completion,
+    Request,
 )
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 __all__ = [
-    "Completion", "FINISH_LENGTH", "FINISH_MAX_LEN", "FINISH_STOP",
-    "Request", "Scheduler", "SchedulerConfig", "ServingEngine",
-    "SlotArena", "assert_integer_caches", "float_cache_leaves",
+    "Completion",
+    "FINISH_LENGTH",
+    "FINISH_MAX_LEN",
+    "FINISH_STOP",
+    "PAGE_NULL",
+    "PagedArena",
+    "Request",
+    "Scheduler",
+    "SchedulerConfig",
+    "ServingEngine",
+    "SlotArena",
+    "assert_integer_caches",
+    "float_cache_leaves",
 ]

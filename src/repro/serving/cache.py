@@ -1,22 +1,42 @@
-"""Slot-pooled KV-cache arena for continuous batching.
+"""KV-cache arenas for continuous batching.
 
-One fixed-shape cache pytree (`n_slots` batch rows x `max_len`
-positions) is allocated ONCE at engine construction and never
-reallocated — every jit'd decode step sees the same shapes, so there is
+Two arena strategies share one engine-facing protocol (``can_admit`` /
+``alloc`` / ``touch`` / ``write_slot`` / ``decode_view`` / ``absorb`` /
+``release``):
+
+``SlotArena`` — one fixed-shape cache pytree (`n_slots` batch rows x
+`max_len` positions) allocated ONCE at engine construction and never
+reallocated: every jit'd decode step sees the same shapes, so there is
 exactly one decode compilation for the lifetime of the engine.  Slots
 are leased to admitted requests and recycled on completion; a slot's
 stale contents after release are never visible because per-slot causal
 masking (layers/attention._mask with a position *vector*) hides every
-position a new tenant has not yet written.
+position a new tenant has not yet written.  Each lease reserves the
+worst-case `max_len` positions regardless of the request's own budget.
+
+``PagedArena`` — the same protocol over a pool of `n_pages`
+block-granular pages of `page_size` positions each (DESIGN.md §Serving
+¶Paged KV).  Requests lease a decode row (slot) plus a page *budget*
+(their own worst case, ceil((P + G - 1) / page_size) pages — not the
+arena's), with physical pages allocated on demand as decode advances
+and recycled wholesale on completion.  The per-slot page table rides
+INSIDE the cache pytree handed to the jit'd decode step, so paging
+changes no step-function signature and still compiles exactly once.
+Physical page 0 is a trash page: free rows and unallocated logical
+blocks map to it, and per-slot masking hides whatever lands there.
 
 Prefill runs at batch 1 into a scratch cache of identical per-slot
-shape, then is scattered into the arena at the leased slot's batch row.
-The batch axis of each cache leaf is discovered structurally (the axis
-whose extent tracks B between two `eval_shape` templates), so the
-scatter works for every cache layout the model zoo produces:
-attention KV (n_layers, B, K, T, hd), paired blocks (n_layers, 2, B,
-...), SSM recurrent state (n_layers, B, ...), and hybrid groups.
+shape, then is scattered into the arena at the leased slot's batch row
+(SlotArena) or through the slot's page-table row (PagedArena).  The
+batch/sequence axes of each cache leaf are discovered structurally
+(the axes whose extents track B and max_len between `eval_shape`
+templates), so both arenas work for every cache layout the model zoo
+produces: attention KV (n_layers, B, K, T, hd), paired blocks
+(n_layers, 2, B, ...), SSM recurrent state (n_layers, B, ...) — which
+has no sequence axis and therefore stays slot-resident, unpaged — and
+hybrid groups.
 """
+
 from __future__ import annotations
 
 from typing import Any, List, Optional, Tuple
@@ -26,6 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rep import Rep
+
+PAGE_NULL = 0  # physical page 0 is the never-allocated trash page
 
 
 def float_cache_leaves(caches) -> List[Tuple[str, Any]]:
@@ -51,7 +73,60 @@ def assert_integer_caches(caches, *, allow_ssm_state: bool = False):
     if bad:
         raise AssertionError(
             "float leaves in ID serving caches (integer-only invariant "
-            f"violated): {bad}")
+            f"violated): {bad}"
+        )
+
+
+def map_kv_dicts(tree, fn):
+    """Rebuild `tree`, applying fn to every dict holding 'k' and 'v'.
+
+    Attention caches are {'k', 'v'} dicts at every nesting depth the
+    model zoo produces; this is the structural hook the paged arena
+    uses to thread its page table into (and strip it back out of) the
+    cache pytree around each decode step.
+    """
+    if isinstance(tree, dict):
+        if "k" in tree and "v" in tree:
+            return fn(tree)
+        return {k: map_kv_dicts(v, fn) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(map_kv_dicts(v, fn) for v in tree)
+    return tree
+
+
+def _probe_axes(lm, max_len: int):
+    """Structurally discover each cache leaf's batch and sequence axis.
+
+    Returns (treedef, template_leaves, batch_axes, seq_axes); a leaf
+    with no sequence axis (SSM recurrent state) gets seq axis None.
+    Shape-only (`eval_shape`) — nothing is allocated.
+    """
+    s1 = jax.eval_shape(lambda: lm.init_caches(1, max_len, Rep.ID))
+    s2 = jax.eval_shape(lambda: lm.init_caches(2, max_len, Rep.ID))
+    s3 = jax.eval_shape(lambda: lm.init_caches(1, max_len + 1, Rep.ID))
+    treedef = jax.tree.structure(s1)
+    batch_axes, seq_axes = [], []
+    for a, b, c in zip(
+        jax.tree.leaves(s1), jax.tree.leaves(s2), jax.tree.leaves(s3)
+    ):
+        db = [i for i, (u, v) in enumerate(zip(a.shape, b.shape)) if u != v]
+        if len(db) != 1:
+            raise ValueError(
+                f"cannot identify batch axis: {a.shape} vs {b.shape}"
+            )
+        ds = [i for i, (u, v) in enumerate(zip(a.shape, c.shape)) if u != v]
+        if len(ds) > 1:
+            raise ValueError(
+                f"cannot identify sequence axis: {a.shape} vs {c.shape}"
+            )
+        if ds and ds[0] <= db[0]:
+            raise ValueError(
+                f"unsupported cache layout {a.shape}: sequence axis "
+                f"{ds[0]} not after batch axis {db[0]}"
+            )
+        batch_axes.append(db[0])
+        seq_axes.append(ds[0] if ds else None)
+    return treedef, jax.tree.leaves(s1), tuple(batch_axes), tuple(seq_axes)
 
 
 class SlotArena:
@@ -60,39 +135,28 @@ class SlotArena:
     def __init__(self, lm, n_slots: int, max_len: int):
         if max_len > lm.max_seq:
             raise ValueError(
-                f"max_len {max_len} exceeds model max_seq {lm.max_seq}")
+                f"max_len {max_len} exceeds model max_seq {lm.max_seq}"
+            )
         self.n_slots = n_slots
         self.max_len = max_len
         self.caches = lm.init_caches(n_slots, max_len, Rep.ID)
 
-        # Discover each leaf's batch axis: the one axis whose extent
-        # differs between a B=1 and a B=2 template (shape-only, no
-        # allocation).
-        s1 = jax.eval_shape(lambda: lm.init_caches(1, max_len, Rep.ID))
-        s2 = jax.eval_shape(lambda: lm.init_caches(2, max_len, Rep.ID))
-        self._treedef = jax.tree.structure(s1)
-        axes = []
-        for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
-            diff = [i for i, (u, v) in enumerate(zip(a.shape, b.shape))
-                    if u != v]
-            if len(diff) != 1:
-                raise ValueError(
-                    f"cannot identify batch axis: {a.shape} vs {b.shape}")
-            axes.append(diff[0])
-        self._batch_axes = tuple(axes)
+        self._treedef, _, self._batch_axes, _ = _probe_axes(lm, max_len)
 
         def _scatter(arena, single, slot):
             la = jax.tree.leaves(arena)
             ls = jax.tree.leaves(single)
-            out = [jax.lax.dynamic_update_slice_in_dim(x, y, slot, axis=ax)
-                   for x, y, ax in zip(la, ls, self._batch_axes)]
+            out = [
+                jax.lax.dynamic_update_slice_in_dim(x, y, slot, axis=ax)
+                for x, y, ax in zip(la, ls, self._batch_axes)
+            ]
             return jax.tree.unflatten(self._treedef, out)
 
         self._scatter = jax.jit(_scatter)
 
         # slot bookkeeping (host-side)
-        self._free = list(range(n_slots - 1, -1, -1))  # pop() -> slot 0 first
-        self.lengths = np.zeros(n_slots, np.int32)     # written positions
+        self._free = list(range(n_slots - 1, -1, -1))  # pop() -> slot 0
+        self.lengths = np.zeros(n_slots, np.int32)  # written positions
         self.owner: List[Optional[int]] = [None] * n_slots
 
     # -- lifecycle ------------------------------------------------------
@@ -104,7 +168,16 @@ class SlotArena:
     def n_leased(self) -> int:
         return self.n_slots - len(self._free)
 
-    def alloc(self, req_id: int, prompt_len: int) -> int:
+    def can_admit(self, prompt_len: int, total_len: int) -> bool:
+        """A free slot always holds a worst-case request."""
+        return bool(self._free)
+
+    def check_request(self, prompt_len: int, total_len: int):
+        """Slot capacity is length-gated by the scheduler; no-op."""
+
+    def alloc(
+        self, req_id: int, prompt_len: int, total_len: Optional[int] = None
+    ) -> int:
         """Lease a free slot to `req_id`; returns the slot index."""
         if not self._free:
             raise RuntimeError("no free slots")
@@ -127,8 +200,319 @@ class SlotArena:
         """Scatter a B=1 cache pytree (a finished prefill) into the
         arena at `slot`'s batch row.  One jit'd scatter, slot traced —
         no per-slot recompilation."""
-        self.caches = self._scatter(self.caches, single_caches,
-                                    jnp.int32(slot))
+        self.caches = self._scatter(
+            self.caches, single_caches, jnp.int32(slot)
+        )
+
+    def touch(self, slot: int, pos: int):
+        """Contiguous rows need no on-demand growth; no-op."""
+
+    def decode_view(self):
+        """The cache pytree handed to the jit'd decode step."""
+        return self.caches
+
+    def absorb(self, new_caches):
+        """Store the cache pytree returned by the decode step."""
+        self.caches = new_caches
 
     def advance(self, slot: int, n: int = 1):
         self.lengths[slot] += n
+
+    def reset_peaks(self):
+        """No high-water marks to reset for the contiguous arena."""
+
+    def stats(self) -> dict:
+        return {
+            "arena": "slot",
+            "arena_positions": self.n_slots * self.max_len,
+        }
+
+
+class PagedArena:
+    """Paged KV arena: page pool + per-slot page table + slot rows.
+
+    Admission commits a request's own worst-case page budget (so an
+    on-demand allocation mid-decode can never fail — preemption-free
+    by construction), but physical pages are allocated lazily as
+    decode advances and recycled wholesale on completion.  Short
+    requests therefore stop reserving `max_len` worst-case rows, and
+    the same arena bytes admit more concurrent requests.
+    """
+
+    def __init__(
+        self,
+        lm,
+        n_slots: int,
+        max_len: int,
+        page_size: int = 16,
+        n_pages: int = 64,
+    ):
+        if max_len > lm.max_seq:
+            raise ValueError(
+                f"max_len {max_len} exceeds model max_seq {lm.max_seq}"
+            )
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if n_pages < 1:
+            raise ValueError(f"n_pages must be >= 1, got {n_pages}")
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.pages_per_slot = -(-max_len // page_size)
+
+        (
+            self._treedef,
+            template,
+            self._batch_axes,
+            self._seq_axes,
+        ) = _probe_axes(lm, max_len)
+
+        # Pool: paged leaves swap (B, max_len) for (n_pages + 1,
+        # page_size); per-slot leaves (no sequence axis) keep B=n_slots.
+        leaves = []
+        for leaf, b_ax, s_ax in zip(
+            template, self._batch_axes, self._seq_axes
+        ):
+            shape = list(leaf.shape)
+            if s_ax is None:
+                shape[b_ax] = n_slots
+            else:
+                shape[b_ax] = n_pages + 1  # + the PAGE_NULL trash page
+                shape[s_ax] = page_size
+            leaves.append(jnp.zeros(shape, leaf.dtype))
+        self.caches = jax.tree.unflatten(self._treedef, leaves)
+
+        # Every paged leaf must live inside a {'k','v'} dict so the
+        # decode step finds a page table next to it.
+        n_paged = sum(s is not None for s in self._seq_axes)
+        n_kv = [0]
+
+        def _count(d):
+            n_kv[0] += 1
+            return d
+
+        map_kv_dicts(self.caches, _count)
+        if n_paged != 2 * n_kv[0]:
+            raise ValueError(
+                f"unsupported cache layout: {n_paged} paged leaves but "
+                f"{n_kv[0]} attention KV dicts"
+            )
+
+        def _write(arena_leaves, single_leaves, table_row, slot):
+            """Scatter a B=1 prefill result into pages / slot rows."""
+            t_pad = self.pages_per_slot * self.page_size
+            out = []
+            for x, y, b_ax, s_ax in zip(
+                arena_leaves,
+                single_leaves,
+                self._batch_axes,
+                self._seq_axes,
+            ):
+                if s_ax is None:
+                    out.append(
+                        jax.lax.dynamic_update_slice_in_dim(
+                            x, y, slot, axis=b_ax
+                        )
+                    )
+                    continue
+                z = jnp.squeeze(y, axis=b_ax)
+                sa = s_ax - 1  # sequence axis after dropping batch
+                if z.shape[sa] < t_pad:
+                    widths = [(0, 0)] * z.ndim
+                    widths[sa] = (0, t_pad - z.shape[sa])
+                    z = jnp.pad(z, widths)
+                shp = z.shape
+                z = z.reshape(
+                    shp[:sa]
+                    + (self.pages_per_slot, self.page_size)
+                    + shp[sa + 1 :]
+                )
+                z = jnp.moveaxis(z, sa, b_ax)
+                idx = (slice(None),) * b_ax + (table_row,)
+                # unallocated logical blocks land on the trash page
+                out.append(x.at[idx].set(z))
+            return out
+
+        self._write = jax.jit(_write)
+
+        # page-table lead dims: one kv dict per attention cache site,
+        # each stacked under the same leading axes as its 'k' leaf
+        # (n_layers, [pair, ...]); recorded in map_kv_dicts order so
+        # decode_view() can zip them back deterministically.
+        zipped = jax.tree.map(
+            lambda a, b: (a, b),
+            jax.eval_shape(lambda: lm.init_caches(1, max_len, Rep.ID)),
+            jax.eval_shape(lambda: lm.init_caches(2, max_len, Rep.ID)),
+        )
+        self._kv_batch_axes: List[int] = []
+
+        def _grab(d):
+            a, b = d["k"]
+            diff = [
+                i for i, (u, v) in enumerate(zip(a.shape, b.shape)) if u != v
+            ]
+            self._kv_batch_axes.append(diff[0])
+            return d
+
+        map_kv_dicts(zipped, _grab)
+
+        # page + slot bookkeeping (host-side); pop() -> lowest first
+        self._free_slots = list(range(n_slots - 1, -1, -1))
+        self._free_pages = list(range(n_pages, 0, -1))
+        self.page_table = np.full(
+            (n_slots, self.pages_per_slot), PAGE_NULL, np.int32
+        )
+        self.lengths = np.zeros(n_slots, np.int32)
+        self.owner: List[Optional[int]] = [None] * n_slots
+        self._commit = np.zeros(n_slots, np.int32)
+        self.committed_pages = 0
+        self.max_pages_in_use = 0
+        self.max_committed = 0
+
+    # -- page accounting ------------------------------------------------
+    def _pages_for(self, total_len: int) -> int:
+        """Worst-case pages for a request writing [0, total_len - 1):
+        prefill fills [0, P) and the last decode writes P + G - 2."""
+        return -(-max(total_len - 1, 1) // self.page_size)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def n_leased(self) -> int:
+        return self.n_slots - len(self._free_slots)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self._free_pages)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free_pages)
+
+    def can_admit(self, prompt_len: int, total_len: int) -> bool:
+        """Admission gate: a free decode row AND uncommitted budget for
+        the request's own worst case.  Committing (not materializing)
+        the worst case keeps the engine preemption-free: every
+        on-demand `touch` is covered, so decode can never deadlock on
+        an empty pool."""
+        if not self._free_slots:
+            return False
+        need = self._pages_for(total_len)
+        return self.committed_pages + need <= self.n_pages
+
+    def check_request(self, prompt_len: int, total_len: int):
+        need = self._pages_for(total_len)
+        if need > self.n_pages:
+            raise ValueError(
+                f"request needs {need} pages but the arena holds "
+                f"{self.n_pages}"
+            )
+
+    # -- lifecycle ------------------------------------------------------
+    def alloc(
+        self, req_id: int, prompt_len: int, total_len: Optional[int] = None
+    ) -> int:
+        """Lease a slot + commit the page budget; allocate the prompt's
+        pages now (prefill writes [0, prompt_len))."""
+        total_len = prompt_len if total_len is None else total_len
+        if not self.can_admit(prompt_len, total_len):
+            raise RuntimeError("out of slots or page budget")
+        slot = self._free_slots.pop()
+        need = self._pages_for(total_len)
+        self.owner[slot] = req_id
+        self.lengths[slot] = prompt_len
+        self._commit[slot] = need
+        self.committed_pages += need
+        self.max_committed = max(self.max_committed, self.committed_pages)
+        for blk in range(-(-prompt_len // self.page_size)):
+            self.page_table[slot, blk] = self._free_pages.pop()
+        self.max_pages_in_use = max(self.max_pages_in_use, self.pages_in_use)
+        return slot
+
+    def touch(self, slot: int, pos: int):
+        """On-demand page allocation before the decode that writes at
+        `pos`.  Covered by the admission-time commitment, so the free
+        list cannot be empty here."""
+        blk = pos // self.page_size
+        if self.page_table[slot, blk] != PAGE_NULL:
+            return
+        if not self._free_pages:
+            raise RuntimeError(
+                "page pool exhausted despite commitment accounting"
+            )
+        self.page_table[slot, blk] = self._free_pages.pop()
+        self.max_pages_in_use = max(self.max_pages_in_use, self.pages_in_use)
+
+    def release(self, slot: int):
+        """Recycle the slot and ALL its pages.  Page contents stay
+        stale; a future tenant's prefill overwrites every allocated
+        block before any of its positions become visible."""
+        if self.owner[slot] is None:
+            raise RuntimeError(f"slot {slot} is not leased")
+        for blk in range(self.pages_per_slot):
+            page = int(self.page_table[slot, blk])
+            if page != PAGE_NULL:
+                self._free_pages.append(page)
+                self.page_table[slot, blk] = PAGE_NULL
+        self.owner[slot] = None
+        self.lengths[slot] = 0
+        self.committed_pages -= int(self._commit[slot])
+        self._commit[slot] = 0
+        self._free_slots.append(slot)
+
+    # -- cache plumbing -------------------------------------------------
+    def write_slot(self, slot: int, single_caches):
+        """Scatter a B=1 cache pytree (a finished prefill) through the
+        slot's page-table row.  One jit'd scatter, table traced."""
+        la = jax.tree.leaves(self.caches)
+        ls = jax.tree.leaves(single_caches)
+        out = self._write(
+            la, ls, jnp.asarray(self.page_table[slot]), jnp.int32(slot)
+        )
+        self.caches = jax.tree.unflatten(self._treedef, out)
+
+    def decode_view(self):
+        """Attach the current page table inside every attention cache
+        dict (broadcast over its stacked leading axes) — the decode
+        step's cache pytree keeps one structure, so paging costs no
+        extra compilation."""
+        tab = jnp.asarray(self.page_table)
+        axes = iter(self._kv_batch_axes)
+
+        def _attach(d):
+            lead = d["k"].shape[: next(axes)]
+            return {**d, "table": jnp.broadcast_to(tab, lead + tab.shape)}
+
+        return map_kv_dicts(self.caches, _attach)
+
+    def absorb(self, new_caches):
+        """Strip the page tables back out of the decode result."""
+        self.caches = map_kv_dicts(
+            new_caches,
+            lambda d: {k: v for k, v in d.items() if k != "table"},
+        )
+
+    def advance(self, slot: int, n: int = 1):
+        self.lengths[slot] += n
+
+    def reset_peaks(self):
+        """Restart the page high-water marks from the current state
+        (engine.reset_stats: a warmup window's peaks must not leak
+        into the measured window's report)."""
+        self.max_pages_in_use = self.pages_in_use
+        self.max_committed = self.committed_pages
+
+    def stats(self) -> dict:
+        return {
+            "arena": "paged",
+            "arena_positions": self.n_pages * self.page_size,
+            "page_size": self.page_size,
+            "n_pages": self.n_pages,
+            "pages_in_use": self.pages_in_use,
+            "committed_pages": self.committed_pages,
+            "max_pages_in_use": self.max_pages_in_use,
+            "max_committed_pages": self.max_committed,
+        }

@@ -1,17 +1,21 @@
 """`ServingEngine`: continuous batching over the integer-only model.
 
-The engine owns a fixed-shape slot arena (cache.SlotArena) and drives
-the ID-representation `prefill` / `decode_step` of models/lm.py:
+The engine owns a fixed-shape cache arena (cache.SlotArena, or
+cache.PagedArena when ``paged=True``) and drives the ID-representation
+`prefill` / `decode_step` of models/lm.py:
 
   submit()            enqueue a Request (FCFS)
   step()              one scheduler iteration:
-                        1. admit pending requests into free slots —
-                           bucketed B=1 prefill, scatter into the arena,
-                           first token from the true-last-prompt logits
+                        1. admit pending requests while the arena
+                           accepts them (free slot; for the paged
+                           arena also a free page budget) — bucketed
+                           B=1 prefill, scatter into the arena, first
+                           token from the true-last-prompt logits
                         2. one FUSED decode step over the whole arena
                            with a per-slot position vector; per-slot
-                           done-masking is host-side (finished slots are
-                           released and their rows become don't-cares)
+                           done-masking is host-side (finished slots
+                           are released and their rows become
+                           don't-cares)
   run_until_drained() step until queue + slots are empty
 
 Greedy sampling is argmax on int32 logits — no dequantization anywhere
@@ -25,6 +29,7 @@ bit-exact with the lockstep path.  MoE capacity routing couples rows
 (a garbage row can compete for expert capacity) — see DESIGN.md
 §Serving for the caveat.
 """
+
 from __future__ import annotations
 
 import time
@@ -35,31 +40,65 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rep import Rep
-from repro.serving.cache import SlotArena, assert_integer_caches
+from repro.serving.cache import (
+    PagedArena,
+    SlotArena,
+    assert_integer_caches,
+)
 from repro.serving.request import (
-    FINISH_LENGTH, FINISH_MAX_LEN, FINISH_STOP, Completion, Request,
+    FINISH_LENGTH,
+    FINISH_MAX_LEN,
+    FINISH_STOP,
+    Completion,
+    Request,
     RequestState,
 )
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 
 class ServingEngine:
-    def __init__(self, lm, tables, *, n_slots: int = 8, max_len: int = 256,
-                 scheduler: Optional[SchedulerConfig] = None,
-                 on_token: Optional[Callable[[int, int], None]] = None):
+    def __init__(
+        self,
+        lm,
+        tables,
+        *,
+        n_slots: int = 8,
+        max_len: int = 256,
+        scheduler: Optional[SchedulerConfig] = None,
+        on_token: Optional[Callable[[int, int], None]] = None,
+        paged: bool = False,
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
+    ):
         if lm.cfg.input_mode != "tokens":
-            raise ValueError("ServingEngine serves token LMs "
-                             f"(input_mode={lm.cfg.input_mode!r})")
+            raise ValueError(
+                "ServingEngine serves token LMs "
+                f"(input_mode={lm.cfg.input_mode!r})"
+            )
         self.lm = lm
         self.tables = tables
-        self.arena = SlotArena(lm, n_slots, max_len)
+        if paged:
+            if n_pages is None:
+                # default: the same arena positions a contiguous
+                # SlotArena of this geometry would reserve
+                n_pages = -(-(n_slots * max_len) // page_size)
+            self.arena = PagedArena(
+                lm,
+                n_slots=n_slots,
+                max_len=max_len,
+                page_size=page_size,
+                n_pages=n_pages,
+            )
+        else:
+            self.arena = SlotArena(lm, n_slots, max_len)
         assert_integer_caches(
             self.arena.caches,
-            allow_ssm_state=lm.cfg.family in ("ssm", "hybrid"))
+            allow_ssm_state=lm.cfg.family in ("ssm", "hybrid"),
+        )
         self.sched = Scheduler(scheduler or SchedulerConfig(), max_len)
         self.on_token = on_token
 
-        self.active: Dict[int, RequestState] = {}   # slot -> state
+        self.active: Dict[int, RequestState] = {}  # slot -> state
         self.completed: List[Completion] = []
         self._next_id = 0
 
@@ -84,16 +123,27 @@ class ServingEngine:
         self._steps = 0
         self._occupancy_sum = 0.0
         self._n_generated = 0
+        self._max_active = 0
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
     # -- submission -----------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int = 16,
-               stop_token: Optional[int] = None) -> int:
+    def submit(
+        self,
+        prompt,
+        max_new_tokens: int = 16,
+        stop_token: Optional[int] = None,
+    ) -> int:
         """Enqueue a request; returns its req_id.  `prompt` may be a
         token array or an already-built Request."""
-        req = (prompt if isinstance(prompt, Request)
-               else Request(prompt, max_new_tokens, stop_token))
+        req = (
+            prompt
+            if isinstance(prompt, Request)
+            else Request(prompt, max_new_tokens, stop_token)
+        )
+        self.arena.check_request(
+            req.prompt_len, req.prompt_len + req.max_new_tokens
+        )
         req.req_id = self._next_id
         self._next_id += 1
         req.arrival_time = time.perf_counter()
@@ -107,11 +157,20 @@ class ServingEngine:
             self._t_first = time.perf_counter()
         progressed = False
 
-        for req in self.sched.admit(self.arena.n_free):
-            self._admit(req)
+        def fits(req: Request) -> bool:
+            return self.arena.can_admit(
+                req.prompt_len, req.prompt_len + req.max_new_tokens
+            )
+
+        for _ in range(self.sched.cfg.max_prefills_per_step):
+            req = self.sched.pop_if(fits)
+            if req is None:
+                break
+            self._admit(req)  # consumes arena capacity `fits` re-reads
             progressed = True
 
         self._occupancy_sum += self.arena.n_leased / self.arena.n_slots
+        self._max_active = max(self._max_active, len(self.active))
         self._steps += 1
 
         if self.active:
@@ -122,9 +181,16 @@ class ServingEngine:
             for slot, st in self.active.items():
                 toks[slot, 0] = st.last_token
                 pos[slot] = st.pos
-            logits, self.arena.caches = self._decode(
-                self.tables, jnp.asarray(toks), self.arena.caches,
-                jnp.asarray(pos))
+                # paged arena: allocate the page holding `pos` before
+                # the decode that writes there (no-op for SlotArena)
+                self.arena.touch(slot, st.pos)
+            logits, new_caches = self._decode(
+                self.tables,
+                jnp.asarray(toks),
+                self.arena.decode_view(),
+                jnp.asarray(pos),
+            )
+            self.arena.absorb(new_caches)
             nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
             now = time.perf_counter()
             for slot in list(self.active):
@@ -140,8 +206,9 @@ class ServingEngine:
         self._t_last = time.perf_counter()
         return progressed
 
-    def run_until_drained(self, max_steps: int = 1_000_000
-                          ) -> List[Completion]:
+    def run_until_drained(
+        self, max_steps: int = 1_000_000
+    ) -> List[Completion]:
         """Step until the queue and every slot are empty."""
         steps = 0
         while self.sched.n_pending or self.active:
@@ -154,20 +221,31 @@ class ServingEngine:
     # -- internals ------------------------------------------------------
     def _admit(self, req: Request):
         """Prefill `req` at batch 1 (bucketed shape) and lease a slot."""
-        slot = self.arena.alloc(req.req_id, req.prompt_len)
+        slot = self.arena.alloc(
+            req.req_id,
+            req.prompt_len,
+            req.prompt_len + req.max_new_tokens,
+        )
         P = req.prompt_len
         Pb = self.sched.bucket_len(P) if self._bucketed_prefill else P
         padded = np.zeros((1, Pb), np.int32)
         padded[0, :P] = req.prompt
         # first token: greedy on the TRUE last prompt position (padded
         # positions after it are causally invisible to it)
-        logits, single = self._prefill(self.tables, jnp.asarray(padded),
-                                       jnp.int32(P - 1))
+        logits, single = self._prefill(
+            self.tables, jnp.asarray(padded), jnp.int32(P - 1)
+        )
         first = int(jnp.argmax(logits[0, 0]))
         self.arena.write_slot(slot, single)
         now = time.perf_counter()
-        st = RequestState(request=req, slot=slot, tokens=[first],
-                          last_token=first, pos=P, first_token_time=now)
+        st = RequestState(
+            request=req,
+            slot=slot,
+            tokens=[first],
+            last_token=first,
+            pos=P,
+            first_token_time=now,
+        )
         self.active[slot] = st
         self._emit(req, first)
         self._maybe_finish(st, now)
@@ -188,11 +266,17 @@ class ServingEngine:
             reason = FINISH_MAX_LEN  # unreachable when submit() validates
         if reason is None:
             return
-        self.completed.append(Completion(
-            req_id=req.req_id, prompt_len=req.prompt_len,
-            tokens=list(st.tokens), finish_reason=reason,
-            arrival_time=req.arrival_time,
-            first_token_time=st.first_token_time, finish_time=now))
+        self.completed.append(
+            Completion(
+                req_id=req.req_id,
+                prompt_len=req.prompt_len,
+                tokens=list(st.tokens),
+                finish_reason=reason,
+                arrival_time=req.arrival_time,
+                first_token_time=st.first_token_time,
+                finish_time=now,
+            )
+        )
         del self.active[st.slot]
         self.arena.release(st.slot)
 
@@ -207,15 +291,19 @@ class ServingEngine:
         self._steps = 0
         self._occupancy_sum = 0.0
         self._n_generated = 0
+        self._max_active = 0
         self._t_first = None
         self._t_last = None
+        self.arena.reset_peaks()
 
     def stats(self) -> dict:
-        wall = ((self._t_last - self._t_first)
-                if self._t_first is not None and self._t_last is not None
-                else 0.0)
+        wall = (
+            (self._t_last - self._t_first)
+            if self._t_first is not None and self._t_last is not None
+            else 0.0
+        )
         ttfts = [c.ttft for c in self.completed]
-        return {
+        out = {
             "n_completed": len(self.completed),
             "n_generated": self._n_generated,
             "steps": self._steps,
@@ -223,6 +311,10 @@ class ServingEngine:
             "throughput_tok_s": (self._n_generated / wall) if wall else 0.0,
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
             "max_ttft_s": float(np.max(ttfts)) if ttfts else 0.0,
-            "mean_occupancy": (self._occupancy_sum / self._steps
-                               if self._steps else 0.0),
+            "mean_occupancy": (
+                self._occupancy_sum / self._steps if self._steps else 0.0
+            ),
+            "max_active": self._max_active,
         }
+        out.update(self.arena.stats())
+        return out

@@ -14,8 +14,8 @@ from typing import List, Optional
 
 import numpy as np
 
-FINISH_STOP = "stop"        # generated the request's stop token
-FINISH_LENGTH = "length"    # hit max_new_tokens
+FINISH_STOP = "stop"  # generated the request's stop token
+FINISH_LENGTH = "length"  # hit max_new_tokens
 FINISH_MAX_LEN = "max_len"  # hit the arena's sequence capacity (defensive)
 
 
@@ -23,11 +23,11 @@ FINISH_MAX_LEN = "max_len"  # hit the arena's sequence capacity (defensive)
 class Request:
     """One generation request (prompt tokens + budget)."""
 
-    prompt: np.ndarray              # (P,) int32 token ids
+    prompt: np.ndarray  # (P,) int32 token ids
     max_new_tokens: int
     stop_token: Optional[int] = None
-    req_id: int = -1                # stamped by ServingEngine.submit()
-    arrival_time: float = 0.0       # stamped by ServingEngine.submit()
+    req_id: int = -1  # stamped by ServingEngine.submit()
+    arrival_time: float = 0.0  # stamped by ServingEngine.submit()
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -64,8 +64,8 @@ class Completion:
 
     req_id: int
     prompt_len: int
-    tokens: List[int]               # generated ids (incl. stop token)
-    finish_reason: str              # FINISH_STOP | FINISH_LENGTH | FINISH_MAX_LEN
+    tokens: List[int]  # generated ids (incl. stop token)
+    finish_reason: str  # FINISH_STOP | FINISH_LENGTH | FINISH_MAX_LEN
     arrival_time: float
     first_token_time: float
     finish_time: float

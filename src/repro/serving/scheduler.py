@@ -2,11 +2,17 @@
 
 Each engine step the scheduler decides two things (DESIGN.md §Serving):
 
-  admission — which pending requests to prefill into free slots this
-  step.  Policy: FCFS by arrival, up to `max_prefills_per_step` (bounds
-  per-step prefill latency so active decodes are not starved — the
-  unified prefill+decode batch idea from the lmdeploy/turbomind
-  decoder, specialized to per-slot prefill + fused decode).
+  admission — which pending requests to prefill this step.  Policy:
+  FCFS by arrival, up to `max_prefills_per_step` (bounds per-step
+  prefill latency so active decodes are not starved — the unified
+  prefill+decode batch idea from the lmdeploy/turbomind decoder,
+  specialized to per-slot prefill + fused decode), gated by an
+  arena-capacity predicate.  The contiguous arena admits while a slot
+  is free; the paged arena admits while the request's worst-case page
+  budget fits (DESIGN.md §Serving ¶Paged KV).  Admission is
+  head-of-line blocking: when the oldest request does not fit, nothing
+  younger overtakes it — out-of-pages backpressure stays FCFS-fair and
+  preemption-free.
 
   iteration — every leased slot advances one token through a single
   fused decode step with a per-slot position vector; completed slots
@@ -22,19 +28,20 @@ position, and the first decode writes over them.  The engine disables
 bucketing for families whose prefill state integrates every position
 (MoE routing, SSM/hybrid recurrences) — see DESIGN.md §Serving.
 """
+
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, List
+from typing import Callable, Deque, Optional
 
 from repro.serving.request import Request
 
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
-    max_prefills_per_step: int = 2   # admission cap per engine step
-    prefill_bucket: int = 16         # prompt-shape bucket (compile bound)
+    max_prefills_per_step: int = 2  # admission cap per engine step
+    prefill_bucket: int = 16  # prompt-shape bucket (compile bound)
 
 
 class Scheduler:
@@ -42,11 +49,14 @@ class Scheduler:
 
     def __init__(self, cfg: SchedulerConfig, max_len: int):
         if cfg.prefill_bucket < 1:
-            raise ValueError(f"prefill_bucket must be >= 1, "
-                             f"got {cfg.prefill_bucket}")
+            raise ValueError(
+                f"prefill_bucket must be >= 1, got {cfg.prefill_bucket}"
+            )
         if cfg.max_prefills_per_step < 1:
-            raise ValueError(f"max_prefills_per_step must be >= 1, "
-                             f"got {cfg.max_prefills_per_step}")
+            raise ValueError(
+                "max_prefills_per_step must be >= 1, "
+                f"got {cfg.max_prefills_per_step}"
+            )
         self.cfg = cfg
         self.max_len = max_len
         self.pending: Deque[Request] = collections.deque()
@@ -56,7 +66,8 @@ class Scheduler:
         if req.prompt_len + req.max_new_tokens > self.max_len:
             raise ValueError(
                 f"request needs {req.prompt_len + req.max_new_tokens} "
-                f"positions but the arena holds {self.max_len}")
+                f"positions but the arena holds {self.max_len}"
+            )
         self.pending.append(req)
 
     @property
@@ -64,11 +75,16 @@ class Scheduler:
         return len(self.pending)
 
     # -- admission ------------------------------------------------------
-    def admit(self, free_slots: int) -> List[Request]:
-        """Pop the requests to prefill this step (FCFS)."""
-        n = min(free_slots, self.cfg.max_prefills_per_step,
-                len(self.pending))
-        return [self.pending.popleft() for _ in range(n)]
+    def pop_if(self, fits: Callable[[Request], bool]) -> Optional[Request]:
+        """Pop the FCFS queue head if the arena predicate accepts it
+        (head-of-line blocking — a too-big head request is
+        backpressure, not a skip).  The engine calls this once per
+        admission, re-evaluating `fits` against the arena state the
+        previous admission just consumed, up to
+        `max_prefills_per_step` times per step."""
+        if self.pending and fits(self.pending[0]):
+            return self.pending.popleft()
+        return None
 
     # -- shape bucketing ------------------------------------------------
     def bucket_len(self, prompt_len: int) -> int:

@@ -57,9 +57,13 @@ def test_integer_bn_matches_float():
     assert np.max(np.abs(got - ref)) <= tol
 
 
-def test_threshold_merge_exact_vs_quantized_act():
+@pytest.mark.parametrize("rounded", [False, True])
+def test_threshold_merge_exact_vs_quantized_act(rounded):
     """Eq. 19-20 absorbs BN+LQ with NO approximation: compare against the
-    float pipeline BN -> clip -> floor for a 4-bit output space."""
+    float pipeline BN -> clip -> quantize for a 4-bit output space.
+    rounded=False is Eq. 10's floor; rounded=True shifts every threshold
+    by half a quantum, absorbing a round-to-nearest quantizer instead —
+    exactness must hold for both."""
     c, n_bits = 8, 4
     gamma, beta, mu, sigma = _bn_params(c)
     eps_phi = 7.3e-4
@@ -68,10 +72,12 @@ def test_threshold_merge_exact_vs_quantized_act():
     eps_y = beta_y / (n_levels - 1)
     q_phi = RNG.integers(-(1 << 15), 1 << 15, size=(256, c)).astype(np.int64)
     phi_real = q_phi * eps_phi
-    # float reference: BN then linear quantization (Eq. 10)
+    # float reference: BN then linear quantization (Eq. 10 / round)
     bn = np.asarray(bn_apply_float(jnp.asarray(phi_real), gamma, beta, mu, sigma))
-    ref_img = np.clip(np.floor(bn / eps_y), 0, n_levels - 1)
-    th = make_bn_act_thresholds(gamma, beta, mu, sigma, eps_phi, eps_y, n_levels)
+    shift = 0.5 if rounded else 0.0
+    ref_img = np.clip(np.floor(bn / eps_y + shift), 0, n_levels - 1)
+    th = make_bn_act_thresholds(gamma, beta, mu, sigma, eps_phi, eps_y,
+                                n_levels, rounded=rounded)
     got = np.asarray(apply_thresholds(jnp.asarray(q_phi.astype(np.int32)), th))
     np.testing.assert_array_equal(got, ref_img)
 

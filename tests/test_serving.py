@@ -4,6 +4,12 @@ Acceptance (ISSUE 1): lockstep parity token-for-token; a ragged
 workload (>= 8 requests, >= 3 distinct prompt lengths, staggered
 arrivals, slot reuse) drains completely in the ID representation with
 zero float tensors in caches or logits.
+
+Acceptance (ISSUE 2, paged KV arena): the paged engine matches the
+lockstep oracle AND the contiguous SlotArena engine token-for-token on
+a ragged workload; admission is gated on the page budget (not free
+slots); freed pages are recycled without stale-token leakage; the
+integer-only invariant holds on every page.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -12,8 +18,8 @@ import pytest
 from repro.core.rep import Rep
 from repro.launch.serve import deploy_model, serve_batch
 from repro.serving import (
-    SchedulerConfig, ServingEngine, SlotArena, assert_integer_caches,
-    float_cache_leaves,
+    PAGE_NULL, PagedArena, SchedulerConfig, ServingEngine, SlotArena,
+    assert_integer_caches, float_cache_leaves,
 )
 
 MAX_LEN = 40
@@ -22,6 +28,11 @@ MAX_LEN = 40
 @pytest.fixture(scope="module")
 def deployed():
     return deploy_model("granite_3_2b", reduced=True, max_seq=MAX_LEN)
+
+
+@pytest.fixture(scope="module")
+def deployed_ssm():
+    return deploy_model("falcon_mamba_7b", reduced=True, max_seq=12)
 
 
 # ---------------------------------------------------------------------
@@ -135,18 +146,22 @@ def test_parity_with_lockstep_serve_batch(deployed):
             assert got[rid] == list(ref[i]), f"P={P} slot {i} diverged"
 
 
-def test_parity_ssm_family_exact_prefill():
+@pytest.mark.parametrize("paged", [False, True])
+def test_parity_ssm_family_exact_prefill(deployed_ssm, paged):
     """SSM recurrent state integrates every prefilled position, so the
     engine must prefill at exact prompt length (no bucket padding) —
-    parity with lockstep pins it, at a length that WOULD be padded."""
-    lm, tables = deploy_model("falcon_mamba_7b", reduced=True, max_seq=12)
+    parity with lockstep pins it, at a length that WOULD be padded.
+    The paged arena keeps the (sequence-axis-free) SSM state
+    slot-resident and only pages attention-style KV leaves; parity
+    must hold either way."""
+    lm, tables = deployed_ssm
     rng = np.random.default_rng(4)
     P, G, B = 5, 4, 2   # P=5 would pad to 8 under the dense bucketing
     prompts = rng.integers(0, lm.cfg.vocab, size=(B, P))
     ref = np.asarray(serve_batch(
         lm, tables, jnp.asarray(prompts, jnp.int32), G))
     eng = ServingEngine(
-        lm, tables, n_slots=B, max_len=P + G,
+        lm, tables, n_slots=B, max_len=P + G, paged=paged, page_size=4,
         scheduler=SchedulerConfig(max_prefills_per_step=B,
                                   prefill_bucket=8))
     assert not eng._bucketed_prefill
@@ -220,3 +235,205 @@ def test_submit_validation(deployed):
         eng.submit(np.zeros(12, np.int32), max_new_tokens=8)  # 20 > 16
     with pytest.raises(ValueError):
         eng.submit(np.zeros(0, np.int32), max_new_tokens=1)   # empty
+
+
+# ---------------------------------------------------------------------
+# paged KV arena (ISSUE 2)
+# ---------------------------------------------------------------------
+def test_paged_write_gather_matches_contiguous():
+    """Primitive equivalence: a column written through a page table and
+    gathered back == the contiguous per-slot one-hot write, at every
+    position the table owns."""
+    from repro.layers.attention import (
+        _cache_write, _paged_column_write, _paged_kv_view,
+    )
+
+    B, K, hd, ps, pps = 3, 2, 4, 4, 3
+    T = pps * ps
+    rng = np.random.default_rng(0)
+    dense = jnp.asarray(
+        rng.integers(-128, 128, size=(B, K, T, hd)), jnp.int8)
+    # slot b owns pages [1 + b*pps, ...); rebuild the pool from dense
+    table = jnp.asarray(
+        1 + np.arange(B * pps).reshape(B, pps), jnp.int32)
+    pool = jnp.zeros((B * pps + 1, K, ps, hd), jnp.int8)
+    pool = pool.at[table.reshape(-1)].set(
+        jnp.moveaxis(dense.reshape(B, K, pps, ps, hd), 2, 1)
+        .reshape(B * pps, K, ps, hd))
+    np.testing.assert_array_equal(
+        np.asarray(_paged_kv_view(pool, table)), np.asarray(dense))
+
+    new = jnp.asarray(rng.integers(-128, 128, size=(B, K, 1, hd)), jnp.int8)
+    pos = jnp.asarray([0, 5, 11])
+    ref = np.asarray(_cache_write(dense, new, pos))
+    got_pool = _paged_column_write(pool, new, pos, table)
+    np.testing.assert_array_equal(
+        np.asarray(_paged_kv_view(got_pool, table)), ref)
+
+
+def test_paged_arena_lifecycle(deployed):
+    """Budget commitment, on-demand allocation, wholesale recycling."""
+    lm, _ = deployed
+    arena = PagedArena(lm, n_slots=3, max_len=16, page_size=4, n_pages=6)
+    assert arena.pages_per_slot == 4
+    # P=5, G=6 -> writes [0, 10): commits ceil(10/4) = 3 pages, but
+    # only ceil(5/4) = 2 are allocated at admission
+    assert arena.can_admit(5, 11)
+    s0 = arena.alloc(10, 5, 11)
+    assert arena.committed_pages == 3 and arena.pages_in_use == 2
+    assert int(arena.page_table[s0, 2]) == PAGE_NULL
+    arena.touch(s0, 5)          # still inside page 1: no-op
+    assert arena.pages_in_use == 2
+    arena.touch(s0, 8)          # crosses into block 2: allocates
+    assert arena.pages_in_use == 3
+    assert int(arena.page_table[s0, 2]) != PAGE_NULL
+    # remaining budget: 3 of 6 pages committed -> a 4-page request
+    # must wait even though 2 slots are free
+    assert not arena.can_admit(9, 16)
+    assert arena.can_admit(5, 11)
+    s1 = arena.alloc(11, 5, 11)
+    assert arena.committed_pages == 6
+    assert not arena.can_admit(1, 2)    # budget exhausted, slot free
+    assert arena.n_free == 1
+    arena.release(s0)
+    assert arena.committed_pages == 3 and arena.pages_in_use == 2
+    assert all(p == PAGE_NULL for p in arena.page_table[s0])
+    with pytest.raises(RuntimeError):
+        arena.release(s0)               # double release
+    arena.release(s1)
+    assert arena.pages_in_use == 0 and arena.committed_pages == 0
+    # a single request larger than the whole pool can never be admitted
+    # (ceil((30 - 1) / 4) = 8 pages > the 6-page pool)
+    with pytest.raises(ValueError):
+        arena.check_request(9, 30)
+
+
+def test_paged_parity_with_lockstep(deployed):
+    """Simultaneous same-length requests through the paged engine ==
+    lockstep serve_batch, token for token (acceptance: ISSUE 2)."""
+    lm, tables = deployed
+    rng = np.random.default_rng(1)
+    P, G, B = 8, 6, 4
+    prompts = rng.integers(0, lm.cfg.vocab, size=(B, P))
+    ref = np.asarray(serve_batch(
+        lm, tables, jnp.asarray(prompts, jnp.int32), G))
+    eng = ServingEngine(
+        lm, tables, n_slots=B, max_len=P + G, paged=True, page_size=4,
+        scheduler=SchedulerConfig(max_prefills_per_step=B,
+                                  prefill_bucket=8))
+    ids = [eng.submit(prompts[i], max_new_tokens=G) for i in range(B)]
+    got = {c.req_id: c.tokens for c in eng.run_until_drained()}
+    for i, rid in enumerate(ids):
+        assert got[rid] == list(ref[i]), f"slot {i} diverged"
+    assert float_cache_leaves(eng.arena.caches) == []
+    assert_integer_caches(eng.arena.decode_view())  # incl. page tables
+
+
+def test_paged_parity_with_slot_engine_ragged(deployed):
+    """The paged engine must reproduce the contiguous SlotArena engine
+    token-for-token on a ragged prompt/budget workload with staggered
+    arrivals (acceptance: ISSUE 2), with the integer-only invariant
+    holding on every page."""
+    lm, tables = deployed
+    specs = [(5, 7), (12, 4), (9, 10), (3, 3), (20, 6), (12, 9),
+             (5, 2), (17, 5), (9, 12)]
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, lm.cfg.vocab, size=(p,)) for p, _ in specs]
+
+    def run(paged):
+        eng = ServingEngine(
+            lm, tables, n_slots=3, max_len=MAX_LEN, paged=paged,
+            page_size=8,
+            scheduler=SchedulerConfig(max_prefills_per_step=2,
+                                      prefill_bucket=8))
+        ids = []
+        for (p, g), prompt in zip(specs, prompts):
+            ids.append(eng.submit(prompt, max_new_tokens=g))
+            eng.step()                  # staggered arrival
+        done = {c.req_id: c for c in eng.run_until_drained()}
+        return [done[rid].tokens for rid in ids], eng
+
+    slot_tokens, _ = run(paged=False)
+    paged_tokens, eng = run(paged=True)
+    assert paged_tokens == slot_tokens
+    assert float_cache_leaves(eng.arena.caches) == []
+    assert_integer_caches(eng.arena.decode_view())
+    s = eng.stats()
+    assert s["arena"] == "paged"
+    # short requests never materialized the worst case
+    assert 0 < s["max_pages_in_use"] <= s["n_pages"]
+    assert s["max_pages_in_use"] < 3 * (MAX_LEN // s["page_size"])
+
+
+def test_page_exhaustion_backpressure(deployed):
+    """Admission is gated on the page budget, not free slots: with a
+    2-page pool and 6 free slots, three 2-page requests must run
+    strictly one at a time — and all still complete (preemption-free
+    backpressure, FCFS head-of-line)."""
+    lm, tables = deployed
+    rng = np.random.default_rng(5)
+    eng = ServingEngine(
+        lm, tables, n_slots=6, max_len=32, paged=True, page_size=8,
+        n_pages=2,
+        scheduler=SchedulerConfig(max_prefills_per_step=4,
+                                  prefill_bucket=8))
+    ids = [eng.submit(rng.integers(0, lm.cfg.vocab, size=(6,)),
+                      max_new_tokens=8) for _ in range(3)]
+    eng.step()
+    assert len(eng.active) == 1         # pages, not slots, gate entry
+    assert eng.sched.n_pending == 2
+    assert eng.arena.n_free == 5        # slots were never the limit
+    done = {c.req_id: c for c in eng.run_until_drained()}
+    assert len(done) == 3
+    assert eng.stats()["max_active"] == 1
+    for rid in ids:
+        assert done[rid].n_generated == 8
+        assert done[rid].finish_reason == "length"
+
+
+def test_page_recycling_no_stale_leakage(deployed):
+    """Pages freed by a completed request are reused by the next one,
+    and the recycled contents never leak: the tenant's tokens match a
+    fresh engine serving the same request on untouched pages."""
+    lm, tables = deployed
+    rng = np.random.default_rng(6)
+    prompt_a = rng.integers(0, lm.cfg.vocab, size=(11,))
+    prompt_b = rng.integers(0, lm.cfg.vocab, size=(7,))
+
+    def run_tracking_pages(eng, prompt, gen):
+        rid = eng.submit(prompt, max_new_tokens=gen)
+        pages = set()
+        while eng.sched.n_pending or eng.active:
+            eng.step()
+            pages |= {int(p) for p in np.unique(eng.arena.page_table)}
+        (c,) = [c for c in eng.completed if c.req_id == rid]
+        return c.tokens, pages - {PAGE_NULL}
+
+    eng = ServingEngine(
+        lm, tables, n_slots=1, max_len=24, paged=True, page_size=4,
+        n_pages=6, scheduler=SchedulerConfig(prefill_bucket=8))
+    tokens_a, pages_a = run_tracking_pages(eng, prompt_a, 8)
+    assert pages_a
+    assert eng.arena.pages_in_use == 0          # all recycled
+    tokens_b, pages_b = run_tracking_pages(eng, prompt_b, 9)
+    assert pages_a & pages_b                    # physical reuse happened
+
+    fresh = ServingEngine(
+        lm, tables, n_slots=1, max_len=24, paged=True, page_size=4,
+        n_pages=6, scheduler=SchedulerConfig(prefill_bucket=8))
+    tokens_b_fresh, _ = run_tracking_pages(fresh, prompt_b, 9)
+    assert tokens_b == tokens_b_fresh           # no stale-token leakage
+    assert tokens_a != tokens_b                 # the workloads differ
+
+
+def test_paged_submit_validation(deployed):
+    """A request whose own worst case exceeds the whole pool can never
+    be admitted — reject at submit instead of deadlocking the queue."""
+    lm, tables = deployed
+    eng = ServingEngine(lm, tables, n_slots=2, max_len=32, paged=True,
+                        page_size=8, n_pages=2)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(12, np.int32), max_new_tokens=12)  # 3 pages
+    eng.submit(np.zeros(8, np.int32), max_new_tokens=8)        # 2 pages
+    (c,) = eng.run_until_drained()
+    assert c.n_generated == 8
