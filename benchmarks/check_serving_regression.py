@@ -1,18 +1,22 @@
-"""CI throughput gate over BENCH_serving.json trajectories.
+"""CI throughput + TTFT gate over BENCH_serving.json trajectories.
 
-Gates every engine `tok_s` metric in a candidate benchmark result
-against the committed baseline and fails (exit 1) when any regressed
-by more than --max-regression (default 30%).
+Gates every engine `tok_s` metric AND every mixed-workload TTFT
+percentile (`p50_ttft_s` / `p95_ttft_s`) in a candidate benchmark
+result against the committed baseline and fails (exit 1) when any
+regressed by more than --max-regression (default 30%): throughput
+regresses by dropping, TTFT by rising.
 
 The committed baseline and the CI runner are different hardware, so
-absolute tok/s is not comparable across them.  Engine metrics are
+absolute numbers are not comparable across them.  Metrics are
 therefore normalized by the SAME RUN's lockstep `serve_batch`
 throughput — the frozen pre-engine reference path — before comparing:
-a real scheduling/arena regression moves the engine-to-lockstep ratio,
-while a uniformly slower runner moves numerator and denominator
-together and cancels.  Absolute values are printed for trajectory
-inspection but not gated.  Baseline metrics missing from the candidate
-fail (a silently dropped benchmark is a regression too).
+throughput as the engine-to-lockstep ratio, TTFT as seconds *times*
+lockstep tok/s (a hardware-neutral "tokens' worth of waiting").  A
+real scheduling/arena regression moves those ratios, while a uniformly
+slower runner moves numerator and denominator together and cancels.
+Absolute values are printed for trajectory inspection but not gated.
+Baseline metrics missing from the candidate fail (a silently dropped
+benchmark is a regression too).
 
   python benchmarks/check_serving_regression.py \
       --baseline BENCH_serving.json --candidate BENCH_new.json
@@ -24,19 +28,28 @@ import json
 import sys
 
 LOCKSTEP_KEY = "lockstep_uniform"
+TTFT_KEYS = ("p50_ttft_s", "p95_ttft_s")
 
 
-def tok_s_metrics(tree, prefix=""):
-    """Flatten {path: tok_s} for every nested dict carrying 'tok_s'."""
+def flat_metrics(tree, keys, prefix=""):
+    """Flatten {path: value} for every nested dict entry named in
+    `keys` ('tok_s' -> the path itself, others -> path.key)."""
     out = {}
     if not isinstance(tree, dict):
         return out
     for key, val in tree.items():
-        if key == "tok_s":
+        if key == "tok_s" and "tok_s" in keys:
             out[prefix.rstrip(".")] = float(val)
+        elif key in keys and key != "tok_s":
+            out[f"{prefix}{key}"] = float(val)
         elif isinstance(val, dict):
-            out.update(tok_s_metrics(val, f"{prefix}{key}."))
+            out.update(flat_metrics(val, keys, f"{prefix}{key}."))
     return out
+
+
+def tok_s_metrics(tree, prefix=""):
+    """Flatten {path: tok_s} for every nested dict carrying 'tok_s'."""
+    return flat_metrics(tree, ("tok_s",), prefix)
 
 
 def normalized(metrics):
@@ -47,47 +60,75 @@ def normalized(metrics):
     return {p: v / ref for p, v in metrics.items() if p != LOCKSTEP_KEY}
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", default="BENCH_serving.json")
-    ap.add_argument("--candidate", required=True)
-    ap.add_argument("--max-regression", type=float, default=0.30,
-                    help="maximal tolerated fractional drop of the "
-                         "engine-to-lockstep throughput ratio")
-    args = ap.parse_args()
-
-    with open(args.baseline) as f:
-        base_abs = tok_s_metrics(json.load(f))
-    with open(args.candidate) as f:
-        cand_abs = tok_s_metrics(json.load(f))
-    base = normalized(base_abs)
-    cand = normalized(cand_abs)
-
-    print(f"lockstep reference: {base_abs[LOCKSTEP_KEY]:.2f} tok/s "
-          f"(baseline) vs {cand_abs[LOCKSTEP_KEY]:.2f} tok/s (candidate)")
+def gate(base, cand, cand_abs, max_regression, *, higher_is_better,
+         unit):
+    """Compare normalized candidate metrics against the baseline;
+    returns the failure messages (printing every row either way)."""
     failures = []
     for path, ref in sorted(base.items()):
         if path not in cand:
             failures.append(f"{path}: missing from candidate")
             continue
         got = cand[path]
-        drop = 1.0 - got / ref if ref > 0 else 0.0
-        status = "FAIL" if drop > args.max_regression else "ok"
+        if higher_is_better:
+            drop = 1.0 - got / ref if ref > 0 else 0.0
+        else:
+            drop = got / ref - 1.0 if ref > 0 else 0.0
+        status = "FAIL" if drop > max_regression else "ok"
         print(f"{status:4s} {path}: ratio {ref:.3f} -> {got:.3f} "
-              f"({-drop:+.1%}; {cand_abs[path]:.2f} tok/s absolute)")
-        if drop > args.max_regression:
+              f"({-drop:+.1%}; {cand_abs[path]:.4g} {unit} absolute)")
+        if drop > max_regression:
             failures.append(
-                f"{path}: engine/lockstep ratio {ref:.3f} -> {got:.3f} "
-                f"({drop:.1%} drop > {args.max_regression:.0%})")
+                f"{path}: normalized {ref:.3f} -> {got:.3f} "
+                f"({drop:.1%} worse > {max_regression:.0%})")
     for path in sorted(set(cand) - set(base)):
         print(f"new  {path}: ratio {cand[path]:.3f} (no baseline)")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_serving.json")
+    ap.add_argument("--candidate", required=True)
+    ap.add_argument("--max-regression", type=float, default=0.30,
+                    help="maximal tolerated fractional regression of "
+                         "any lockstep-normalized engine metric "
+                         "(throughput drop or TTFT rise)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base_tree = json.load(f)
+    with open(args.candidate) as f:
+        cand_tree = json.load(f)
+    base_abs = tok_s_metrics(base_tree)
+    cand_abs = tok_s_metrics(cand_tree)
+    base = normalized(base_abs)
+    cand = normalized(cand_abs)
+
+    print(f"lockstep reference: {base_abs[LOCKSTEP_KEY]:.2f} tok/s "
+          f"(baseline) vs {cand_abs[LOCKSTEP_KEY]:.2f} tok/s (candidate)")
+    failures = gate(base, cand, cand_abs, args.max_regression,
+                    higher_is_better=True, unit="tok/s")
+
+    # TTFT percentiles: seconds * lockstep tok/s = tokens' worth of
+    # waiting; a >30% rise of that hardware-neutral number is a real
+    # scheduling regression (chunked prefill's reason to exist)
+    base_ttft = flat_metrics(base_tree, TTFT_KEYS)
+    cand_ttft = flat_metrics(cand_tree, TTFT_KEYS)
+    if base_ttft or cand_ttft:
+        b_ref, c_ref = base_abs[LOCKSTEP_KEY], cand_abs[LOCKSTEP_KEY]
+        failures += gate(
+            {p: v * b_ref for p, v in base_ttft.items()},
+            {p: v * c_ref for p, v in cand_ttft.items()},
+            cand_ttft, args.max_regression,
+            higher_is_better=False, unit="s")
 
     if failures:
-        print("\nthroughput regression gate FAILED:")
+        print("\nserving regression gate FAILED:")
         for f_ in failures:
             print(f"  - {f_}")
         sys.exit(1)
-    print("\nthroughput regression gate passed")
+    print("\nserving regression gate passed")
 
 
 if __name__ == "__main__":

@@ -58,11 +58,13 @@ def roofline_table(recs) -> str:
         for shape in SHAPE_ORDER:
             r = recs.get((arch, shape))
             if r is None:
-                lines.append(f"| {arch} | {shape} | - | - | - | MISSING | | | |")
+                lines.append(
+                    f"| {arch} | {shape} | - | - | - | MISSING | | | |")
                 continue
             if r["status"] == "skipped":
                 lines.append(
-                    f"| {arch} | {shape} | — | — | — | *skip: full attn @524k* | — | — | — |")
+                    f"| {arch} | {shape} | — | — | — "
+                    f"| *skip: full attn @524k* | — | — | — |")
                 continue
             if r["status"] != "ok":
                 lines.append(f"| {arch} | {shape} | ERROR | | | | | | |")
@@ -87,7 +89,8 @@ def roofline_table(recs) -> str:
 
 def memory_table(recs) -> str:
     lines = [
-        "| arch | shape | args/dev | temps/dev | fits 16G | collectives (AR/AG/RS/A2A/CP bytes) |",
+        "| arch | shape | args/dev | temps/dev | fits 16G "
+        "| collectives (AR/AG/RS/A2A/CP bytes) |",
         "|---|---|---|---|---|---|",
     ]
     for (arch, shape) in sorted(recs):

@@ -136,8 +136,8 @@ def bench_lm_integer_agreement():
         us_fp, lf = _timeit(jax.jit(fp_logits), tokens)
         us_id, li = _timeit(jax.jit(id_logits), tokens)
         lf = np.asarray(lf, np.float64)[:, -1, :cfg.vocab]
-        li = np.asarray(li, np.float64)[:, -1, :cfg.vocab] \
-            * float(t["meta"]["eps_logits"])
+        li = (np.asarray(li, np.float64)[:, -1, :cfg.vocab]
+              * float(t["meta"]["eps_logits"]))
         cc = np.corrcoef(lf.ravel(), li.ravel())[0, 1]
         rows.append((f"lm_id_{arch}", us_id,
                      f"corr_vs_fp={cc:.4f}_fp_us={us_fp:.0f}"))

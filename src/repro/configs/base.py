@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional
+from typing import Dict
 
 _REGISTRY: Dict[str, "ArchConfig"] = {}
 
@@ -83,7 +83,8 @@ class ArchConfig:
             top_k=min(self.top_k, 2),
             moe_group=64,
             ssm_state=min(self.ssm_state, 16),
-            ssm_head_dim=32 if self.ssm_kind == "mamba2" else self.ssm_head_dim,
+            ssm_head_dim=(32 if self.ssm_kind == "mamba2"
+                          else self.ssm_head_dim),
             shared_attn_every=(2 if self.shared_attn_every else 0),
             name=self.name + "_reduced",
         )
@@ -96,8 +97,9 @@ class ArchConfig:
         n = 2 * V * d  # embed + head
         for i in range(L):
             if self.family in ("dense", "moe"):
-                attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
-                    + self.n_heads * hd * d
+                attn = (d * self.n_heads * hd
+                        + 2 * d * self.n_kv_heads * hd
+                        + self.n_heads * hd * d)
                 n += attn + 2 * d  # norms
                 is_moe = self.n_experts > 0 and (i % self.moe_every
                                                  == self.moe_every - 1)
@@ -120,8 +122,8 @@ class ArchConfig:
                 n += (d * (2 * di + 2 * self.ssm_state + H) + di * d + 3 * H
                       + 2 * di + d)
         if self.family == "hybrid" and self.shared_attn_every:
-            n += 2 * d * (self.n_heads + 2 * self.n_kv_heads) * hd \
-                + self.n_heads * hd * d
+            n += (2 * d * (self.n_heads + 2 * self.n_kv_heads) * hd
+                  + self.n_heads * hd * d)
         return int(n)
 
     def active_param_count(self) -> int:
@@ -131,8 +133,8 @@ class ArchConfig:
         full = self.param_count()
         L_moe = self.n_layers // self.moe_every
         ff_mats = 3 if self.gated else 2
-        inactive = (self.n_experts - self.top_k) * ff_mats \
-            * self.d_model * self.d_ff * L_moe
+        inactive = ((self.n_experts - self.top_k) * ff_mats
+                    * self.d_model * self.d_ff * L_moe)
         return int(full - inactive)
 
 

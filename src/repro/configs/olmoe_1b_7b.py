@@ -1,4 +1,5 @@
-"""OLMoE-1B-7B [moe; arXiv:2409.02060] — 64 experts, top-8, d_ff=1024/expert."""
+"""OLMoE-1B-7B [moe; arXiv:2409.02060]: 64 experts, top-8,
+d_ff=1024/expert."""
 from repro.configs.base import ArchConfig, register
 
 register(ArchConfig(

@@ -13,20 +13,19 @@ Three deployment strategies, all implemented:
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantum import INT8, QMeta, QuantSpec
-from repro.core.requant import RequantParams, apply_requant
+from repro.core.quantum import INT8, QuantSpec
 
 # ---------------------------------------------------------------------------
 # (i) BN folding, Eq. 18  (host-side, transform time)
 # ---------------------------------------------------------------------------
 
 
-def fold_bn(w: np.ndarray, b, gamma, beta, mu, sigma, *, channel_axis: int = -1):
+def fold_bn(w: np.ndarray, b, gamma, beta, mu, sigma, *,
+            channel_axis: int = -1):
     """w <- gamma/sigma * w ;  b <- gamma/sigma * b + beta - gamma/sigma * mu.
 
     Eq. 18 is written for the bias-free Linear of Eq. 2; when the original
@@ -39,7 +38,8 @@ def fold_bn(w: np.ndarray, b, gamma, beta, mu, sigma, *, channel_axis: int = -1)
     shape[channel_axis] = -1
     w_f = w * kappa.reshape(shape)
     b = np.float64(0.0) if b is None else np.asarray(b, np.float64)
-    b_f = kappa * b + np.asarray(beta, np.float64) - kappa * np.asarray(mu, np.float64)
+    b_f = (kappa * b + np.asarray(beta, np.float64)
+           - kappa * np.asarray(mu, np.float64))
     return w_f, b_f
 
 
@@ -82,7 +82,8 @@ def make_integer_bn(
     # symmetric quantizer for kappa (paper: eps = 2*beta_k/(2^Q - 1))
     beta_k = np.maximum(np.max(np.abs(kappa)), 1e-12)
     eps_k = 2.0 * beta_k / (kappa_spec.levels - 1)
-    q_kappa = np.clip(np.round(kappa / eps_k), kappa_spec.qmin, kappa_spec.qmax)
+    q_kappa = np.clip(np.round(kappa / eps_k), kappa_spec.qmin,
+                      kappa_spec.qmax)
 
     # int32 budget: |q_k * (q_phi >> s)| < 2^30
     kmax = float(np.max(np.abs(q_kappa)))
@@ -121,7 +122,8 @@ def make_bn_act_thresholds(
     gamma, beta, mu, sigma, eps_phi, eps_y, n_levels: int,
     *, rounded: bool = False,
 ) -> np.ndarray:
-    """TH_i = ceil( 1/eps_phi * (sigma/gamma * i * eps_y - beta*sigma/gamma + mu) ).
+    """TH_i = ceil((sigma/gamma * i * eps_y - beta*sigma/gamma + mu)
+    / eps_phi).
 
     Returns (C, n_levels-1) int64 thresholds for i = 1..n_levels-1 (level 0
     needs no threshold); assumes gamma, sigma > 0 (paper: 'by construction
@@ -144,7 +146,8 @@ def make_bn_act_thresholds(
     if rounded:
         i = i - 0.5
     s_over_g = (sigma / gamma)[:, None]
-    th = (s_over_g * i * float(eps_y) - beta[:, None] * s_over_g + mu[:, None]) / float(eps_phi)
+    th = (s_over_g * i * float(eps_y) - beta[:, None] * s_over_g
+          + mu[:, None]) / float(eps_phi)
     return np.ceil(th).astype(np.int64)
 
 

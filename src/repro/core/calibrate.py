@@ -11,7 +11,6 @@ import dataclasses
 from typing import Dict, Tuple
 
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclasses.dataclass
@@ -30,8 +29,10 @@ class Calibrator:
             self.hi[name] = max(self.hi[name], x_hi)
         else:
             m = self.momentum
-            self.lo[name] = (1 - m) * self.lo[name] + m * min(self.lo[name], x_lo)
-            self.hi[name] = (1 - m) * self.hi[name] + m * max(self.hi[name], x_hi)
+            self.lo[name] = ((1 - m) * self.lo[name]
+                             + m * min(self.lo[name], x_lo))
+            self.hi[name] = ((1 - m) * self.hi[name]
+                             + m * max(self.hi[name], x_hi))
 
     def range(self, name: str, *, default: Tuple[float, float] = (0.0, 6.0),
               margin: float = 0.0) -> Tuple[float, float]:
@@ -52,7 +53,8 @@ class Calibrator:
         return max(float(self.hi[name]), 1e-6)
 
     def merge(self, other: "Calibrator") -> None:
-        """Combine stats from another shard/host (data-parallel calibration)."""
+        """Combine stats from another shard/host (data-parallel
+        calibration)."""
         for name in other.hi:
             if name not in self.hi:
                 self.lo[name], self.hi[name] = other.lo[name], other.hi[name]

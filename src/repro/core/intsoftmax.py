@@ -11,7 +11,8 @@ bounded range; we adapt that to NEMO's staircase formalism:
   the 2^(-z) factor is a right shift of the LUT output.
 
 Pipeline (all int32):
-  s        : integer scores, quantum eps_s       (attention: eps_q*eps_k/sqrt(hd))
+  s        : integer scores, quantum eps_s
+             (attention: eps_q*eps_k/sqrt(hd))
   m        : rowmax(s)                           (integer max)
   t        : s - m                               (<= 0)
   z        : (t * m_ln2) >> d_ln2                (fixed-point /ln2, negated)

@@ -90,7 +90,8 @@ def _pact_asymm_bwd(n_bits, res, g):
     dx = jnp.where(in_range, g, 0.0)
     dbeta = jnp.sum(jnp.where(x >= beta, g, 0.0)).astype(beta.dtype)
     dalpha = jnp.sum(jnp.where(x < alpha, g, 0.0)).astype(alpha.dtype)
-    return dx, jnp.reshape(dalpha, jnp.shape(alpha)), jnp.reshape(dbeta, jnp.shape(beta))
+    return (dx, jnp.reshape(dalpha, jnp.shape(alpha)),
+            jnp.reshape(dbeta, jnp.shape(beta)))
 
 
 pact_act_asymm.defvjp(_pact_asymm_fwd, _pact_asymm_bwd)

@@ -56,7 +56,8 @@ class QuantSpec:
 
     @property
     def qmax(self) -> int:
-        return (1 << (self.n_bits - 1)) - 1 if self.signed else (1 << self.n_bits) - 1
+        return ((1 << (self.n_bits - 1)) - 1 if self.signed
+                else (1 << self.n_bits) - 1)
 
     @property
     def levels(self) -> int:
@@ -132,7 +133,8 @@ class QMeta:
 # ---------------------------------------------------------------------------
 
 
-def quantize_affine(x, eps, zp: int, spec: QuantSpec, *, rounding: str = "floor"):
+def quantize_affine(x, eps, zp: int, spec: QuantSpec, *,
+                    rounding: str = "floor"):
     """LQ_y(t): map real x to a *stored* integer image (Eq. 10).
 
     stored = clip(floor(x / eps) + zp, store_min, store_max)
@@ -158,9 +160,11 @@ def dequantize(stored, eps, zp: int):
     return (stored.astype(jnp.float32) - zp) * jnp.asarray(eps, jnp.float32)
 
 
-def fake_quantize(x, eps, zp: int, spec: QuantSpec, *, rounding: str = "floor"):
+def fake_quantize(x, eps, zp: int, spec: QuantSpec, *,
+                  rounding: str = "floor"):
     """quantize → dequantize in one go (the FQ forward restriction)."""
-    return dequantize(quantize_affine(x, eps, zp, spec, rounding=rounding), eps, zp)
+    return dequantize(
+        quantize_affine(x, eps, zp, spec, rounding=rounding), eps, zp)
 
 
 # ---------------------------------------------------------------------------
@@ -168,7 +172,8 @@ def fake_quantize(x, eps, zp: int, spec: QuantSpec, *, rounding: str = "floor"):
 # ---------------------------------------------------------------------------
 
 
-def act_qmeta(beta: float, spec: QuantSpec = UINT8, alpha: float = 0.0) -> QMeta:
+def act_qmeta(beta: float, spec: QuantSpec = UINT8,
+              alpha: float = 0.0) -> QMeta:
     """Quantum for a clipped activation on [alpha, beta) (paper §2.2).
 
     eps = (beta - alpha) / (2^Q - 1);  ReLU-family uses alpha=0.
@@ -177,13 +182,15 @@ def act_qmeta(beta: float, spec: QuantSpec = UINT8, alpha: float = 0.0) -> QMeta
     if beta <= alpha:
         raise ValueError(f"need beta > alpha, got [{alpha}, {beta})")
     eps = (beta - alpha) / (spec.levels - 1)
-    # real = alpha + eps*image, image in [0, 2^Q-1]; stored = image + spec.zero_point
+    # real = alpha + eps*image, image in [0, 2^Q-1];
+    # stored = image + spec.zero_point
     # real = eps*(stored - zp_eff)  with  zp_eff = spec.zero_point - alpha/eps
     zp_eff = spec.zero_point - int(round(alpha / eps))
     return QMeta.make(eps, zp_eff, spec)
 
 
-def weight_qmeta(w: np.ndarray, spec: QuantSpec = INT8, channel_axis: Optional[int] = 0) -> QMeta:
+def weight_qmeta(w: np.ndarray, spec: QuantSpec = INT8,
+                 channel_axis: Optional[int] = 0) -> QMeta:
     """Symmetric per-channel weight quantum: eps = 2*beta/(2^Q - 1).
 
     (paper §3.4 'symmetric (alpha=-beta) Q-bit quantizer'); beta is the
@@ -213,7 +220,8 @@ def quantize_np(x: np.ndarray, meta: QMeta, *, rounding: str = "round",
     return q.astype(np.dtype(meta.spec.dtype))
 
 
-def dequantize_np(q: np.ndarray, meta: QMeta, *, channel_axis: Optional[int] = None) -> np.ndarray:
+def dequantize_np(q: np.ndarray, meta: QMeta, *,
+                  channel_axis: Optional[int] = None) -> np.ndarray:
     eps = meta.eps
     if meta.per_channel and channel_axis is not None:
         shape = [1] * q.ndim

@@ -117,7 +117,8 @@ class RequantParams:
             scale = m * math.pow(2.0, -d)  # ~= ratio
             pre_hi = np.minimum(np.ceil(span_hi / scale) + 1.0, 2.0 ** 31 - 1)
             pre_lo = np.maximum(np.floor(span_lo / scale) - 1.0, -(2.0 ** 31))
-            eff = np.minimum(acc_bound, np.maximum(np.abs(pre_hi), np.abs(pre_lo)))
+            eff = np.minimum(acc_bound,
+                             np.maximum(np.abs(pre_hi), np.abs(pre_lo)))
             with np.errstate(divide="ignore"):
                 need = np.ceil(np.log2(np.maximum(eff * m, 1.0))).astype(int)
             s0 = np.maximum(np.maximum(need - _INT32_BUDGET, d - 31), 0)
@@ -249,7 +250,8 @@ def make_rqt(eps_in, eps_out, *, zp_out: int = 0, qmin: int = -128,
     return rp.to_tree()
 
 
-def requant_identity(zp_out: int = 0, qmin: int = -128, qmax: int = 127) -> RequantParams:
+def requant_identity(zp_out: int = 0, qmin: int = -128,
+                     qmax: int = 127) -> RequantParams:
     """m=1, d=0 pass-through (used where eps already matches, D=1 case of
     the paper's PACT_IntegerBatchNorm2d lambda path)."""
     big = 2 ** 31 - 1
@@ -266,7 +268,8 @@ def requant_identity(zp_out: int = 0, qmin: int = -128, qmax: int = 127) -> Requ
 
 def requant_exact(q: np.ndarray, eps_in, eps_out) -> np.ndarray:
     """The ideal real-valued rescale eps_a/eps_b * q (error oracle)."""
-    return np.asarray(q, np.float64) * (np.asarray(eps_in, np.float64) / float(eps_out))
+    return np.asarray(q, np.float64) * (np.asarray(eps_in, np.float64)
+                                        / float(eps_out))
 
 
 def scale_rel_error(rp: RequantParams, eps_in, eps_out) -> np.ndarray:

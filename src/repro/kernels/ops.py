@@ -7,7 +7,6 @@ the entry points the serving path uses when `use_kernels=True`.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -28,9 +28,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e9
 
@@ -46,8 +44,12 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, score_scale: float,
 
     def body(j, carry):
         m_old, l_old, acc = carry
-        k_blk = pl.load(k_ref, (0, pl.ds(j * bkv, bkv), slice(None)))
-        v_blk = pl.load(v_ref, (0, pl.ds(j * bkv, bkv), slice(None)))
+        # pl.ds(0, 1) instead of an int 0: interpret-mode discharge
+        # rejects scalar int indices (AttributeError on .shape)
+        k_blk = pl.load(
+            k_ref, (pl.ds(0, 1), pl.ds(j * bkv, bkv), slice(None)))[0]
+        v_blk = pl.load(
+            v_ref, (pl.ds(0, 1), pl.ds(j * bkv, bkv), slice(None)))[0]
         s = jax.lax.dot_general(
             q, k_blk, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.int32)          # (bq, bkv)

@@ -22,7 +22,6 @@ import time
 import traceback
 from pathlib import Path
 
-import jax
 import numpy as np
 
 from repro.configs.base import ARCH_IDS, get_config
@@ -79,7 +78,8 @@ def _loop_multipliers(comps: dict) -> dict:
     """
     # call edges: comp -> comps it references
     refs = {
-        name: set(re.findall(r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)",
+        name: set(re.findall(
+            r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)",
                              text))
         for name, text in comps.items()
     }
@@ -102,8 +102,10 @@ def _loop_multipliers(comps: dict) -> dict:
         seen[name] = m
         text = comps.get(name, "")
         for w in re.finditer(
-                r"while\([^\n]*?condition=%?([\w\.\-]+)[^\n]*?body=%?([\w\.\-]+)"
-                r"|while\([^\n]*?body=%?([\w\.\-]+)[^\n]*?condition=%?([\w\.\-]+)",
+                r"while\([^\n]*?condition=%?([\w\.\-]+)"
+                r"[^\n]*?body=%?([\w\.\-]+)"
+                r"|while\([^\n]*?body=%?([\w\.\-]+)"
+                r"[^\n]*?condition=%?([\w\.\-]+)",
                 text):
             cond = w.group(1) or w.group(4)
             body = w.group(2) or w.group(3)

@@ -20,9 +20,8 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
-import jax
 import numpy as np
 
 from repro.checkpoint import manager as ckpt

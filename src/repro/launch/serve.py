@@ -82,6 +82,12 @@ def main():
     ap.add_argument("--ragged", action="store_true",
                     help="vary prompt/gen lengths per request")
     ap.add_argument("--prefill-bucket", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="chunked-prefill chunk size (dense family); "
+                         "0 = whole-prompt bucketed prefill")
+    ap.add_argument("--max-chunks-per-step", type=int, default=0,
+                    help="fairness knob: chunk rows per packed prefill "
+                         "dispatch (0: every prefilling slot)")
     ap.add_argument("--paged", action="store_true",
                     help="paged KV arena (page budgets instead of "
                          "worst-case slot rows)")
@@ -97,7 +103,11 @@ def main():
         lm, tables, n_slots=args.slots, max_len=max_len,
         paged=args.paged, page_size=args.page_size,
         n_pages=args.pages or None,
-        scheduler=SchedulerConfig(prefill_bucket=args.prefill_bucket))
+        scheduler=SchedulerConfig(
+            prefill_bucket=args.prefill_bucket,
+            prefill_chunk=args.prefill_chunk,
+            max_chunks_per_step=args.max_chunks_per_step or None))
+    engine.warmup()  # precompile decode + every chunk row bucket
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         if args.ragged:

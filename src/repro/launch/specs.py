@@ -13,7 +13,6 @@ from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.rep import Rep

@@ -8,12 +8,10 @@ Shape -> step mapping (assignment):
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, get_config

@@ -12,13 +12,11 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import get_config
 from repro.core.rep import Rep
 from repro.data.synthetic import SyntheticConfig, SyntheticStream
 from repro.launch.elastic import TrainSupervisor
-from repro.launch.mesh import make_host_mesh
 from repro.models.lm import DecoderLM
 from repro.optim.adamw import adamw_init, adamw_update
 from repro.optim.grad_compress import (

@@ -23,17 +23,18 @@ FQ lowering: PACT with learnable clip (pact_act / pact_act_asymm) applied
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.intmath import apply_lut, build_lut
 from repro.core.pact import pact_act, pact_act_asymm
-from repro.core.quantum import fake_quantize, INT8, UINT8
 from repro.core.requant import apply_rqt, make_rqt
 from repro.core.rep import Rep
-from repro.layers.common import ACT_QMAX, ACT_QMIN, ActKind, DeployCtx, act_fn, act_fn_np
+from repro.layers.common import (
+    ACT_QMAX, ACT_QMIN, ActKind, DeployCtx, act_fn, act_fn_np,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,8 +106,8 @@ class QAct:
             hi = max(hi, lo + 1e-6)
             eps_y = (hi - lo) / (2 ** self.n_bits - 1)
             # stored zero-point puts `lo` at ACT_QMIN (0 when symmetric)
-            zp = 0 if (self.sym and not self.kind.zero_lo) \
-                else ACT_QMIN - int(round(lo / eps_y))
+            zp = (0 if (self.sym and not self.kind.zero_lo)
+                  else ACT_QMIN - int(round(lo / eps_y)))
             if self.kind in (ActKind.IDENTITY, ActKind.RELU):
                 rqt = make_rqt(
                     eps_in, eps_y, zp_out=zp, qmin=ACT_QMIN, qmax=ACT_QMAX,
@@ -162,14 +163,15 @@ class QAct:
             return apply_rqt(acc, tables["rqt"], channel_axis=channel_axis)
         if self.kind is ActKind.RELU2:
             s = apply_rqt(acc, tables["rqt"], channel_axis=channel_axis)
-            img = s.astype(jnp.int32) - ACT_QMIN      # [0, 255] after ReLU-floor
+            img = s.astype(jnp.int32) - ACT_QMIN  # [0,255] by ReLU-floor
             img = jnp.maximum(img, 0)
             sq = img * img                            # exact, <= 65025
             return apply_rqt(sq, tables["rqt2"], channel_axis=channel_axis)
         s = apply_rqt(acc, tables["rqt"], channel_axis=channel_axis)
         return apply_lut(s, tables["lut"], qmin=ACT_QMIN)
 
-    def apply(self, state, x, rep, *, channel_axis: int = -1, calib=None, scope=""):
+    def apply(self, state, x, rep, *, channel_axis: int = -1,
+              calib=None, scope=""):
         if rep is Rep.ID:
             return self.apply_id(state, x, channel_axis=channel_axis)
         if rep is Rep.FQ:

@@ -46,9 +46,11 @@ class QAdd:
         # requantize each branch into Z_s/2 so the int8 sum cannot wrap:
         # each branch image is clipped to [-64, 63] half-range... instead we
         # sum in int32 and clip once — branch requants output int32 images.
-        rq_a = make_rqt(eps_a, eps_s, zp_out=0, qmin=-(1 << 24), qmax=(1 << 24),
+        rq_a = make_rqt(eps_a, eps_s, zp_out=0,
+                        qmin=-(1 << 24), qmax=(1 << 24),
                         requant_factor=ctx.factor, acc_bound=float(1 << 16))
-        rq_b = make_rqt(eps_b, eps_s, zp_out=0, qmin=-(1 << 24), qmax=(1 << 24),
+        rq_b = make_rqt(eps_b, eps_s, zp_out=0,
+                        qmin=-(1 << 24), qmax=(1 << 24),
                         requant_factor=ctx.factor, acc_bound=float(1 << 16))
         return (
             {"rq_a": rq_a, "rq_b": rq_b,

@@ -8,7 +8,8 @@ ID dataflow (DESIGN.md §3.7 island (a)):
          --int8 QK^T-->            int32 scores
          == float island ==        scores * (eps_q*eps_k/sqrt(hd)) + mask
                                    softmax -> probs in [0,1]
-                                   round(probs * 127)  -> int8 (zp=0, eps=1/127)
+                                   round(probs * 127) -> int8
+                                   (zp=0, eps=1/127)
          == island exit ==
          --int8 P.V-->             int32 acc  (bounded: sum p_img ~ 127)
          --requant-->              int8 attention output
@@ -27,6 +28,18 @@ sequence offset (ragged positions).  RoPE gather, causal masking, and
 the one-hot cache write all broadcast the per-row position; the math at
 each row is identical to the scalar-pos path at that row's offset.
 
+Chunked prefill (repro.serving, batched): a per-slot `pos` vector with
+S > 1 writes an S-token *chunk* into each row's cache at that row's own
+offset — the packed prefill dispatch of ServingEngine, where row b
+carries tokens [pos[b], pos[b] + S) of its prompt.  Rows parked at
+INACTIVE_POS (free or decoding slots riding along in the fixed-shape
+dispatch, and the padded tail of a final partial chunk past the arena)
+write nothing: the per-row write helpers mask every target position
+>= the cache length, so a packed prefill can never corrupt a
+neighboring slot's cache.  Their attention math still runs (garbage in,
+garbage out) but the engine reads logits only from rows whose final
+chunk completed.
+
 Paged KV (serving.cache.PagedArena): a decode cache dict may carry a
 per-slot page "table" (B, pages_per_slot) next to its pooled "k"/"v"
 leaves (n_pages + 1, K, page_size, hd).  The new column is scattered
@@ -38,16 +51,16 @@ causal masking, so paged decode is bit-exact with the contiguous path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.requant import apply_rqt, make_rqt
+from repro.core.requant import apply_rqt
 from repro.core.rep import Rep
 from repro.layers.act_quant import QAct
-from repro.layers.common import ACT_QMAX, ACT_QMIN, ActKind, DeployCtx
+from repro.layers.common import ActKind, DeployCtx
 from repro.layers.linear import QLinear
 from repro.layers.rope import (
     apply_rope_fp, apply_rope_int, rope_tables_fp, rope_tables_int,
@@ -55,6 +68,12 @@ from repro.layers.rope import (
 
 EPS_P = 1.0 / 127.0  # probability quantum (symmetric int8, zp=0)
 NEG_INF = -1e9
+PAGE_NULL = 0  # physical page 0 is the trash page (serving.cache re-exports)
+# Rows of a packed (decode or chunked-prefill) dispatch that carry no
+# real work are parked at this position: far past any cache length, so
+# every per-row cache write masks to a no-op, yet small enough that
+# pos + chunk stays int32-safe.
+INACTIVE_POS = 1 << 30
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,7 +105,7 @@ class QAttention:
     def init(self, key) -> dict:
         subs = self._sub()
         keys = jax.random.split(key, len(subs))
-        return {n: l.init(k) for (n, l), k in zip(subs.items(), keys)}
+        return {n: lay.init(k) for (n, lay), k in zip(subs.items(), keys)}
 
     # ------------------------------------------------------------------
     def _shape_qkv(self, q, k, v, B, S):
@@ -213,7 +232,7 @@ class QAttention:
     BLOCKWISE_THRESHOLD = 4096  # S_q above this -> streaming attention
 
     def apply_id(self, t, s_x, *, cache=None, pos=None):
-        """s_x: (B, S, d) int8 (zp=0).  Returns (int32 wo-accumulator, cache)."""
+        """s_x: (B, S, d) int8 (zp=0).  Returns (int32 wo-acc, cache)."""
         from repro.sharding.hints import hint
 
         subs = self._sub()
@@ -376,28 +395,37 @@ def _paged_kv_view(pool, table):
 
 
 def _paged_column_write(pool, new, pos, table):
-    """Scatter a single-token column (B, K, 1, hd) into each row's page.
+    """Scatter a multi-token chunk (B, K, S, hd) into each row's pages.
 
-    Row b writes page table[b, pos[b] // page_size] at in-page offset
-    pos[b] % page_size.  Free rows carry PAGE_NULL tables, so their
-    garbage columns land on the shared trash page (write order among
-    trash collisions is irrelevant — the trash page is never unmasked).
+    Row b writes positions [pos[b], pos[b] + S): token s lands on page
+    table[b, (pos[b] + s) // page_size] at in-page offset
+    (pos[b] + s) % page_size.  Positions past the table's logical
+    length (rows parked at INACTIVE_POS, or the padded tail of a final
+    partial chunk) and PAGE_NULL table entries both land on the shared
+    trash page — write order among trash collisions is irrelevant
+    because the trash page is never unmasked.
     """
     ps = pool.shape[2]
-    blk = pos // ps
-    page = jnp.take_along_axis(table, blk[:, None], axis=1)[:, 0]
-    return pool.at[page, :, pos % ps, :].set(
-        new[:, :, 0, :].astype(pool.dtype))
+    B, _, S, _ = new.shape
+    pps = table.shape[1]
+    positions = pos[:, None] + jnp.arange(S)          # (B, S)
+    valid = positions < pps * ps
+    blk = jnp.clip(positions // ps, 0, pps - 1)
+    page = jnp.take_along_axis(table, blk, axis=1)    # (B, S)
+    page = jnp.where(valid, page, PAGE_NULL)
+    off = positions % ps
+    new_f = jnp.moveaxis(new, 2, 1).reshape((B * S,) + new.shape[1:2]
+                                            + new.shape[3:])
+    return pool.at[page.reshape(-1), :, off.reshape(-1), :].set(
+        new_f.astype(pool.dtype))
 
 
 def _paged_cache_update(cache, k, v, pos):
-    """Paged decode cache step: write the new column through the page
+    """Paged cache step: write the new column(s) through the page
     table, then gather the logical dense view (write-then-gather keeps
-    the contiguous-path semantics: the view includes the new token).
-    Returns (k_view, v_view, new_cache)."""
-    if k.shape[2] != 1:
-        raise NotImplementedError(
-            "paged KV caches support single-token decode only")
+    the contiguous-path semantics: the view includes the new tokens).
+    Single-token decode and multi-token chunked prefill share this
+    path.  Returns (k_view, v_view, new_cache)."""
     pos_v = jnp.asarray(pos)
     if pos_v.ndim != 1:
         raise NotImplementedError(
@@ -406,8 +434,8 @@ def _paged_cache_update(cache, k, v, pos):
     k_pool = _paged_column_write(cache["k"], k, pos_v, table)
     v_pool = _paged_column_write(cache["v"], v, pos_v, table)
     new_cache = {"k": k_pool, "v": v_pool, "table": table}
-    return _paged_kv_view(k_pool, table), _paged_kv_view(v_pool, table), \
-        new_cache
+    return (_paged_kv_view(k_pool, table), _paged_kv_view(v_pool, table),
+            new_cache)
 
 
 def _cache_write(cache, new, pos):
@@ -419,22 +447,32 @@ def _cache_write(cache, new, pos):
     rematerialization — §Perf hillclimb A, iteration 2).  Multi-token
     writes (prefill) keep dynamic_update_slice (offset is the static 0).
 
-    A per-slot `pos` vector (B,) writes each batch row at its own offset
-    (one-hot per row; dynamic_update_slice has no per-row offsets).
+    A per-slot `pos` vector (B,) writes each batch row at its own offset:
+    one-hot per row for single-token decode, a masked per-row gather for
+    multi-token chunks (chunked prefill) — dynamic_update_slice has no
+    per-row offsets.  Rows parked at INACTIVE_POS (>= T) write nothing.
     """
     from repro.launch import variants
 
     S, T = new.shape[2], cache.shape[2]
-    if S == T:
-        return new
     pos_v = None if pos is None else jnp.asarray(pos)
     if pos_v is not None and pos_v.ndim == 1:
-        if S != 1:
-            raise NotImplementedError(
-                "per-slot cache writes are single-token (decode) only")
-        oh = (jnp.arange(T)[None, :] == pos_v[:, None])
-        oh = oh.astype(cache.dtype)[:, None, :, None]       # (B,1,T,1)
-        return cache * (1 - oh) + new.astype(cache.dtype) * oh
+        if S == 1:
+            oh = (jnp.arange(T)[None, :] == pos_v[:, None])
+            oh = oh.astype(cache.dtype)[:, None, :, None]   # (B,1,T,1)
+            return cache * (1 - oh) + new.astype(cache.dtype) * oh
+        # chunked prefill: row b writes positions [pos[b], pos[b] + S).
+        # Cache position t takes chunk column t - pos[b] when that lands
+        # in [0, S); everything else keeps the old cache value.
+        t_rel = jnp.arange(T)[None, :] - pos_v[:, None]     # (B, T)
+        valid = (t_rel >= 0) & (t_rel < S)
+        idx = jnp.clip(t_rel, 0, S - 1)[:, None, :, None]   # (B,1,T,1)
+        gathered = jnp.take_along_axis(
+            new.astype(cache.dtype),
+            jnp.broadcast_to(idx, cache.shape), axis=2)
+        return jnp.where(valid[:, None, :, None], gathered, cache)
+    if S == T:
+        return new
     if S == 1 and variants.get("kv_update") == "onehot":
         oh = (jnp.arange(T) == pos).astype(cache.dtype)[None, None, :, None]
         return cache * (1 - oh) + new.astype(cache.dtype) * oh

@@ -33,7 +33,8 @@ class ActKind(enum.Enum):
 
     @property
     def zero_lo(self) -> bool:
-        """Activations clipped at 0 from below (paper's canonical [0, beta))."""
+        """Activations clipped at 0 from below (paper's canonical
+        [0, beta))."""
         return self in (ActKind.RELU, ActKind.RELU2)
 
 

@@ -12,21 +12,20 @@ zero-point correction.  BN handling offers the paper's full menu:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bn import (
-    IntegerBNParams, apply_integer_bn, apply_thresholds, bn_apply_float,
-    fold_bn, make_bn_act_thresholds, make_integer_bn,
+    IntegerBNParams, bn_apply_float,
+    make_bn_act_thresholds, make_integer_bn,
 )
 from repro.core.intmath import avgpool_requant_params, int_avgpool_combine
 from repro.core.pact import default_weight_beta, pact_weight
-from repro.core.requant import apply_rqt, make_rqt
 from repro.core.rep import Rep
-from repro.layers.common import ACT_QMAX, ACT_QMIN, DeployCtx
+from repro.layers.common import ACT_QMAX, ACT_QMIN
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,7 +68,8 @@ class QConv2d:
             y = y + p["b"]
         return y
 
-    def deploy(self, p_np: dict, eps_x: float, zp_x: int) -> Tuple[dict, np.ndarray]:
+    def deploy(self, p_np: dict, eps_x: float,
+               zp_x: int) -> Tuple[dict, np.ndarray]:
         w = np.asarray(p_np["w"], np.float64)
         beta = np.maximum(np.abs(w).reshape(-1, self.c_out).max(axis=0), 1e-8)
         eps_w = 2.0 * beta / (2 ** self.n_bits_w - 1)

@@ -26,8 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pact import default_weight_beta, pact_weight
-from repro.core.quantum import INT8
-from repro.layers.common import ACC_DTYPE, DeployCtx
+from repro.layers.common import ACC_DTYPE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,7 +46,8 @@ class QLinear:
     def init(self, key) -> dict:
         wkey, bkey = jax.random.split(key)
         std = self.init_scale / np.sqrt(self.d_in)
-        p = {"w": jax.random.normal(wkey, (self.d_in, self.d_out), jnp.float32) * std}
+        p = {"w": jax.random.normal(
+            wkey, (self.d_in, self.d_out), jnp.float32) * std}
         if self.use_bias:
             p["b"] = jnp.zeros((self.d_out,), jnp.float32)
         return p
@@ -68,7 +68,8 @@ class QLinear:
         return y
 
     # -- transform -------------------------------------------------------
-    def deploy(self, p_np: dict, eps_x: float, zp_x: int) -> Tuple[dict, np.ndarray]:
+    def deploy(self, p_np: dict, eps_x: float,
+               zp_x: int) -> Tuple[dict, np.ndarray]:
         """-> (int params, eps_acc per out-channel).
 
         eps_acc[c] = eps_w[c] * eps_x ; accumulator zero-point is 0.

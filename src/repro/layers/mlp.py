@@ -18,10 +18,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.requant import apply_rqt, make_rqt
+from repro.core.requant import apply_rqt
 from repro.core.rep import Rep
 from repro.layers.act_quant import QAct
-from repro.layers.common import ACT_QMIN, ActKind, DeployCtx, act_fn
+from repro.layers.common import ActKind, DeployCtx, act_fn
 from repro.layers.linear import QLinear
 
 
@@ -45,7 +45,7 @@ class QMLP:
     def init(self, key) -> dict:
         subs = self._sub()
         keys = jax.random.split(key, len(subs))
-        return {n: l.init(k) for (n, l), k in zip(subs.items(), keys)}
+        return {n: lay.init(k) for (n, lay), k in zip(subs.items(), keys)}
 
     def init_qstate(self) -> dict:
         """FQ learnable clips for the nonlinear activation (paper §2.2)."""
@@ -79,8 +79,9 @@ class QMLP:
             if self.gated:
                 calib.observe(f"{scope}{self.name}.gate.pre",
                               subs["wg"].apply_fp(p["wg"], x))
-                calib.observe(f"{scope}{self.name}.gate",
-                              act_fn(self.act, subs["wg"].apply_fp(p["wg"], x)))
+                calib.observe(
+                    f"{scope}{self.name}.gate",
+                    act_fn(self.act, subs["wg"].apply_fp(p["wg"], x)))
                 calib.observe(f"{scope}{self.name}.up", u)
             else:
                 calib.observe(f"{scope}{self.name}.act.pre", u)
@@ -121,7 +122,7 @@ class QMLP:
         t.update({"wu": ip_u, "u_tab": tu, "wd": ip_d})
         return t, eps_acc_d
 
-    # -- integer ---------------------------------------------------------------
+    # -- integer --------------------------------------------------------------
     def apply_id(self, t, s_x):
         from repro.sharding.hints import hint
 

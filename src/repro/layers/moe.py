@@ -17,7 +17,7 @@ requant shifts are shared while multipliers stay per-(expert, channel).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,9 +26,8 @@ import numpy as np
 from repro.core.intmath import apply_lut, build_lut
 from repro.core.requant import apply_rqt, make_rqt
 from repro.core.rep import Rep
-from repro.layers.act_quant import QAct
 from repro.layers.common import (
-    ACT_QMAX, ACT_QMIN, ActKind, DeployCtx, act_fn, act_fn_np,
+    ACT_QMIN, ActKind, DeployCtx, act_fn, act_fn_np,
 )
 from repro.layers.linear import QLinear
 
@@ -51,7 +50,8 @@ class QMoE:
         return QLinear(self.d_model, self.n_experts)
 
     def capacity(self, gs: int) -> int:
-        c = int(np.ceil(self.top_k * self.capacity_factor * gs / self.n_experts))
+        c = int(np.ceil(
+            self.top_k * self.capacity_factor * gs / self.n_experts))
         return max(4, int(np.ceil(c / 4) * 4))
 
     # -- init ----------------------------------------------------------------
@@ -81,7 +81,7 @@ class QMoE:
         # slotting: flatten token-major so earlier tokens win capacity
         e_flat = experts.reshape(G, Gs * self.top_k)
         oh = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)        # (G, Gs*k, E)
-        pos_flat = jnp.cumsum(oh, axis=1) - 1                   # position per expert
+        pos_flat = jnp.cumsum(oh, axis=1) - 1       # position per expert
         pos = jnp.take_along_axis(
             pos_flat, e_flat[..., None], axis=-1)[..., 0]       # (G, Gs*k)
         keep = pos < C
@@ -151,10 +151,10 @@ class QMoE:
     def init_qstate(self) -> dict:
         return {"alpha": jnp.float32(-1.0), "beta": jnp.float32(6.0)}
 
-    # -- float path ------------------------------------------------------------
+    # -- float path -----------------------------------------------------------
     def apply_float(self, p, x, rep, *, qs=None, calib=None, scope: str = ""):
         """x: (T, d) float (caller flattens batch*seq). -> (y, aux_loss)"""
-        from repro.core.pact import pact_act_asymm, pact_weight
+        from repro.core.pact import pact_act_asymm
 
         def w3(name):
             w = p[name]
@@ -199,7 +199,7 @@ class QMoE:
         aux = self.aux_loss(logits.astype(jnp.float32), experts)
         return y.reshape(x.shape), aux
 
-    # -- transform ---------------------------------------------------------------
+    # -- transform ------------------------------------------------------------
     def deploy(self, ctx: DeployCtx, scope: str, p_np: dict, eps_x: float,
                zp_x: int) -> Tuple[dict, np.ndarray]:
         t: dict = {}
@@ -213,7 +213,8 @@ class QMoE:
             # per-(expert, out-channel) symmetric int8
             amax = np.maximum(np.abs(w).max(axis=axis_in), 1e-8)  # (E, out)
             eps_w = 2.0 * amax / 255.0
-            q = np.clip(np.floor(w / eps_w[:, None, :]), -128, 127).astype(np.int8)
+            q = np.clip(np.floor(w / eps_w[:, None, :]),
+                        -128, 127).astype(np.int8)
             return q, eps_w
 
         wg_q, eps_wg = quant_expert(np.asarray(p_np["wg"], np.float64), 1)
@@ -256,7 +257,7 @@ class QMoE:
         eps_comb = EPS_GATE * eps_o
         return t, np.asarray([eps_comb])  # layer-wise acc quantum
 
-    # -- integer path --------------------------------------------------------------
+    # -- integer path ---------------------------------------------------------
     def apply_id(self, t, s_x):
         """s_x (T, d) int8 -> int32 accumulator (T, d) in eps_comb units."""
         xg, gs = self._group(s_x)
@@ -270,7 +271,8 @@ class QMoE:
         from repro.sharding.hints import hint
 
         x_pad = jnp.concatenate([xg, jnp.zeros_like(xg[:, :1])], axis=1)
-        xe = hint(self._gather_tokens(x_pad, tfs), "moe_ecd")   # (G,E,C,d) int8
+        xe = hint(self._gather_tokens(x_pad, tfs),
+                  "moe_ecd")                            # (G,E,C,d) int8
         acc_g = jnp.einsum("gecd,edf->gecf", xe.astype(jnp.int8), t["wg_q"],
                            preferred_element_type=jnp.int32)
         acc_u = jnp.einsum("gecd,edf->gecf", xe.astype(jnp.int8), t["wu_q"],
@@ -282,7 +284,7 @@ class QMoE:
         s_h = apply_rqt(prod, t["h_rqt"])
         acc_o = jnp.einsum("gecf,efd->gecd", s_h.astype(jnp.int8), t["wd_q"],
                            preferred_element_type=jnp.int32)
-        s_o = apply_rqt(acc_o, _expand(t["o_rqt"], 1))          # (G,E,C,d) int8
+        s_o = apply_rqt(acc_o, _expand(t["o_rqt"], 1))  # (G,E,C,d) int8
         o_pad = jnp.concatenate([s_o, jnp.zeros_like(s_o[:, :, :1])], axis=2)
         pos_safe = jnp.where(s_gates > 0, pos, C)
         yk = self._combine(o_pad, experts, pos_safe, gates)     # int8

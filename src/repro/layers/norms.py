@@ -11,9 +11,9 @@ with  r = isqrt( sum s^2 )  computed in integers.  The per-token factor
 1/r enters as a normalized fixed-point reciprocal:
 
     e_r      = bitlen(r) - 1
-    r_n      = r << (NORM_BITS - e_r)            in [2^NORM_BITS, 2^NORM_BITS+1)
-    recip_n  = floor(2^(2*NORM_BITS+1) / r_n)    in (2^NORM_BITS, 2^NORM_BITS+1]
-    1/r      = recip_n * 2^(e_r - 3*NORM_BITS - 1 + ... )    (shift bookkeeping)
+    r_n      = r << (NORM_BITS - e_r)        in [2^NB, 2^NB + 1)
+    recip_n  = floor(2^(2*NB + 1) / r_n)     in (2^NB, 2^NB + 1]
+    1/r      = recip_n * 2^(e_r - 3*NB - 1 + ...)  (shift bookkeeping)
 
 so the whole chain is multiply/shift with one integer division per token
 (the reciprocal), exactly parallel to Eq. 13.  Relative error sources:
@@ -36,7 +36,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.intmath import int_isqrt
-from repro.core.requant import make_rqt, apply_rqt
 from repro.core.rep import Rep
 from repro.layers.common import ACT_QMAX, ACT_QMIN, DeployCtx
 

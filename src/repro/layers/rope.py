@@ -16,7 +16,6 @@ applies rotary to half the head dim).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax.numpy as jnp
@@ -45,8 +44,11 @@ def rope_tables_int(head_dim: int, max_pos: int, base: float = 10000.0,
                     fraction: float = 1.0):
     rot, cos, sin = _angles(head_dim, max_pos, base, fraction)
     scale = float(1 << TRIG_BITS)
-    enc = lambda v: jnp.asarray(
-        np.clip(np.round(v * scale), -scale, scale - 1), jnp.int16)
+
+    def enc(v):
+        return jnp.asarray(
+            np.clip(np.round(v * scale), -scale, scale - 1), jnp.int16)
+
     return rot, enc(cos), enc(sin)
 
 

@@ -16,7 +16,7 @@ Decode is the O(1) single-step recurrence with (conv-tail, h) in the cache.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +35,8 @@ CHUNK = 128
 def _island_dtype():
     from repro.launch import variants
 
-    return jnp.bfloat16 if variants.get("ssm_island_dtype") == "bf16"         else jnp.float32
+    return (jnp.bfloat16 if variants.get("ssm_island_dtype") == "bf16"
+            else jnp.float32)
 
 
 def _chunk_len():
@@ -176,7 +177,7 @@ class QMamba1:
     def init(self, key) -> dict:
         subs = self._sub()
         keys = jax.random.split(key, len(subs) + 2)
-        p = {n: l.init(k) for (n, l), k in zip(subs.items(), keys)}
+        p = {n: lay.init(k) for (n, lay), k in zip(subs.items(), keys)}
         di, ds = self.d_inner, self.d_state
         # standard mamba A init: A_log = log(1..ds) per channel
         p["A_log"] = jnp.log(jnp.broadcast_to(
@@ -230,7 +231,8 @@ class QMamba1:
         x1, z = jnp.split(xz, 2, axis=-1)
         if cache is not None:
             conv_in = jnp.concatenate([cache["conv"], x1], axis=1)
-            x1c = _causal_conv1d_fp(conv_in, p["conv_w"], p["conv_b"])[:, -x1.shape[1]:]
+            x1c = _causal_conv1d_fp(
+                conv_in, p["conv_w"], p["conv_b"])[:, -x1.shape[1]:]
             new_conv = conv_in[:, -(self.conv_k - 1):]
         else:
             x1c = _causal_conv1d_fp(x1, p["conv_w"], p["conv_b"])
@@ -254,7 +256,8 @@ class QMamba1:
             calib.observe(f"{scope}{self.name}.y", y)
             calib.observe(f"{scope}{self.name}.z.pre", z)
             calib.observe(f"{scope}{self.name}.z", act_fn(ActKind.SILU, z))
-            calib.observe(f"{scope}{self.name}.gated", y * act_fn(ActKind.SILU, z))
+            calib.observe(f"{scope}{self.name}.gated",
+                          y * act_fn(ActKind.SILU, z))
         out = subs["out_proj"].apply(
             p["out_proj"], y * act_fn(ActKind.SILU, z), rep)
         new_cache = ({"conv": new_conv, "h": h_last}
@@ -296,7 +299,8 @@ class QMamba1:
                                   eps_cpre, 0, eps_conv, zp_conv)
         t["zp_conv"] = np.int32(zp_conv)
         # x_proj consumes the (asym) conv output
-        ipx, eps_accx = subs["x_proj"].deploy(p_np["x_proj"], eps_conv, zp_conv)
+        ipx, eps_accx = subs["x_proj"].deploy(p_np["x_proj"], eps_conv,
+                                              zp_conv)
         t["x_proj"] = ipx
         act_xdb = QAct(ActKind.IDENTITY, sym=True, name=f"{self.name}.xdb")
         txdb, eps_xdb, _ = act_xdb.deploy(ctx, scope, eps_accx, 0,
@@ -335,7 +339,7 @@ class QMamba1:
         t["out_proj"] = ipo
         return t, eps_acco
 
-    # -- integer path -----------------------------------------------------------
+    # -- integer path ---------------------------------------------------------
     def apply_id(self, t, s_x, *, cache=None):
         subs = self._sub()
         di, ds, r = self.d_inner, self.d_state, self.rank
@@ -365,7 +369,8 @@ class QMamba1:
         h0 = cache["h"] if cache is not None else None
         y, h_last = self._core_fp(x1f, dt, Bf, Cf, t["A"], t["Dv"],
                                   h0=h0, return_h=True)
-        s_y = jnp.clip(jnp.round(y * t["eps_y_inv"]), -128, 127).astype(jnp.int8)
+        s_y = jnp.clip(jnp.round(y * t["eps_y_inv"]),
+                       -128, 127).astype(jnp.int8)
         # ---- island exit ----
         s_zs = apply_lut(s_z, t["z_lut"])
         prod = s_y.astype(jnp.int32) * (s_zs.astype(jnp.int32) - t["zp_z"])
@@ -441,13 +446,14 @@ class QMamba2:
     def init(self, key) -> dict:
         subs = self._sub()
         k1, k2, k3 = jax.random.split(key, 3)
-        p = {n: l.init(k) for (n, l), k in zip(subs.items(), (k1, k2))}
+        p = {n: lay.init(k) for (n, lay), k in zip(subs.items(), (k1, k2))}
         H = self.n_heads
         p["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32))
         p["D"] = jnp.ones((H,), jnp.float32)
         p["dt_bias"] = jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32)))
         p["conv_w"] = jax.random.normal(
-            k3, (self.conv_k, self.d_conv_in), jnp.float32) / np.sqrt(self.conv_k)
+            k3, (self.conv_k, self.d_conv_in),
+            jnp.float32) / np.sqrt(self.conv_k)
         p["conv_b"] = jnp.zeros((self.d_conv_in,), jnp.float32)
         p["norm_g"] = jnp.ones((self.d_inner,), jnp.float32)
         return p
@@ -496,7 +502,8 @@ class QMamba2:
         z, xBC, dt_r = self._split_proj(zxbcdt)
         if cache is not None:
             conv_in = jnp.concatenate([cache["conv"], xBC], axis=1)
-            xBCc = _causal_conv1d_fp(conv_in, p["conv_w"], p["conv_b"])[:, -xBC.shape[1]:]
+            xBCc = _causal_conv1d_fp(
+                conv_in, p["conv_w"], p["conv_b"])[:, -xBC.shape[1]:]
             new_conv = conv_in[:, -(self.conv_k - 1):]
         else:
             xBCc = _causal_conv1d_fp(xBC, p["conv_w"], p["conv_b"])
@@ -535,7 +542,6 @@ class QMamba2:
     # -- transform ------------------------------------------------------------
     def deploy(self, ctx: DeployCtx, scope: str, p_np: dict, eps_x: float,
                zp_x: int) -> Tuple[dict, np.ndarray]:
-        from repro.layers.norms import QNorm
 
         subs = self._sub()
         di, ds, H = self.d_inner, self.d_state, self.n_heads
@@ -582,9 +588,8 @@ class QMamba2:
         t["out_proj"] = ipo
         return t, eps_acco
 
-    # -- integer path -----------------------------------------------------------
+    # -- integer path ---------------------------------------------------------
     def apply_id(self, t, s_x, *, cache=None):
-        from repro.layers.norms import QNorm
 
         subs = self._sub()
         di, ds, H, P = self.d_inner, self.d_state, self.n_heads, self.head_dim

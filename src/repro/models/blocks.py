@@ -15,13 +15,11 @@ handles both cache layouts transparently).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.rep import Rep
 from repro.layers.add import QAdd
 from repro.layers.attention import QAttention
 from repro.layers.common import ActKind, DeployCtx
@@ -55,15 +53,15 @@ class DenseBlock:
 
     def _subs(self):
         s = {
-            "norm1": QNorm(self.d_model, kind=self.norm, use_bias=self.norm_bias,
-                           name="norm1"),
+            "norm1": QNorm(self.d_model, kind=self.norm,
+                           use_bias=self.norm_bias, name="norm1"),
             "attn": QAttention(self.d_model, self.n_heads, self.n_kv_heads,
                                self.head_dim, rope_base=self.rope_base,
                                rope_fraction=self.rope_fraction,
                                max_seq=self.max_seq),
             "add1": QAdd(name="add1"),
-            "norm2": QNorm(self.d_model, kind=self.norm, use_bias=self.norm_bias,
-                           name="norm2"),
+            "norm2": QNorm(self.d_model, kind=self.norm,
+                           use_bias=self.norm_bias, name="norm2"),
             "add2": QAdd(name="add2"),
         }
         if self.n_experts > 0:
@@ -82,9 +80,9 @@ class DenseBlock:
         subs = self._subs()
         keys = jax.random.split(key, len(subs))
         p = {}
-        for (n, l), k in zip(subs.items(), keys):
-            if hasattr(l, "init"):
-                p[n] = l.init(k)
+        for (n, lay), k in zip(subs.items(), keys):
+            if hasattr(lay, "init"):
+                p[n] = lay.init(k)
         return p
 
     def init_qstate(self) -> dict:
@@ -105,11 +103,13 @@ class DenseBlock:
         # would be resharded away at the (token -> expert) grouping every
         # layer (§Perf hillclimb B, iteration 2)
         x = hint(x, "act_bs_only" if self.n_experts > 0 else "act_bsd")
-        h = subs["norm1"].apply(p["norm1"], x, rep, calib=calib, scope=scope + "n1.")
+        h = subs["norm1"].apply(p["norm1"], x, rep, calib=calib,
+                                scope=scope + "n1.")
         a, cache = subs["attn"].apply_float(p["attn"], h, rep, cache=cache,
                                             pos=pos, calib=calib, scope=scope)
         x = subs["add1"].apply_fp(x, a, calib=calib, scope=scope)
-        h = subs["norm2"].apply(p["norm2"], x, rep, calib=calib, scope=scope + "n2.")
+        h = subs["norm2"].apply(p["norm2"], x, rep, calib=calib,
+                                scope=scope + "n2.")
         aux = None
         if self.n_experts > 0:
             B, S, D = h.shape
@@ -127,7 +127,7 @@ class DenseBlock:
         x = subs["add2"].apply_fp(x, m, calib=calib, scope=scope)
         return x, cache, aux
 
-    # -- transform -------------------------------------------------------------
+    # -- transform ------------------------------------------------------------
     def deploy(self, ctx: DeployCtx, scope: str, p_np: dict,
                eps_in: float) -> Tuple[dict, float]:
         subs = self._subs()
@@ -169,7 +169,7 @@ class DenseBlock:
         t["add2"] = tadd2
         return t, eps_r2
 
-    # -- integer ----------------------------------------------------------------
+    # -- integer --------------------------------------------------------------
     def apply_id(self, t, s_x, *, cache=None, pos=None):
         from repro.core.requant import apply_rqt
         from repro.sharding.hints import hint
@@ -177,7 +177,8 @@ class DenseBlock:
         subs = self._subs()
         s_x = hint(s_x, "act_bs_only" if self.n_experts > 0 else "act_bsd")
         h = subs["norm1"].apply_id(t["norm1"], s_x)
-        a_acc, cache = subs["attn"].apply_id(t["attn"], h, cache=cache, pos=pos)
+        a_acc, cache = subs["attn"].apply_id(t["attn"], h, cache=cache,
+                                             pos=pos)
         s_r = subs["add1"].apply_id(t["add1"], s_x, a_acc)
         h = subs["norm2"].apply_id(t["norm2"], s_r)
         if self.n_experts > 0:
@@ -238,7 +239,8 @@ class MambaBlock:
         x = hint(x, "act_bs_only")  # SSM cores run L-unsharded (chunking
         # a model-sharded L reshards per chunk); channels carry the model
         # axis instead (ssm_ch)
-        h = subs["norm"].apply(p["norm"], x, rep, calib=calib, scope=scope + "n.")
+        h = subs["norm"].apply(p["norm"], x, rep, calib=calib,
+                               scope=scope + "n.")
         y, cache = subs["core"].apply_float(p["core"], h, rep, cache=cache,
                                             calib=calib, scope=scope)
         x = subs["add"].apply_fp(x, y, calib=calib, scope=scope)

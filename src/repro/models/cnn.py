@@ -12,7 +12,7 @@ Input representation (§3.7): 8-bit images, eps_in = 1/255, zp at -128.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,7 @@ from repro.core.calibrate import Calibrator
 from repro.core.pact import pact_act
 from repro.core.requant import apply_rqt, make_rqt
 from repro.core.rep import Rep
-from repro.layers.common import ACT_QMAX, ACT_QMIN, DeployCtx
+from repro.layers.common import ACT_QMAX, ACT_QMIN
 from repro.layers.conv import QAvgPool2d, QBatchNorm2d, QConv2d
 from repro.layers.linear import QLinear
 
@@ -96,7 +96,7 @@ class NemoCNN:
         x = x.reshape(x.shape[0], -1)
         return self._head().apply_fp(p["head"], x)
 
-    # -- transforms -------------------------------------------------------------
+    # -- transforms -----------------------------------------------------------
     def harden(self, p) -> dict:
         """FQ -> QD weight hardening (net.harden_weights())."""
         from repro.layers.linear import harden_weights_np
@@ -206,7 +206,7 @@ class NemoCNN:
         t["meta"]["eps_logits"] = float(np.max(eps_logits))
         return t
 
-    # -- integer path ---------------------------------------------------------------
+    # -- integer path ---------------------------------------------------------
     def apply_id(self, t, s_x):
         convs = self._convs()
         pool = QAvgPool2d(2)

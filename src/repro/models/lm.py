@@ -16,8 +16,7 @@ FQ uses the same apply with rep=Rep.FQ + a qstate pytree (PACT clips).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -172,8 +171,8 @@ class DecoderLM:
         ci = 0
         for si, (kind, tpl, n) in enumerate(self.plan()):
             seg_p = p["segments"][si]
-            seg_qs = (qstate or {}).get("segments", [None] * 8)[si] \
-                if qstate else None
+            seg_qs = ((qstate or {}).get("segments", [None] * 8)[si]
+                      if qstate else None)
             if calib is not None:
                 # eager per-layer walk with unique scopes
                 x, caches_i, aux = self._seg_eager(
@@ -193,8 +192,8 @@ class DecoderLM:
                    calib, scope, p_root):
         """Python loop over layers (calibration: unique scope per layer)."""
         aux_total = jnp.float32(0.0)
-        n = jax.tree.leaves(seg_p)[0].shape[0] if kind != "pair" \
-            else jax.tree.leaves(seg_p["a"])[0].shape[0]
+        n = (jax.tree.leaves(seg_p)[0].shape[0] if kind != "pair"
+             else jax.tree.leaves(seg_p["a"])[0].shape[0])
         outs = []
         for i in range(n):
             sc = f"{scope}L{i}."
@@ -227,8 +226,8 @@ class DecoderLM:
             elif kind == "hybrid":
                 mam, sha = tpl
                 k = self.cfg.shared_attn_every
-                cm = _tree_slice(cache_i, slice(0, k)) \
-                    if cache_i is not None else None
+                cm = (_tree_slice(cache_i, slice(0, k))
+                      if cache_i is not None else None)
                 for j in range(k):
                     cmj = _tree_slice(cm, j) if cm is not None else None
                     x, cmj, _ = mam.apply_float(
@@ -262,7 +261,8 @@ class DecoderLM:
                     a2 = aux + (a if a is not None else 0.0)
                 return (h2, a2), lc2
 
-            if c.family != "cnn" and rep in (Rep.FP, Rep.FQ) and c.n_layers > 1:
+            if (c.family != "cnn" and rep in (Rep.FP, Rep.FQ)
+                    and c.n_layers > 1):
                 body = jax.checkpoint(body)  # remat per layer for train
             qs_xs = seg_qs if seg_qs else None
             (x, aux), caches_out = jax.lax.scan(
@@ -291,8 +291,9 @@ class DecoderLM:
                         lp["b"], h, rep,
                         qs=lqs["b"] if lqs else None, cache=cb, pos=pos)
                     a_sum = aux + (aux_b if aux_b is not None else 0.0)
-                lc2 = jax.tree.map(lambda u, v: jnp.stack([u, v]), ca2, cb2) \
-                    if ca2 is not None else None
+                lc2 = (jax.tree.map(lambda u, v: jnp.stack([u, v]),
+                                    ca2, cb2)
+                       if ca2 is not None else None)
                 return (h, a_sum), lc2
 
             if rep in (Rep.FP, Rep.FQ):
@@ -489,6 +490,35 @@ class DecoderLM:
             h = jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1)
         else:
             h = x[:, -1:, :] if last_only else x
+        return self.logits_id(t, h), caches
+
+    def prefill_chunk(self, t, batch, caches, start_pos, last_index):
+        """ID batched + chunked prefill over a shared cache arena.
+
+        batch (B, C) int32: one C-token prompt chunk per arena row, for
+        several requests at once (B = n_slots, the fixed dispatch shape
+        — one compilation per chunk size).  start_pos (B,) int32: the
+        sequence offset each row's chunk is written at; rows with no
+        chunk this step are parked at attention.INACTIVE_POS, which
+        masks their cache writes to a no-op (layers/attention.py).
+        Chunk K/V is written straight into `caches` — the serving
+        arena's decode view, contiguous rows or paged pools + tables —
+        so a long prompt accumulates across calls while other rows
+        keep decoding between chunks.
+
+        Returns (logits (B, 1, V) int32, caches): each row's hidden
+        state is gathered at its own last_index (B,) — the position of
+        the final prompt token *within the chunk* — before the vocab
+        projection, so no (B, C, V) logits are materialized.  Only rows
+        whose final chunk just completed have meaningful logits; the
+        engine ignores the rest.
+        """
+        x = self.embed_in_id(t, batch)
+        x, caches, _ = self.apply(t, x, Rep.ID, caches=caches,
+                                  pos=start_pos)
+        idx = jnp.broadcast_to(
+            last_index[:, None, None], (x.shape[0], 1, x.shape[-1]))
+        h = jnp.take_along_axis(x, idx, axis=1)
         return self.logits_id(t, h), caches
 
     def decode_step(self, t, token, caches, pos):

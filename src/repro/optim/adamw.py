@@ -13,7 +13,9 @@ import jax.numpy as jnp
 
 
 def adamw_init(params, *, dtype=jnp.float32):
-    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, dtype)
+
     return {
         "mu": jax.tree.map(zeros, params),
         "nu": jax.tree.map(zeros, params),
@@ -42,7 +44,8 @@ def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
     def upd(p, m, v):
         mhat = m.astype(jnp.float32) / bc1
         vhat = v.astype(jnp.float32) / bc2
-        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        delta = (mhat / (jnp.sqrt(vhat) + eps)
+                 + weight_decay * p.astype(jnp.float32))
         return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
 
     new_params = jax.tree.map(upd, params, mu, nu)

@@ -18,6 +18,7 @@ from repro.serving.request import (
     FINISH_MAX_LEN,
     FINISH_STOP,
     Completion,
+    PrefillState,
     Request,
 )
 from repro.serving.scheduler import Scheduler, SchedulerConfig
@@ -29,6 +30,7 @@ __all__ = [
     "FINISH_STOP",
     "PAGE_NULL",
     "PagedArena",
+    "PrefillState",
     "Request",
     "Scheduler",
     "SchedulerConfig",

@@ -1,7 +1,8 @@
 """KV-cache arenas for continuous batching.
 
 Two arena strategies share one engine-facing protocol (``can_admit`` /
-``alloc`` / ``touch`` / ``write_slot`` / ``decode_view`` / ``absorb`` /
+``alloc`` / ``touch`` / ``touch_range`` / ``write_slot`` /
+``decode_view`` / ``absorb`` / ``prefill_view`` / ``absorb_rows`` /
 ``release``):
 
 ``SlotArena`` — one fixed-shape cache pytree (`n_slots` batch rows x
@@ -47,7 +48,9 @@ import numpy as np
 
 from repro.core.rep import Rep
 
-PAGE_NULL = 0  # physical page 0 is the never-allocated trash page
+# physical page 0 is the never-allocated trash page (the write helpers
+# in layers/attention.py route masked positions there; one definition)
+from repro.layers.attention import PAGE_NULL
 
 
 def float_cache_leaves(caches) -> List[Tuple[str, Any]]:
@@ -154,6 +157,27 @@ class SlotArena:
 
         self._scatter = jax.jit(_scatter)
 
+        # chunked prefill: gather a compact row subset for the packed
+        # dispatch, scatter the written rows back.  Slot indices are
+        # traced, so each compiles once per subset SIZE (the engine
+        # buckets sizes to powers of two).
+        def _gather_rows(arena_leaves, idx):
+            return [
+                jnp.take(x, idx, axis=ax)
+                for x, ax in zip(arena_leaves, self._batch_axes)
+            ]
+
+        def _scatter_rows(arena_leaves, row_leaves, idx):
+            return [
+                x.at[(slice(None),) * ax + (idx,)].set(y.astype(x.dtype))
+                for x, y, ax in zip(
+                    arena_leaves, row_leaves, self._batch_axes
+                )
+            ]
+
+        self._gather_rows = jax.jit(_gather_rows)
+        self._scatter_rows = jax.jit(_scatter_rows)
+
         # slot bookkeeping (host-side)
         self._free = list(range(n_slots - 1, -1, -1))  # pop() -> slot 0
         self.lengths = np.zeros(n_slots, np.int32)  # written positions
@@ -176,14 +200,23 @@ class SlotArena:
         """Slot capacity is length-gated by the scheduler; no-op."""
 
     def alloc(
-        self, req_id: int, prompt_len: int, total_len: Optional[int] = None
+        self,
+        req_id: int,
+        prompt_len: int,
+        total_len: Optional[int] = None,
+        written: Optional[int] = None,
     ) -> int:
-        """Lease a free slot to `req_id`; returns the slot index."""
+        """Lease a free slot to `req_id`; returns the slot index.
+
+        `written` is how many prompt positions are materialized at
+        admission: the whole prompt for the one-shot prefill path
+        (default), 0 for chunked prefill, where the engine advances the
+        slot chunk by chunk (partial-prefill state)."""
         if not self._free:
             raise RuntimeError("no free slots")
         slot = self._free.pop()
         self.owner[slot] = req_id
-        self.lengths[slot] = prompt_len
+        self.lengths[slot] = prompt_len if written is None else written
         return slot
 
     def release(self, slot: int):
@@ -207,6 +240,9 @@ class SlotArena:
     def touch(self, slot: int, pos: int):
         """Contiguous rows need no on-demand growth; no-op."""
 
+    def touch_range(self, slot: int, start: int, end: int):
+        """Contiguous rows need no on-demand growth; no-op."""
+
     def decode_view(self):
         """The cache pytree handed to the jit'd decode step."""
         return self.caches
@@ -214,6 +250,28 @@ class SlotArena:
     def absorb(self, new_caches):
         """Store the cache pytree returned by the decode step."""
         self.caches = new_caches
+
+    def prefill_view(self, slots):
+        """Compact cache view for a packed chunked-prefill dispatch:
+        only the participating slots' batch rows (gathered), so rows
+        that are decoding or free cost the dispatch nothing."""
+        idx = jnp.asarray(slots, jnp.int32)
+        leaves = self._gather_rows(jax.tree.leaves(self.caches), idx)
+        return jax.tree.unflatten(self._treedef, leaves)
+
+    def absorb_rows(self, slots, row_caches):
+        """Scatter a prefill_view's (written) rows back into the arena.
+        `slots` must be duplicate-free; pad rows (parked at
+        INACTIVE_POS, so every write masked off) round-trip unchanged,
+        which keeps the scatter safe even when a pad row borrowed a
+        live slot."""
+        idx = jnp.asarray(slots, jnp.int32)
+        out = self._scatter_rows(
+            jax.tree.leaves(self.caches),
+            jax.tree.leaves(row_caches),
+            idx,
+        )
+        self.caches = jax.tree.unflatten(self._treedef, out)
 
     def advance(self, slot: int, n: int = 1):
         self.lengths[slot] += n
@@ -413,21 +471,29 @@ class PagedArena:
 
     # -- lifecycle ------------------------------------------------------
     def alloc(
-        self, req_id: int, prompt_len: int, total_len: Optional[int] = None
+        self,
+        req_id: int,
+        prompt_len: int,
+        total_len: Optional[int] = None,
+        written: Optional[int] = None,
     ) -> int:
-        """Lease a slot + commit the page budget; allocate the prompt's
-        pages now (prefill writes [0, prompt_len))."""
+        """Lease a slot + commit the page budget; allocate pages for the
+        positions materialized at admission — the whole prompt for the
+        one-shot prefill path (`written` None), none for chunked
+        prefill (`written` 0), whose pages arrive chunk by chunk via
+        touch_range (partial-prefill state)."""
         total_len = prompt_len if total_len is None else total_len
         if not self.can_admit(prompt_len, total_len):
             raise RuntimeError("out of slots or page budget")
         slot = self._free_slots.pop()
         need = self._pages_for(total_len)
         self.owner[slot] = req_id
-        self.lengths[slot] = prompt_len
+        materialized = prompt_len if written is None else written
+        self.lengths[slot] = materialized
         self._commit[slot] = need
         self.committed_pages += need
         self.max_committed = max(self.max_committed, self.committed_pages)
-        for blk in range(-(-prompt_len // self.page_size)):
+        for blk in range(-(-materialized // self.page_size)):
             self.page_table[slot, blk] = self._free_pages.pop()
         self.max_pages_in_use = max(self.max_pages_in_use, self.pages_in_use)
         return slot
@@ -445,6 +511,17 @@ class PagedArena:
             )
         self.page_table[slot, blk] = self._free_pages.pop()
         self.max_pages_in_use = max(self.max_pages_in_use, self.pages_in_use)
+
+    def touch_range(self, slot: int, start: int, end: int):
+        """Allocate every page covering positions [start, end) before a
+        chunked-prefill dispatch writes there (chunk writes past `end`
+        — the padded tail of a final partial chunk — deliberately land
+        on the trash page, so only real positions need pages)."""
+        if end <= start:
+            return
+        for blk in range(start // self.page_size,
+                         (end - 1) // self.page_size + 1):
+            self.touch(slot, blk * self.page_size)
 
     def release(self, slot: int):
         """Recycle the slot and ALL its pages.  Page contents stay
@@ -494,6 +571,30 @@ class PagedArena:
             new_caches,
             lambda d: {k: v for k, v in d.items() if k != "table"},
         )
+
+    def prefill_view(self, slots):
+        """Compact view for a packed chunked-prefill dispatch: the full
+        page pools with only the participating slots' page-table rows
+        attached.  Pages are global, so the dispatch's writes land in
+        the right pages with no row gather/scatter at all — paging
+        makes the compact prefill view free."""
+        if any(s is None for s in self._seq_axes):
+            raise NotImplementedError(
+                "chunked prefill over per-slot (recurrent) cache state"
+            )  # unreachable: the engine chunks the dense family only
+        tab = jnp.asarray(self.page_table[np.asarray(slots)])
+        axes = iter(self._kv_batch_axes)
+
+        def _attach(d):
+            lead = d["k"].shape[: next(axes)]
+            return {**d, "table": jnp.broadcast_to(tab, lead + tab.shape)}
+
+        return map_kv_dicts(self.caches, _attach)
+
+    def absorb_rows(self, slots, row_caches):
+        """Store the pools a chunk dispatch wrote through the page
+        tables (global pages: nothing per-row to scatter back)."""
+        self.absorb(row_caches)
 
     def advance(self, slot: int, n: int = 1):
         self.lengths[slot] += n

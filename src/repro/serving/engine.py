@@ -8,15 +8,30 @@ cache.PagedArena when ``paged=True``) and drives the ID-representation
   step()              one scheduler iteration:
                         1. admit pending requests while the arena
                            accepts them (free slot; for the paged
-                           arena also a free page budget) — bucketed
-                           B=1 prefill, scatter into the arena, first
-                           token from the true-last-prompt logits
-                        2. one FUSED decode step over the whole arena
+                           arena also a free page budget)
+                        2. one packed chunked-prefill dispatch: the
+                           next prefill_chunk tokens of every
+                           prefilling request, written straight into
+                           the arena at per-slot offsets through a
+                           COMPACT row view (power-of-two row bucket;
+                           compile-cache keyed on (rows, chunk));
+                           rows whose final chunk completed take their
+                           first token from that dispatch's per-row
+                           last-index logits
+                        3. one FUSED decode step over the whole arena
                            with a per-slot position vector; per-slot
                            done-masking is host-side (finished slots
                            are released and their rows become
                            don't-cares)
-  run_until_drained() step until queue + slots are empty
+  run_until_drained() step until queue + prefills + slots are empty
+
+The prefill dispatch decision is made in ONE place (_prefill_mode):
+"chunked" (dense family, prefill_chunk > 0 — the default), "bucketed"
+(dense, chunking disabled: whole prompt at bucket-padded length, B=1 —
+kept as the token-parity oracle for the chunked path), or "exact"
+(ssm/moe/hybrid: whole prompt at exact length — MoE capacity routing
+and SSM/hybrid recurrences integrate every position, so neither
+padding nor garbage chunk rows are admissible; DESIGN.md §Serving).
 
 Greedy sampling is argmax on int32 logits — no dequantization anywhere
 (the paper's integer-only deployment invariant; asserted on the cache
@@ -40,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rep import Rep
+from repro.layers.attention import INACTIVE_POS
 from repro.serving.cache import (
     PagedArena,
     SlotArena,
@@ -50,6 +66,7 @@ from repro.serving.request import (
     FINISH_MAX_LEN,
     FINISH_STOP,
     Completion,
+    PrefillState,
     Request,
     RequestState,
 )
@@ -99,6 +116,9 @@ class ServingEngine:
         self.on_token = on_token
 
         self.active: Dict[int, RequestState] = {}  # slot -> state
+        # slot -> chunked-prefill progress; insertion order IS the FCFS
+        # packing order the scheduler's plan_chunks consumes
+        self.prefilling: Dict[int, PrefillState] = {}
         self.completed: List[Completion] = []
         self._next_id = 0
 
@@ -110,14 +130,32 @@ class ServingEngine:
 
         # compiles once per prompt-shape bucket (scheduler.bucket_len)
         self._prefill = jax.jit(_prefill_one)
-        # Bucket-padded prefill is exact only when batch rows/positions
-        # are causally independent: attention hides padded positions by
-        # masking.  MoE capacity routing mixes tokens (padded tokens
-        # would compete for expert capacity) and SSM/hybrid recurrent
-        # conv/scan state integrates every prefilled position — those
-        # families prefill at exact prompt length (one compile per
-        # distinct length) instead.  DESIGN.md §Serving.
-        self._bucketed_prefill = lm.cfg.family == "dense"
+        # the packed chunk dispatch: compile-cache keyed on its
+        # (row-bucket, prefill_chunk) shape — at most log2(n_slots)+1
+        # compilations regardless of workload raggedness
+        self._prefill_chunk = jax.jit(lm.prefill_chunk)
+        # THE prefill dispatch decision (single place; see module doc):
+        #   chunked  — dense, prefill_chunk > 0: packed fixed-shape
+        #              chunk dispatch straight into the arena
+        #   bucketed — dense, chunking disabled: whole prompt at
+        #              bucket-padded length, B=1 (the parity oracle).
+        #              Padding is exact only when rows/positions are
+        #              causally independent: attention masks padded
+        #              positions.
+        #   exact    — MoE capacity routing mixes tokens (padded or
+        #              garbage tokens would compete for expert
+        #              capacity) and SSM/hybrid recurrent conv/scan
+        #              state integrates every prefilled position —
+        #              those families prefill the whole prompt at
+        #              exact length (one compile per distinct length).
+        #              DESIGN.md §Serving.
+        if lm.cfg.family != "dense":
+            self._prefill_mode = "exact"
+        elif self.sched.cfg.prefill_chunk > 0:
+            self._prefill_mode = "chunked"
+        else:
+            self._prefill_mode = "bucketed"
+        self._bucketed_prefill = self._prefill_mode == "bucketed"
 
         # run statistics
         self._steps = 0
@@ -152,7 +190,8 @@ class ServingEngine:
 
     # -- one scheduler iteration ---------------------------------------
     def step(self) -> bool:
-        """Admit + fused-decode once.  Returns False if idle."""
+        """Admit + chunk-prefill + fused-decode once.  Returns False if
+        idle."""
         if self._t_first is None:
             self._t_first = time.perf_counter()
         progressed = False
@@ -169,6 +208,10 @@ class ServingEngine:
             self._admit(req)  # consumes arena capacity `fits` re-reads
             progressed = True
 
+        if self.prefilling:
+            self._prefill_chunk_step()
+            progressed = True
+
         self._occupancy_sum += self.arena.n_leased / self.arena.n_slots
         self._max_active = max(self._max_active, len(self.active))
         self._steps += 1
@@ -177,7 +220,11 @@ class ServingEngine:
             progressed = True
             B = self.arena.n_slots
             toks = np.zeros((B, 1), np.int32)
-            pos = np.zeros((B,), np.int32)
+            # rows without an active decode (free slots, slots still
+            # mid-prefill) are parked at INACTIVE_POS: their cache
+            # writes mask to no-ops, so the fused step can never
+            # clobber a neighbor's prefilled positions
+            pos = np.full((B,), INACTIVE_POS, np.int32)
             for slot, st in self.active.items():
                 toks[slot, 0] = st.last_token
                 pos[slot] = st.pos
@@ -209,9 +256,10 @@ class ServingEngine:
     def run_until_drained(
         self, max_steps: int = 1_000_000
     ) -> List[Completion]:
-        """Step until the queue and every slot are empty."""
+        """Step until the queue, in-flight prefills, and every slot are
+        empty."""
         steps = 0
-        while self.sched.n_pending or self.active:
+        while self.sched.n_pending or self.prefilling or self.active:
             if steps >= max_steps:
                 raise RuntimeError(f"not drained after {max_steps} steps")
             self.step()
@@ -220,7 +268,22 @@ class ServingEngine:
 
     # -- internals ------------------------------------------------------
     def _admit(self, req: Request):
-        """Prefill `req` at batch 1 (bucketed shape) and lease a slot."""
+        """Lease a slot and start the request's prefill (mode-dependent:
+        chunked admission only enqueues; whole-prompt prefills now)."""
+        if self._prefill_mode == "chunked":
+            slot = self.arena.alloc(
+                req.req_id,
+                req.prompt_len,
+                req.prompt_len + req.max_new_tokens,
+                written=0,  # partial-prefill state: chunks arrive later
+            )
+            self.prefilling[slot] = PrefillState(request=req, slot=slot)
+            return
+        self._admit_whole(req)
+
+    def _admit_whole(self, req: Request):
+        """Prefill `req` at batch 1 (bucketed or exact shape) and lease
+        a slot — the one-shot path (parity oracle; non-dense families)."""
         slot = self.arena.alloc(
             req.req_id,
             req.prompt_len,
@@ -238,12 +301,76 @@ class ServingEngine:
         first = int(jnp.argmax(logits[0, 0]))
         self.arena.write_slot(slot, single)
         now = time.perf_counter()
+        self._start_decoding(req, slot, first, now)
+
+    def _prefill_chunk_step(self):
+        """One packed chunked-prefill dispatch: write the next chunk of
+        up to max_chunks_per_step prefilling requests into the arena at
+        their per-slot offsets, and graduate rows whose final chunk
+        completed to decoding with the first token from the dispatch's
+        per-row last-index logits.
+
+        The dispatch is COMPACT: only the participating slots' cache
+        rows ride along (arena.prefill_view), its row count bucketed to
+        a power of two so the compile cache is keyed on (row-bucket,
+        chunk) shapes — at most log2(n_slots)+1 compilations.  Bucket
+        padding rows borrow spare slots (free ones preferred); parked
+        at INACTIVE_POS they write nothing and round-trip unchanged —
+        which is why borrowing even a live slot's row is safe."""
+        plan = self.sched.plan_chunks(self.prefilling.values())
+        C = self.sched.cfg.prefill_chunk
+        n_rows = len(plan)
+        rows = 1
+        while rows < n_rows:
+            rows *= 2
+        rows = min(rows, self.arena.n_slots)
+        slots = [st.slot for st, _, _ in plan]
+        if rows > n_rows:
+            taken = set(slots)
+            pad = [s for s in range(self.arena.n_slots) if s not in taken]
+            # stable sort: genuinely free slots pad first, live ones
+            # only when nothing else is left
+            pad.sort(key=lambda s: self.arena.owner[s] is not None)
+            slots += pad[: rows - n_rows]
+        toks = np.zeros((rows, C), np.int32)
+        start = np.full((rows,), INACTIVE_POS, np.int32)  # pad rows
+        last = np.zeros((rows,), np.int32)
+        for r, (st, off, n) in enumerate(plan):
+            toks[r, :n] = st.request.prompt[off:off + n]
+            start[r] = off
+            last[r] = n - 1
+            # paged arena: allocate pages covering the chunk before the
+            # dispatch writes there (no-op for SlotArena; the padded
+            # tail of a final partial chunk lands on the trash page)
+            self.arena.touch_range(st.slot, off, off + n)
+        logits, new_rows = self._prefill_chunk(
+            self.tables,
+            jnp.asarray(toks),
+            self.arena.prefill_view(slots),
+            jnp.asarray(start),
+            jnp.asarray(last),
+        )
+        self.arena.absorb_rows(slots, new_rows)
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        now = time.perf_counter()
+        for r, (st, off, n) in enumerate(plan):
+            self.arena.advance(st.slot, n)
+            if off + n < st.request.prompt_len:
+                st.offset = off + n  # carried into the next dispatch
+                continue
+            del self.prefilling[st.slot]  # final chunk completed
+            self._start_decoding(st.request, st.slot, int(nxt[r]), now)
+
+    def _start_decoding(self, req: Request, slot: int, first: int,
+                        now: float):
+        """Graduate a prefilled request to the fused decode batch; its
+        TTFT clock stops here (first generated token)."""
         st = RequestState(
             request=req,
             slot=slot,
             tokens=[first],
             last_token=first,
-            pos=P,
+            pos=req.prompt_len,
             first_token_time=now,
         )
         self.active[slot] = st
@@ -280,12 +407,54 @@ class ServingEngine:
         del self.active[st.slot]
         self.arena.release(st.slot)
 
+    # -- warmup ---------------------------------------------------------
+    def warmup(self):
+        """Precompile every dispatch shape this engine can emit — the
+        fused decode and each chunked-prefill row bucket (1, 2, 4, ...,
+        n_slots) — so no compile lands inside a serving window (a
+        mid-burst compile inflates the TTFT of everything queued behind
+        it).  All warmup rows are parked at INACTIVE_POS: writes mask
+        to no-ops and results are discarded, so arena state is
+        untouched.  Requires an idle engine.  Whole-prompt prefill
+        compiles per prompt-length bucket as requests arrive and is not
+        warmed here (lengths are workload-dependent)."""
+        if self.sched.n_pending or self.prefilling or self.active:
+            raise RuntimeError("warmup on a non-idle engine")
+        B = self.arena.n_slots
+        parked = np.full((B,), INACTIVE_POS, np.int32)
+        jax.block_until_ready(self._decode(
+            self.tables,
+            jnp.zeros((B, 1), jnp.int32),
+            self.arena.decode_view(),
+            jnp.asarray(parked),
+        ))
+        if self._prefill_mode != "chunked":
+            return
+        C = self.sched.cfg.prefill_chunk
+        rows = 1
+        while True:
+            rows = min(rows, B)
+            slots = list(range(rows))
+            _, row_caches = self._prefill_chunk(
+                self.tables,
+                jnp.zeros((rows, C), jnp.int32),
+                self.arena.prefill_view(slots),
+                jnp.asarray(parked[:rows]),
+                jnp.zeros((rows,), jnp.int32),
+            )
+            # identity round-trip (every write was masked): warms the
+            # scatter-back compile for this row bucket too
+            self.arena.absorb_rows(slots, row_caches)
+            if rows >= B:
+                break
+            rows *= 2
+
     # -- statistics -----------------------------------------------------
     def reset_stats(self):
         """Zero run statistics and the completion log (e.g. after a
         warmup workload that pre-compiled the jit'd steps).  Requires
         an idle engine — in-flight state would skew the next window."""
-        if self.sched.n_pending or self.active:
+        if self.sched.n_pending or self.prefilling or self.active:
             raise RuntimeError("reset_stats on a non-idle engine")
         self.completed.clear()
         self._steps = 0
@@ -310,6 +479,8 @@ class ServingEngine:
             "wall_s": wall,
             "throughput_tok_s": (self._n_generated / wall) if wall else 0.0,
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
+            "p50_ttft_s": float(np.percentile(ttfts, 50)) if ttfts else 0.0,
+            "p95_ttft_s": float(np.percentile(ttfts, 95)) if ttfts else 0.0,
             "max_ttft_s": float(np.max(ttfts)) if ttfts else 0.0,
             "mean_occupancy": (
                 self._occupancy_sum / self._steps if self._steps else 0.0

@@ -42,6 +42,22 @@ class Request:
 
 
 @dataclasses.dataclass
+class PrefillState:
+    """Engine-internal chunked-prefill progress for a leased slot.
+
+    `offset` is the number of prompt tokens already written into the
+    arena: the next chunk covers [offset, offset + chunk).  The state
+    graduates to a RequestState (decode) the step its final chunk
+    completes — the first generated token comes from that dispatch's
+    logits.
+    """
+
+    request: Request
+    slot: int
+    offset: int = 0
+
+
+@dataclasses.dataclass
 class RequestState:
     """Engine-internal per-slot decode state (one active request).
 

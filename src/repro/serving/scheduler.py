@@ -18,30 +18,51 @@ Each engine step the scheduler decides two things (DESIGN.md §Serving):
   fused decode step with a per-slot position vector; completed slots
   are recycled the same step.
 
-Prompts are right-padded to a shape *bucket* (`prefill_bucket`
-multiple) before prefill, so the number of distinct prefill
-compilations is bounded by max_len / prefill_bucket regardless of how
-ragged the workload's prompt lengths are.  Padding is exact for
-causally masked (dense-family) prefill: padded positions sit strictly
-after the true last token, masking hides them from every real
-position, and the first decode writes over them.  The engine disables
-bucketing for families whose prefill state integrates every position
-(MoE routing, SSM/hybrid recurrences) — see DESIGN.md §Serving.
+Chunked prefill (`prefill_chunk` > 0, dense family): admission only
+leases a slot; the prompt then enters the arena `prefill_chunk` tokens
+at a time through a *packed* compact dispatch — one (row-bucket,
+chunk) prefill per engine step carrying the next chunk of every
+prefilling request (capped by `max_chunks_per_step`, the fairness knob:
+fewer chunk rows per step = less prefill compute stalling the decode
+dispatch that follows it).  Long prompts therefore interleave with
+ongoing decode instead of monopolizing a step, and a burst of arrivals
+shares one dispatch instead of queueing B=1 prefills.  The packing
+policy lives in `plan_chunks`: FIFO by admission order, one chunk per
+request per step (chunks of one request are sequential by definition).
+
+Whole-prompt mode (`prefill_chunk` == 0, and always for non-dense
+families): prompts are right-padded to a shape *bucket*
+(`prefill_bucket` multiple) before a B=1 prefill, so the number of
+distinct prefill compilations is bounded by max_len / prefill_bucket
+regardless of how ragged the workload's prompt lengths are.  Padding
+is exact for causally masked (dense-family) prefill: padded positions
+sit strictly after the true last token, masking hides them from every
+real position, and the first decode writes over them.  The engine
+forces exact-length whole-prompt prefill for families whose prefill
+state integrates every position (MoE routing, SSM/hybrid recurrences)
+— see DESIGN.md §Serving.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Callable, Deque, Optional
+from typing import Callable, Deque, Iterable, List, Optional, Tuple
 
-from repro.serving.request import Request
+from repro.serving.request import PrefillState, Request
 
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
     max_prefills_per_step: int = 2  # admission cap per engine step
     prefill_bucket: int = 16  # prompt-shape bucket (compile bound)
+    # chunked prefill (dense family): tokens per chunk; 0 falls back to
+    # the whole-prompt bucketed path (the parity oracle)
+    prefill_chunk: int = 32
+    # fairness knob: chunk rows packed per dispatch (None: every
+    # prefilling slot) — bounds per-step prefill compute so decode
+    # latency stays flat while long prompts stream in
+    max_chunks_per_step: Optional[int] = None
 
 
 class Scheduler:
@@ -56,6 +77,16 @@ class Scheduler:
             raise ValueError(
                 "max_prefills_per_step must be >= 1, "
                 f"got {cfg.max_prefills_per_step}"
+            )
+        if cfg.prefill_chunk < 0:
+            raise ValueError(
+                f"prefill_chunk must be >= 0, got {cfg.prefill_chunk}"
+            )
+        if (cfg.max_chunks_per_step is not None
+                and cfg.max_chunks_per_step < 1):
+            raise ValueError(
+                "max_chunks_per_step must be >= 1, "
+                f"got {cfg.max_chunks_per_step}"
             )
         self.cfg = cfg
         self.max_len = max_len
@@ -85,6 +116,27 @@ class Scheduler:
         if self.pending and fits(self.pending[0]):
             return self.pending.popleft()
         return None
+
+    # -- chunk packing --------------------------------------------------
+    def plan_chunks(
+        self, prefilling: Iterable[PrefillState]
+    ) -> List[Tuple[PrefillState, int, int]]:
+        """Packing policy for one chunked-prefill dispatch: (state,
+        offset, n_tokens) triples — the next `prefill_chunk`-token
+        chunk of each prefilling request, FIFO by admission order,
+        capped at `max_chunks_per_step` rows (the fairness knob).  The
+        final chunk of a prompt may be partial (n_tokens < chunk); the
+        dispatch pads it and the engine reads logits only when
+        offset + n_tokens reaches the prompt length."""
+        chunk = self.cfg.prefill_chunk
+        cap = self.cfg.max_chunks_per_step
+        plan: List[Tuple[PrefillState, int, int]] = []
+        for st in prefilling:
+            if cap is not None and len(plan) >= cap:
+                break
+            n = min(chunk, st.request.prompt_len - st.offset)
+            plan.append((st, st.offset, n))
+        return plan
 
     # -- shape bucketing ------------------------------------------------
     def bucket_len(self, prompt_len: int) -> int:

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Optional
 
 import jax
 from jax.sharding import PartitionSpec as P
@@ -70,7 +69,6 @@ def hint(x, kind: str):
     mesh = _mesh()
     if mesh is None:
         return x
-    import numpy as _np
 
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     batch = ("pod", "data") if "pod" in mesh.axis_names else "data"

@@ -426,6 +426,149 @@ def test_page_recycling_no_stale_leakage(deployed):
     assert tokens_a != tokens_b                 # the workloads differ
 
 
+# ---------------------------------------------------------------------
+# batched + chunked prefill (ISSUE 3)
+# ---------------------------------------------------------------------
+def _run_engine(lm, tables, specs, prompts, *, chunk, paged,
+                max_len=MAX_LEN, n_slots=3, stagger=True,
+                max_chunks=None):
+    eng = ServingEngine(
+        lm, tables, n_slots=n_slots, max_len=max_len, paged=paged,
+        page_size=8,
+        scheduler=SchedulerConfig(max_prefills_per_step=2,
+                                  prefill_bucket=8, prefill_chunk=chunk,
+                                  max_chunks_per_step=max_chunks))
+    assert eng._prefill_mode == ("chunked" if chunk else "bucketed")
+    ids = []
+    for (p, g), prompt in zip(specs, prompts):
+        ids.append(eng.submit(prompt, max_new_tokens=g))
+        if stagger:
+            eng.step()
+    done = {c.req_id: c for c in eng.run_until_drained()}
+    assert len(done) == len(specs)
+    return [done[rid].tokens for rid in ids], eng
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_chunked_matches_whole_and_lockstep(deployed, paged):
+    """Chunked prefill must be token-for-token identical to the
+    whole-prompt (bucketed) path AND the lockstep serve_batch oracle —
+    dense family, slot and paged arenas (acceptance: ISSUE 3).  Chunk
+    size 4 forces multi-chunk prefills on every prompt length here,
+    including one exactly on the chunk boundary (8) and one 1-token
+    prompt."""
+    lm, tables = deployed
+    specs = [(8, 6), (7, 4), (1, 5), (12, 6), (8, 3), (16, 8), (1, 2),
+             (9, 7)]
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, lm.cfg.vocab, size=(p,)) for p, _ in specs]
+    whole_tokens, _ = _run_engine(lm, tables, specs, prompts, chunk=0,
+                                  paged=paged)
+    chunk_tokens, eng = _run_engine(lm, tables, specs, prompts, chunk=4,
+                                    paged=paged)
+    assert chunk_tokens == whole_tokens
+    assert float_cache_leaves(eng.arena.caches) == []
+    assert_integer_caches(eng.arena.decode_view())
+    # simultaneous same-length subset == lockstep serve_batch
+    P, G, B = 8, 6, 3
+    batch = np.stack([rng.integers(0, lm.cfg.vocab, size=(P,))
+                      for _ in range(B)])
+    ref = np.asarray(serve_batch(
+        lm, tables, jnp.asarray(batch, jnp.int32), G))
+    eng2 = ServingEngine(
+        lm, tables, n_slots=B, max_len=P + G, paged=paged, page_size=4,
+        scheduler=SchedulerConfig(max_prefills_per_step=B,
+                                  prefill_bucket=8, prefill_chunk=4))
+    ids = [eng2.submit(batch[i], max_new_tokens=G) for i in range(B)]
+    got = {c.req_id: c.tokens for c in eng2.run_until_drained()}
+    for i, rid in enumerate(ids):
+        assert got[rid] == list(ref[i]), f"paged={paged} slot {i}"
+
+
+def test_chunked_boundary_and_one_token_prompts(deployed):
+    """Prompt lengths exactly on the chunk boundary (P == k*C) and
+    1-token prompts: the final chunk's last-index gather must pick the
+    true last prompt token in both the full-chunk and the maximally
+    padded case."""
+    lm, tables = deployed
+    rng = np.random.default_rng(8)
+    for P in (4, 8, 1):                      # C=4: full, 2-chunk, padded
+        prompt = rng.integers(0, lm.cfg.vocab, size=(P,))
+        ref = np.asarray(serve_batch(
+            lm, tables, jnp.asarray(prompt[None], jnp.int32), 5))[0]
+        (tokens,), eng = _run_engine(
+            lm, tables, [(P, 5)], [prompt], chunk=4, paged=False,
+            n_slots=1, stagger=False)
+        assert tokens == list(ref), f"P={P} diverged"
+        # the arena's written-length bookkeeping advanced chunk by chunk
+        assert eng.arena.n_free == 1
+
+
+def test_long_prompt_does_not_starve_decode(deployed):
+    """A long prompt admitted while other slots decode must stream in
+    chunk by chunk, with every decoding slot advancing one token per
+    engine step throughout (the whole point of chunked prefill)."""
+    lm, tables = deployed
+    rng = np.random.default_rng(9)
+    eng = ServingEngine(
+        lm, tables, n_slots=3, max_len=MAX_LEN,
+        scheduler=SchedulerConfig(max_prefills_per_step=2,
+                                  prefill_bucket=8, prefill_chunk=4))
+    a = eng.submit(rng.integers(0, lm.cfg.vocab, size=(3,)),
+                   max_new_tokens=30)
+    b = eng.submit(rng.integers(0, lm.cfg.vocab, size=(4,)),
+                   max_new_tokens=30)
+    eng.step()                              # both short prompts decoding
+    assert len(eng.active) == 2 and not eng.prefilling
+    long_req = eng.submit(rng.integers(0, lm.cfg.vocab, size=(24,)),
+                          max_new_tokens=4)
+    n_chunk_steps = -(-24 // 4)
+    before = {s.request.req_id: len(s.tokens)
+              for s in eng.active.values()}
+    for i in range(n_chunk_steps):
+        eng.step()                          # long prompt still arriving
+        assert long_req in [s.request.req_id
+                            for s in eng.prefilling.values()] or i \
+            == n_chunk_steps - 1
+        for s in eng.active.values():
+            if s.request.req_id in before:
+                # decode advanced EVERY step while the chunk streamed
+                assert len(s.tokens) == before[s.request.req_id] + i + 1
+    done = {c.req_id: c for c in eng.run_until_drained()}
+    assert done[long_req].n_generated == 4
+    for rid in (a, b):
+        assert done[rid].n_generated == 30
+
+
+def test_chunk_packing_fairness_cap(deployed):
+    """plan_chunks packs FIFO and honors max_chunks_per_step; capped
+    rows resume in later dispatches and every request still drains."""
+    from repro.serving import PrefillState, Request, Scheduler
+
+    sched = Scheduler(SchedulerConfig(prefill_chunk=4,
+                                      max_chunks_per_step=2), 64)
+    reqs = [Request(np.arange(1, 1 + p), 4) for p in (10, 4, 7)]
+    states = [PrefillState(request=r, slot=i)
+              for i, r in enumerate(reqs)]
+    plan = sched.plan_chunks(states)
+    assert [(st.slot, off, n) for st, off, n in plan] == \
+        [(0, 0, 4), (1, 0, 4)]              # FIFO, capped at 2 rows
+    states[0].offset = 8                    # mid-prefill: partial tail
+    plan = sched.plan_chunks(states)
+    assert plan[0][1:] == (8, 2)            # final chunk is partial
+    # engine-level: the cap stretches prefill over more steps but every
+    # request still completes with the same tokens
+    lm, tables = deployed
+    rng = np.random.default_rng(10)
+    specs = [(12, 4), (9, 4), (16, 4)]
+    prompts = [rng.integers(0, lm.cfg.vocab, size=(p,)) for p, _ in specs]
+    uncapped, _ = _run_engine(lm, tables, specs, prompts, chunk=4,
+                              paged=False, stagger=False)
+    capped, _ = _run_engine(lm, tables, specs, prompts, chunk=4,
+                            paged=False, stagger=False, max_chunks=1)
+    assert capped == uncapped
+
+
 def test_paged_submit_validation(deployed):
     """A request whose own worst case exceeds the whole pool can never
     be admitted — reject at submit instead of deadlocking the queue."""
