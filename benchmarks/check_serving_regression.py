@@ -60,8 +60,7 @@ def normalized(metrics):
     return {p: v / ref for p, v in metrics.items() if p != LOCKSTEP_KEY}
 
 
-def gate(base, cand, cand_abs, max_regression, *, higher_is_better,
-         unit):
+def gate(base, cand, cand_abs, max_regression, *, higher_is_better, unit):
     """Compare normalized candidate metrics against the baseline;
     returns the failure messages (printing every row either way)."""
     failures = []
@@ -75,8 +74,10 @@ def gate(base, cand, cand_abs, max_regression, *, higher_is_better,
         else:
             drop = got / ref - 1.0 if ref > 0 else 0.0
         status = "FAIL" if drop > max_regression else "ok"
-        print(f"{status:4s} {path}: ratio {ref:.3f} -> {got:.3f} "
-              f"({-drop:+.1%}; {cand_abs[path]:.4g} {unit} absolute)")
+        print(
+            f"{status:4s} {path}: ratio {ref:.3f} -> {got:.3f} "
+            f"({-drop:+.1%}; {cand_abs[path]:.4g} {unit} absolute)"
+        )
         if drop > max_regression:
             failures.append(
                 f"{path}: normalized {ref:.3f} -> {got:.3f} "
@@ -90,10 +91,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default="BENCH_serving.json")
     ap.add_argument("--candidate", required=True)
-    ap.add_argument("--max-regression", type=float, default=0.30,
-                    help="maximal tolerated fractional regression of "
-                         "any lockstep-normalized engine metric "
-                         "(throughput drop or TTFT rise)")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.30,
+        help="maximal tolerated fractional regression of "
+        "any lockstep-normalized engine metric "
+        "(throughput drop or TTFT rise)",
+    )
     args = ap.parse_args()
 
     with open(args.baseline) as f:
@@ -105,8 +110,10 @@ def main():
     base = normalized(base_abs)
     cand = normalized(cand_abs)
 
-    print(f"lockstep reference: {base_abs[LOCKSTEP_KEY]:.2f} tok/s "
-          f"(baseline) vs {cand_abs[LOCKSTEP_KEY]:.2f} tok/s (candidate)")
+    print(
+        f"lockstep reference: {base_abs[LOCKSTEP_KEY]:.2f} tok/s "
+        f"(baseline) vs {cand_abs[LOCKSTEP_KEY]:.2f} tok/s (candidate)"
+    )
     failures = gate(base, cand, cand_abs, args.max_regression,
                     higher_is_better=True, unit="tok/s")
 

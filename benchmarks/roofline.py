@@ -70,16 +70,20 @@ def roofline_table(recs) -> str:
                 lines.append(f"| {arch} | {shape} | ERROR | | | | | | |")
                 continue
             rl = recompute(r)
-            tc, tm, tx = (rl["t_compute_s"], rl["t_memory_s"],
-                          rl["t_collective_s"])
+            tc, tm, tx = (
+                rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"]
+            )
             tot = max(tc, tm, tx)
             frac = tc / tot if tot > 0 else 0.0  # compute fraction of bound
-            mem = (r["memory"]["temp_bytes_per_dev"]
-                   + r["memory"]["argument_bytes_per_dev"])
+            mem = (
+                r["memory"]["temp_bytes_per_dev"]
+                + r["memory"]["argument_bytes_per_dev"]
+            )
             # per-chip HLO flops over the analytic share: <1 = XLA
             # undercounts int MACs; >1 = remat/dispatch overhead visible
-            useful = rl["hlo_flops"] / max(rl["model_flops"] / r["n_chips"],
-                                           1.0)
+            useful = rl["hlo_flops"] / max(
+                rl["model_flops"] / r["n_chips"], 1.0
+            )
             lines.append(
                 f"| {arch} | {shape} | {_fmt_t(tc)} | {_fmt_t(tm)} |"
                 f" {_fmt_t(tx)} | {rl['dominant']} | {frac:.2f} |"
@@ -100,9 +104,11 @@ def memory_table(recs) -> str:
         m = r["memory"]
         tot = m["argument_bytes_per_dev"] + m["temp_bytes_per_dev"]
         cb = r["collectives"]["bytes"]
-        coll = "/".join(f"{cb[k] / 1e6:.0f}M" for k in
-                        ("all-reduce", "all-gather", "reduce-scatter",
-                         "all-to-all", "collective-permute"))
+        kinds = (
+            "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute",
+        )
+        coll = "/".join(f"{cb[k] / 1e6:.0f}M" for k in kinds)
         lines.append(
             f"| {arch} | {shape} | {m['argument_bytes_per_dev'] / 1e9:.2f}G |"
             f" {m['temp_bytes_per_dev'] / 1e9:.2f}G |"
@@ -118,10 +124,12 @@ def summarize(dir_: str = "results/dryrun"):
         n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
         n_skip = sum(1 for r in recs.values() if r["status"] == "skipped")
         n_err = sum(1 for r in recs.values() if r["status"] == "error")
-        out.append(f"\n## Mesh: {mesh} "
-                   f"({'16x16=256' if mesh == 'pod' else '2x16x16=512'} chips)"
-                   f" — {n_ok} ok / {n_skip} skipped / {n_err} error "
-                   f"/ {40 - len(recs)} missing\n")
+        chips = "16x16=256" if mesh == "pod" else "2x16x16=512"
+        out.append(
+            f"\n## Mesh: {mesh} ({chips} chips)"
+            f" — {n_ok} ok / {n_skip} skipped / {n_err} error "
+            f"/ {40 - len(recs)} missing\n"
+        )
         out.append(roofline_table(recs))
         out.append(f"\n### Memory + collectives ({mesh})\n")
         out.append(memory_table(recs))

@@ -60,9 +60,14 @@ def bench_requant_error():
             e2e_errs.append(rel.max())
             scale_errs.append(float(scale_rel_error(rp, eps_in, eps_out)))
             assert scale_errs[-1] < bound  # the paper's Eq. 14 claim
-        rows.append((f"requant_err_factor{factor}", t_us / 20,
-                     f"scale_err={max(scale_errs):.2e}_bound={bound:.2e}"
-                     f"_e2e={max(e2e_errs):.2e}"))
+        rows.append(
+            (
+                f"requant_err_factor{factor}",
+                t_us / 20,
+                f"scale_err={max(scale_errs):.2e}_bound={bound:.2e}"
+                f"_e2e={max(e2e_errs):.2e}",
+            )
+        )
     return rows
 
 
@@ -89,14 +94,14 @@ def bench_representation_agreement():
     qs = {"beta": [jnp.float32(calib.beta(f"b{i}.act")) for i in range(2)]}
     us, y_fq = _timeit(
         jax.jit(lambda x: model.apply_float(p, x, Rep.FQ, qstate=qs)), x)
-    rows.append(("cnn_fq_vs_fp", us,
-                 f"rel={np.abs(np.asarray(y_fq)-y_fp).max()/scale:.4f}"))
+    rel_fq = np.abs(np.asarray(y_fq) - y_fp).max() / scale
+    rows.append(("cnn_fq_vs_fp", us, f"rel={rel_fq:.4f}"))
     for mode in ("fold", "intbn", "thresh"):
         t = model.deploy(p, calib, bn_mode=mode)
         us, out = _timeit(jax.jit(lambda s: model.apply_id(t, s)), s_x)
         got = np.asarray(out, np.float64) * t["meta"]["eps_logits"]
-        rows.append((f"cnn_id_{mode}_vs_fp", us,
-                     f"rel={np.abs(got-y_fp).max()/scale:.4f}"))
+        rel_id = np.abs(got - y_fp).max() / scale
+        rows.append((f"cnn_id_{mode}_vs_fp", us, f"rel={rel_id:.4f}"))
     return rows
 
 
@@ -111,8 +116,9 @@ def bench_lm_integer_agreement():
     from repro.models.lm import DecoderLM
 
     rows = []
-    for arch in ("granite_3_2b", "olmoe_1b_7b", "falcon_mamba_7b",
-                 "zamba2_1_2b"):
+    for arch in (
+        "granite_3_2b", "olmoe_1b_7b", "falcon_mamba_7b", "zamba2_1_2b"
+    ):
         cfg = get_config(arch).reduced()
         lm = DecoderLM(cfg, max_seq=32)
         key = jax.random.PRNGKey(0)
@@ -120,8 +126,9 @@ def bench_lm_integer_agreement():
         tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab)
         calib = lm.calibrate(p, tokens)
         t = lm.deploy(p, calib)
-        t = jax.tree.map(jnp.asarray, t,
-                         is_leaf=lambda a: isinstance(a, np.ndarray))
+        t = jax.tree.map(
+            jnp.asarray, t, is_leaf=lambda a: isinstance(a, np.ndarray)
+        )
 
         def fp_logits(tok):
             x = lm.embed_in(p, tok, Rep.FP)
@@ -136,11 +143,13 @@ def bench_lm_integer_agreement():
         us_fp, lf = _timeit(jax.jit(fp_logits), tokens)
         us_id, li = _timeit(jax.jit(id_logits), tokens)
         lf = np.asarray(lf, np.float64)[:, -1, :cfg.vocab]
-        li = (np.asarray(li, np.float64)[:, -1, :cfg.vocab]
-              * float(t["meta"]["eps_logits"]))
+        li = np.asarray(li, np.float64)[:, -1, :cfg.vocab] * float(
+            t["meta"]["eps_logits"]
+        )
         cc = np.corrcoef(lf.ravel(), li.ravel())[0, 1]
-        rows.append((f"lm_id_{arch}", us_id,
-                     f"corr_vs_fp={cc:.4f}_fp_us={us_fp:.0f}"))
+        rows.append(
+            (f"lm_id_{arch}", us_id, f"corr_vs_fp={cc:.4f}_fp_us={us_fp:.0f}")
+        )
     return rows
 
 
@@ -167,8 +176,13 @@ def bench_kernels():
         jax.jit(lambda: ref.int8_matmul_requant_ref(x, w, bias, mul, s0,
                                                     d=rp.d)))
     exact = bool(np.array_equal(np.asarray(out_k), np.asarray(out_r)))
-    return [("kernel_int8_matmul_interp", us_k,
-             f"exact_vs_ref={exact}_ref_us={us_r:.0f}")]
+    return [
+        (
+            "kernel_int8_matmul_interp",
+            us_k,
+            f"exact_vs_ref={exact}_ref_us={us_r:.0f}",
+        )
+    ]
 
 
 # ---------------------------------------------------------------------------
@@ -194,8 +208,9 @@ def bench_integer_norm():
             {"g": jnp.asarray(g)}, jnp.asarray(s_x * eps_x), calib=calib))
         t, eps_y, _ = norm.deploy(DeployCtx(calib=calib), "", {"g": g}, eps_x)
         t_j = jax.tree.map(jnp.asarray, t)
-        us, s_y = _timeit(jax.jit(lambda s: norm.apply_id(t_j, s)),
-                          jnp.asarray(s_x))
+        us, s_y = _timeit(
+            jax.jit(lambda s: norm.apply_id(t_j, s)), jnp.asarray(s_x)
+        )
         got = np.asarray(s_y, np.float64) * eps_y
         rel = np.abs(got - ref_y).max() / (np.abs(ref_y).max() + 1e-9)
         rows.append((f"int_{kind}norm_d{d}", us, f"max_rel_err={rel:.4f}"))

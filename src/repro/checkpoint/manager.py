@@ -43,8 +43,9 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> Path:
     for i, leaf in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         np.save(tmp / f"arr_{i:06d}.npy", arr)
-        meta["leaves"].append({"shape": list(arr.shape),
-                               "dtype": str(arr.dtype)})
+        meta["leaves"].append(
+            {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+        )
     (tmp / "meta.json").write_text(json.dumps(meta))
     if final.exists():
         shutil.rmtree(final)
@@ -54,8 +55,11 @@ def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> Path:
 
 
 def _gc(base: Path, keep: int):
-    steps = sorted(p for p in base.glob("step_[0-9]*") if p.is_dir()
-                   and not p.name.endswith(".tmp"))
+    steps = sorted(
+        p
+        for p in base.glob("step_[0-9]*")
+        if p.is_dir() and not p.name.endswith(".tmp")
+    )
     for old in steps[:-keep]:
         shutil.rmtree(old)
 
@@ -82,8 +86,11 @@ def restore(ckpt_dir: str, step: int, like: Any, *,
     assert meta["n_leaves"] == len(leaves_like), (
         meta["n_leaves"], len(leaves_like))
     out = []
-    sh_leaves = (_flatten(shardings)[0] if shardings is not None
-                 else [None] * len(leaves_like))
+    sh_leaves = (
+        _flatten(shardings)[0]
+        if shardings is not None
+        else [None] * len(leaves_like)
+    )
     for i, (ref, sh) in enumerate(zip(leaves_like, sh_leaves)):
         arr = np.load(path / f"arr_{i:06d}.npy")
         expect = tuple(np.shape(ref))

@@ -71,8 +71,11 @@ class ArchConfig:
         """Tiny same-family variant for CPU smoke tests."""
         kw = dataclasses.asdict(self)
         kw.update(
-            n_layers=min(self.n_layers, 2 if self.shared_attn_every == 0
-                         else self.shared_attn_every + 1),
+            n_layers=min(
+                self.n_layers,
+                2 if self.shared_attn_every == 0
+                else self.shared_attn_every + 1,
+            ),
             d_model=128,
             vocab=256,
             d_ff=256 if self.d_ff else 0,
@@ -83,8 +86,9 @@ class ArchConfig:
             top_k=min(self.top_k, 2),
             moe_group=64,
             ssm_state=min(self.ssm_state, 16),
-            ssm_head_dim=(32 if self.ssm_kind == "mamba2"
-                          else self.ssm_head_dim),
+            ssm_head_dim=(
+                32 if self.ssm_kind == "mamba2" else self.ssm_head_dim
+            ),
             shared_attn_every=(2 if self.shared_attn_every else 0),
             name=self.name + "_reduced",
         )
@@ -101,8 +105,9 @@ class ArchConfig:
                         + 2 * d * self.n_kv_heads * hd
                         + self.n_heads * hd * d)
                 n += attn + 2 * d  # norms
-                is_moe = self.n_experts > 0 and (i % self.moe_every
-                                                 == self.moe_every - 1)
+                is_moe = self.n_experts > 0 and (
+                    i % self.moe_every == self.moe_every - 1
+                )
                 ff_mats = 3 if self.gated else 2
                 if is_moe:
                     n += self.n_experts * ff_mats * d * self.d_ff
@@ -114,16 +119,30 @@ class ArchConfig:
             elif self.family == "ssm":
                 di = self.ssm_expand * d
                 rank = max(1, -(-d // 16))
-                n += (d * 2 * di + di * (rank + 2 * self.ssm_state)
-                      + rank * di + di * d + di * self.ssm_state + 2 * di + d)
+                n += (
+                    d * 2 * di
+                    + di * (rank + 2 * self.ssm_state)
+                    + rank * di
+                    + di * d
+                    + di * self.ssm_state
+                    + 2 * di
+                    + d
+                )
             elif self.family == "hybrid":
                 di = self.ssm_expand * d
                 H = di // self.ssm_head_dim
-                n += (d * (2 * di + 2 * self.ssm_state + H) + di * d + 3 * H
-                      + 2 * di + d)
+                n += (
+                    d * (2 * di + 2 * self.ssm_state + H)
+                    + di * d
+                    + 3 * H
+                    + 2 * di
+                    + d
+                )
         if self.family == "hybrid" and self.shared_attn_every:
-            n += (2 * d * (self.n_heads + 2 * self.n_kv_heads) * hd
-                  + self.n_heads * hd * d)
+            n += (
+                2 * d * (self.n_heads + 2 * self.n_kv_heads) * hd
+                + self.n_heads * hd * d
+            )
         return int(n)
 
     def active_param_count(self) -> int:

@@ -8,5 +8,5 @@ register(ArchConfig(
     d_ff=8192, ssm_kind="mamba2", ssm_state=64, ssm_expand=2,
     ssm_head_dim=64, shared_attn_every=6, norm="rms", sub_quadratic=True,
     notes="shared-attn weights single-copy in FP/FQ; per-application "
-          "integer tables in ID (quanta differ per application)",
+    "integer tables in ID (quanta differ per application)",
 ))

@@ -38,8 +38,11 @@ def fold_bn(w: np.ndarray, b, gamma, beta, mu, sigma, *,
     shape[channel_axis] = -1
     w_f = w * kappa.reshape(shape)
     b = np.float64(0.0) if b is None else np.asarray(b, np.float64)
-    b_f = (kappa * b + np.asarray(beta, np.float64)
-           - kappa * np.asarray(mu, np.float64))
+    b_f = (
+        kappa * b
+        + np.asarray(beta, np.float64)
+        - kappa * np.asarray(mu, np.float64)
+    )
     return w_f, b_f
 
 
@@ -82,8 +85,9 @@ def make_integer_bn(
     # symmetric quantizer for kappa (paper: eps = 2*beta_k/(2^Q - 1))
     beta_k = np.maximum(np.max(np.abs(kappa)), 1e-12)
     eps_k = 2.0 * beta_k / (kappa_spec.levels - 1)
-    q_kappa = np.clip(np.round(kappa / eps_k), kappa_spec.qmin,
-                      kappa_spec.qmax)
+    q_kappa = np.clip(
+        np.round(kappa / eps_k), kappa_spec.qmin, kappa_spec.qmax
+    )
 
     # int32 budget: |q_k * (q_phi >> s)| < 2^30
     kmax = float(np.max(np.abs(q_kappa)))
@@ -146,8 +150,9 @@ def make_bn_act_thresholds(
     if rounded:
         i = i - 0.5
     s_over_g = (sigma / gamma)[:, None]
-    th = (s_over_g * i * float(eps_y) - beta[:, None] * s_over_g
-          + mu[:, None]) / float(eps_phi)
+    th = (
+        s_over_g * i * float(eps_y) - beta[:, None] * s_over_g + mu[:, None]
+    ) / float(eps_phi)
     return np.ceil(th).astype(np.int64)
 
 

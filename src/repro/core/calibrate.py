@@ -29,13 +29,20 @@ class Calibrator:
             self.hi[name] = max(self.hi[name], x_hi)
         else:
             m = self.momentum
-            self.lo[name] = ((1 - m) * self.lo[name]
-                             + m * min(self.lo[name], x_lo))
-            self.hi[name] = ((1 - m) * self.hi[name]
-                             + m * max(self.hi[name], x_hi))
+            self.lo[name] = (
+                (1 - m) * self.lo[name] + m * min(self.lo[name], x_lo)
+            )
+            self.hi[name] = (
+                (1 - m) * self.hi[name] + m * max(self.hi[name], x_hi)
+            )
 
-    def range(self, name: str, *, default: Tuple[float, float] = (0.0, 6.0),
-              margin: float = 0.0) -> Tuple[float, float]:
+    def range(
+        self,
+        name: str,
+        *,
+        default: Tuple[float, float] = (0.0, 6.0),
+        margin: float = 0.0,
+    ) -> Tuple[float, float]:
         if name not in self.hi:
             return default
         lo, hi = self.lo[name], self.hi[name]

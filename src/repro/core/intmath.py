@@ -45,8 +45,16 @@ def int_reciprocal_q(r, d: int):
     return (jnp.int32(1) << d) // r
 
 
-def build_lut(fn, eps_in, zp_in: int, eps_out, zp_out: int, *,
-              qmin: int = -128, qmax: int = 127) -> np.ndarray:
+def build_lut(
+    fn,
+    eps_in,
+    zp_in: int,
+    eps_out,
+    zp_out: int,
+    *,
+    qmin: int = -128,
+    qmax: int = 127,
+) -> np.ndarray:
     """Materialize a pointwise nonlinearity as a 256-entry integer table.
 
     This is exactly the paper's general staircase quantization function

@@ -82,8 +82,9 @@ def int_softmax(s, tables, *, axis: int = -1, mask=None, p_bits: int = 7):
     return jnp.clip(p, 0, pmax).astype(jnp.int8)
 
 
-def int_softmax_ref_float(s, eps_s: float, *, axis: int = -1, mask=None,
-                          p_bits: int = 7):
+def int_softmax_ref_float(
+    s, eps_s: float, *, axis: int = -1, mask=None, p_bits: int = 7
+):
     """Float oracle: softmax(s*eps_s) quantized to the same image grid."""
     x = s.astype(jnp.float32) * eps_s
     if mask is not None:

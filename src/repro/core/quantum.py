@@ -160,8 +160,9 @@ def dequantize(stored, eps, zp: int):
     return (stored.astype(jnp.float32) - zp) * jnp.asarray(eps, jnp.float32)
 
 
-def fake_quantize(x, eps, zp: int, spec: QuantSpec, *,
-                  rounding: str = "floor"):
+def fake_quantize(
+    x, eps, zp: int, spec: QuantSpec, *, rounding: str = "floor"
+):
     """quantize → dequantize in one go (the FQ forward restriction)."""
     return dequantize(
         quantize_affine(x, eps, zp, spec, rounding=rounding), eps, zp)
@@ -172,8 +173,9 @@ def fake_quantize(x, eps, zp: int, spec: QuantSpec, *,
 # ---------------------------------------------------------------------------
 
 
-def act_qmeta(beta: float, spec: QuantSpec = UINT8,
-              alpha: float = 0.0) -> QMeta:
+def act_qmeta(
+    beta: float, spec: QuantSpec = UINT8, alpha: float = 0.0
+) -> QMeta:
     """Quantum for a clipped activation on [alpha, beta) (paper §2.2).
 
     eps = (beta - alpha) / (2^Q - 1);  ReLU-family uses alpha=0.
@@ -189,8 +191,9 @@ def act_qmeta(beta: float, spec: QuantSpec = UINT8,
     return QMeta.make(eps, zp_eff, spec)
 
 
-def weight_qmeta(w: np.ndarray, spec: QuantSpec = INT8,
-                 channel_axis: Optional[int] = 0) -> QMeta:
+def weight_qmeta(
+    w: np.ndarray, spec: QuantSpec = INT8, channel_axis: Optional[int] = 0
+) -> QMeta:
     """Symmetric per-channel weight quantum: eps = 2*beta/(2^Q - 1).
 
     (paper §3.4 'symmetric (alpha=-beta) Q-bit quantizer'); beta is the
@@ -220,8 +223,9 @@ def quantize_np(x: np.ndarray, meta: QMeta, *, rounding: str = "round",
     return q.astype(np.dtype(meta.spec.dtype))
 
 
-def dequantize_np(q: np.ndarray, meta: QMeta, *,
-                  channel_axis: Optional[int] = None) -> np.ndarray:
+def dequantize_np(
+    q: np.ndarray, meta: QMeta, *, channel_axis: Optional[int] = None
+) -> np.ndarray:
     eps = meta.eps
     if meta.per_channel and channel_axis is not None:
         shape = [1] * q.ndim

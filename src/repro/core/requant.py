@@ -117,8 +117,9 @@ class RequantParams:
             scale = m * math.pow(2.0, -d)  # ~= ratio
             pre_hi = np.minimum(np.ceil(span_hi / scale) + 1.0, 2.0 ** 31 - 1)
             pre_lo = np.maximum(np.floor(span_lo / scale) - 1.0, -(2.0 ** 31))
-            eff = np.minimum(acc_bound,
-                             np.maximum(np.abs(pre_hi), np.abs(pre_lo)))
+            eff = np.minimum(
+                acc_bound, np.maximum(np.abs(pre_hi), np.abs(pre_lo))
+            )
             with np.errstate(divide="ignore"):
                 need = np.ceil(np.log2(np.maximum(eff * m, 1.0))).astype(int)
             s0 = np.maximum(np.maximum(need - _INT32_BUDGET, d - 31), 0)
@@ -214,8 +215,15 @@ def apply_requant(q, rp: RequantParams, *, channel_axis: int = -1):
     return out.astype(getattr(jnp, rp.out_dtype))
 
 
-def apply_rqt(q, rqt: dict, *, channel_axis: int = -1,
-              qmin: int = -128, qmax: int = 127, out_dtype=jnp.int8):
+def apply_rqt(
+    q,
+    rqt: dict,
+    *,
+    channel_axis: int = -1,
+    qmin: int = -128,
+    qmax: int = 127,
+    out_dtype=jnp.int8,
+):
     """Runtime-tree form of `apply_requant` (scan-stackable, d >= 0 only).
 
     ``rqt`` holds int32 arrays {m, d, s0, lo, hi, zp}; m/s0/lo/hi may be
@@ -238,9 +246,16 @@ def apply_rqt(q, rqt: dict, *, channel_axis: int = -1,
     return jnp.clip(out, qmin, qmax).astype(out_dtype)
 
 
-def make_rqt(eps_in, eps_out, *, zp_out: int = 0, qmin: int = -128,
-             qmax: int = 127, requant_factor: int = DEFAULT_REQUANT_FACTOR,
-             acc_bound: Optional[float] = None) -> dict:
+def make_rqt(
+    eps_in,
+    eps_out,
+    *,
+    zp_out: int = 0,
+    qmin: int = -128,
+    qmax: int = 127,
+    requant_factor: int = DEFAULT_REQUANT_FACTOR,
+    acc_bound: Optional[float] = None,
+) -> dict:
     """Host-side: RequantParams.make -> runtime tree, d forced >= 0 so
     stacked layers share one code path (see RequantParams.to_tree)."""
     rp = RequantParams.make(
@@ -250,8 +265,9 @@ def make_rqt(eps_in, eps_out, *, zp_out: int = 0, qmin: int = -128,
     return rp.to_tree()
 
 
-def requant_identity(zp_out: int = 0, qmin: int = -128,
-                     qmax: int = 127) -> RequantParams:
+def requant_identity(
+    zp_out: int = 0, qmin: int = -128, qmax: int = 127
+) -> RequantParams:
     """m=1, d=0 pass-through (used where eps already matches, D=1 case of
     the paper's PACT_IntegerBatchNorm2d lambda path)."""
     big = 2 ** 31 - 1

@@ -24,8 +24,9 @@ class SyntheticConfig:
 
 
 class SyntheticStream:
-    def __init__(self, cfg: SyntheticConfig, *, host_index: int = 0,
-                 n_hosts: int = 1):
+    def __init__(
+        self, cfg: SyntheticConfig, *, host_index: int = 0, n_hosts: int = 1
+    ):
         assert cfg.global_batch % n_hosts == 0
         self.cfg = cfg
         self.host_index = host_index
@@ -44,8 +45,9 @@ class SyntheticStream:
         c = self.cfg
         rng = np.random.default_rng(
             (c.seed, step, self.host_index))
-        toks = rng.choice(c.vocab, size=(self.local_batch, c.seq_len + 1),
-                          p=self.probs).astype(np.int32)
+        toks = rng.choice(
+            c.vocab, size=(self.local_batch, c.seq_len + 1), p=self.probs
+        ).astype(np.int32)
         # 50% of positions follow the grammar -> learnable structure
         follow = rng.random((self.local_batch, c.seq_len)) < 0.5
         nxt = self.successor[toks[:, :-1]]

@@ -66,8 +66,9 @@ def int8_matmul_requant_pallas(
     assert K == K2 and M % bm == 0 and N % bn == 0 and K % bk == 0, (
         (M, K, N), (bm, bn, bk))
     n_k = K // bk
-    kern = functools.partial(_kernel, n_k=n_k, d=d, zp=zp, qmin=qmin,
-                             qmax=qmax)
+    kern = functools.partial(
+        _kernel, n_k=n_k, d=d, zp=zp, qmin=qmin, qmax=qmax
+    )
     return pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.int8),

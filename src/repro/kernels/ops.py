@@ -27,8 +27,10 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, pad), size
 
 
-@functools.partial(jax.jit, static_argnames=("d", "zp", "qmin", "qmax",
-                                             "bm", "bn", "bk", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("d", "zp", "qmin", "qmax", "bm", "bn", "bk", "interpret"),
+)
 def int8_matmul_requant(x, w, bias, mul, s0, *, d: int, zp: int = 0,
                         qmin: int = -128, qmax: int = 127, bm: int = 128,
                         bn: int = 128, bk: int = 128,
@@ -74,8 +76,9 @@ def linear_rqt_kernel(s_x, ip: dict, rqt: dict, *, interpret: bool = True):
         interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("d", "zp", "qmin", "qmax",
-                                             "bm", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("d", "zp", "qmin", "qmax", "bm", "interpret")
+)
 def requant(q, m, s0, lo, hi, *, d: int, zp: int = 0, qmin: int = -128,
             qmax: int = 127, bm: int = 256, interpret: bool = True):
     """q (..., N) int32 -> (..., N) int8 via the VPU kernel."""
@@ -83,18 +86,39 @@ def requant(q, m, s0, lo, hi, *, d: int, zp: int = 0, qmin: int = -128,
     N = q.shape[-1]
     q2 = q.reshape(-1, N)
     q2, M0 = _pad_to(q2, bm, 0)
-    out = requant_pallas(q2, m, s0, lo, hi, d=d, zp=zp, qmin=qmin,
-                         qmax=qmax, bm=bm, interpret=interpret)
+    out = requant_pallas(
+        q2,
+        m,
+        s0,
+        lo,
+        hi,
+        d=d,
+        zp=zp,
+        qmin=qmin,
+        qmax=qmax,
+        bm=bm,
+        interpret=interpret,
+    )
     return out[:M0].reshape(*lead, N)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "score_scale", "eps_ctx", "causal", "q_offset", "bq", "bkv",
     "n_rep", "interpret"))
-def quant_flash_attention(q, k, v, *, score_scale: float, eps_ctx: float,
-                          causal: bool = True, q_offset: int = 0,
-                          n_rep: int = 1, bq: int = 128, bkv: int = 128,
-                          interpret: bool = True):
+def quant_flash_attention(
+    q,
+    k,
+    v,
+    *,
+    score_scale: float,
+    eps_ctx: float,
+    causal: bool = True,
+    q_offset: int = 0,
+    n_rep: int = 1,
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = True,
+):
     """GQA wrapper.  q (B, H, S_q, hd); k/v (B, K, S_kv, hd) int8;
     n_rep = H // K.  Returns (B, H, S_q, hd) int8 ctx image."""
     B, H, S_q, hd = q.shape

@@ -1,0 +1,178 @@
+"""Fused paged-attention integer decode kernel (W8A8 serving).
+
+Single-token decode directly over the paged KV arena: the kernel reads
+K/V page by page *through the page table* (dynamic `pl.ds` loads into
+VMEM), so the serving hot path never materializes the dense logical
+(B, K, T, hd) view that `layers/attention._paged_kv_view` gathers —
+that O(n_slots x max_len) transient copy per decode step was the
+ROADMAP's fused-kernel follow-up, and survives only on the flagged
+parity-oracle path (`variants paged_decode="gather"`).
+
+Algorithm — the model's unfused ID decode attention, bit for bit:
+
+    per page j (physical id table[b, j]):
+      s_j      = q_i8 . k_page_i8^T            int32, MXU int8 path
+      logits_j = s_j * score_scale + mask      staged into a VMEM row
+    == float island (one (1, T) row in VMEM) ==
+      probs    = softmax(logits)               max / exp / sum / divide
+      qp       = round(127 * probs)            int8 image, eps_p = 1/127
+    == island exit ==
+      per page j:  acc += qp_j . v_page_i8     int32 accumulator
+    out_i32 = acc                              (ctx_rqt applied outside)
+
+Decode has a single query row, so the full probability row fits in one
+VMEM scratch vector and the kernel can afford the model's *global*
+probability image instead of flash-attention's per-block online
+re-quantization (`kernels/quant_attention.py`).  That choice is what
+makes the kernel BIT-EXACT with the write-then-gather jnp path — and
+therefore with the contiguous SlotArena decode — rather than
+approximately close: every cross-element reduction is an integer dot,
+an order-free max, or the same-shaped (1, T) float sum XLA emits for
+the unfused softmax (per-page partial sums would NOT reproduce it; the
+logits row is staged so one full-row sum runs).  Engine tests pin
+kernel == gather == SlotArena token-for-token on that basis.
+
+Masking contract (serving.cache.PagedArena layout):
+
+  * positions past `pos[b]` take the same -1e9 additive mask as
+    `layers/attention._mask` — stale pages of a recycled slot and the
+    padded tail of the last partial page surface nothing;
+  * PAGE_NULL table entries point at physical page 0 (the trash page)
+    and only ever cover fully-masked logical blocks of live rows;
+  * rows parked at INACTIVE_POS keep every position (their tables are
+    all PAGE_NULL, so they attend over deterministic trash) — garbage
+    in, garbage out, exactly like the gather path: the engine never
+    reads logits of inactive rows.
+
+GQA is folded into the page loads (kv head = h // group) — no
+head-expanded K/V copy exists anywhere.  `score_scale` may be a traced
+scalar (layer-stacked tables under lax.scan).
+
+`kernels/ref.py::paged_attention_decode_ref` is the pure-jnp mirror of
+exactly this algorithm; tests pin kernel == mirror at tolerance 0.
+
+Memory scope: the pool in_specs cover the whole (n_pages + 1, K, ps,
+hd) pools — fine for interpret mode (this repo's CI target, where the
+"block" is never copied) and for arenas that fit VMEM, but a
+production-TPU build with a large page pool needs the pools parked in
+HBM (memory_space=ANY) with explicit per-page async copies replacing
+the `pl.ds` loads.  That swap changes only `page_kv` and the two pool
+BlockSpecs; the algorithm — and its bit-exactness contract — stays.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e9
+
+
+def _kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    table_ref,
+    pos_ref,
+    scale_ref,
+    o_ref,
+    logits_ref,
+    *,
+    ps: int,
+    pps: int,
+    group: int,
+):
+    """One (slot b, head h) grid step; logits staged in VMEM scratch."""
+    h = pl.program_id(1)
+    kh = h // group
+    q = q_ref[0]  # (1, hd) int8
+    tab = table_ref[0]  # (pps,) int32
+    pos_b = pos_ref[0]
+    scale = scale_ref[0, 0]
+
+    def page_kv(ref, j):
+        page = jax.lax.dynamic_index_in_dim(tab, j, 0, keepdims=False)
+        blk = pl.load(
+            ref, (pl.ds(page, 1), pl.ds(kh, 1), slice(None), slice(None))
+        )
+        return blk[0, 0]  # (ps, hd) int8
+
+    def score_body(j, carry):
+        s = jax.lax.dot_general(
+            q, page_kv(k_ref, j), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )  # (1, ps)
+        lg = s.astype(jnp.float32) * scale
+        k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        lg = lg + jnp.where(k_pos <= pos_b, 0.0, NEG_INF)
+        pl.store(logits_ref, (pl.ds(0, 1), pl.ds(j * ps, ps)), lg)
+        return carry
+
+    jax.lax.fori_loop(0, pps, score_body, 0)
+
+    # ---- float island: the model's global probability image ----
+    row = logits_ref[...]  # (1, T)
+    m = jnp.max(row, axis=-1, keepdims=True)
+    p = jnp.exp(row - m)
+    probs = p / jnp.sum(p, axis=-1, keepdims=True)
+    qp = jnp.round(probs * 127.0).astype(jnp.int8)  # island exit
+    # ---- island exit: integer P.V over pages ----
+
+    def pv_body(j, acc):
+        qp_j = jax.lax.dynamic_slice(qp, (0, j * ps), (1, ps))
+        return acc + jax.lax.dot_general(
+            qp_j, page_kv(v_ref, j), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+
+    acc0 = jnp.zeros((1, q_ref.shape[-1]), jnp.int32)
+    o_ref[0] = jax.lax.fori_loop(0, pps, pv_body, acc0)
+
+
+def paged_attention_decode_pallas(
+    q,
+    k_pool,
+    v_pool,
+    table,
+    pos,
+    *,
+    score_scale,
+    group: int = 1,
+    interpret: bool = True,
+):
+    """q (B, H, hd) int8; k/v pools (n_pages + 1, K, ps, hd) int8;
+    table (B, pps) int32 physical page ids; pos (B,) int32 decode
+    positions (INACTIVE_POS for parked rows).  -> (B, H, hd) int32
+    P.V accumulator in eps_p * eps_v units (the caller owns the
+    `ctx_rqt` requantization, like every Linear in this codebase).
+    """
+    B, H, hd = q.shape
+    n_pool, K, ps, _ = k_pool.shape
+    pps = table.shape[1]
+    assert H == K * group, (H, K, group)
+    scale = jnp.asarray(score_scale, jnp.float32).reshape(1, 1)
+    kern = functools.partial(_kernel, ps=ps, pps=pps, group=group)
+    call = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), jnp.int32),
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((n_pool, K, ps, hd), lambda b, h: (0, 0, 0, 0)),
+            pl.BlockSpec((n_pool, K, ps, hd), lambda b, h: (0, 0, 0, 0)),
+            pl.BlockSpec((1, pps), lambda b, h: (b, 0)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+            pl.BlockSpec((1, 1), lambda b, h: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h: (b, h, 0)),
+        scratch_shapes=[pltpu.VMEM((1, pps * ps), jnp.float32)],
+        interpret=interpret,
+    )
+    return call(
+        q, k_pool, v_pool, table.astype(jnp.int32), pos.astype(jnp.int32),
+        scale,
+    )

@@ -35,10 +35,18 @@ def requant_ref(q, m, s0, lo, hi, *, d: int, zp: int = 0, qmin: int = -128,
     return jnp.clip(out, qmin, qmax).astype(jnp.int8)
 
 
-def quant_flash_attention_ref(q, k, v, *, score_scale: float,
-                              eps_ctx: float, causal: bool = True,
-                              q_offset: int = 0, bq: int = 128,
-                              bkv: int = 128):
+def quant_flash_attention_ref(
+    q,
+    k,
+    v,
+    *,
+    score_scale: float,
+    eps_ctx: float,
+    causal: bool = True,
+    q_offset: int = 0,
+    bq: int = 128,
+    bkv: int = 128,
+):
     """Mirror of quant_attention: same blockwise online softmax with
     per-block int8 probability images.  q (BH, S_q, hd) int8."""
     BH, S_q, hd = q.shape
@@ -84,8 +92,68 @@ def quant_flash_attention_ref(q, k, v, *, score_scale: float,
     return jnp.stack(rows, axis=0)
 
 
-def attention_unfused_ref(q, k, v, *, score_scale: float, eps_ctx: float,
-                          causal: bool = True, q_offset=0):
+def paged_attention_decode_ref(
+    q, k_pool, v_pool, table, pos, *, score_scale, group: int = 1
+):
+    """Mirror of paged_attention.paged_attention_decode_pallas: the
+    model's unfused single-query ID attention walked page by page
+    through the table — per-page integer score dots staged into one
+    (1, T) logits row, ONE global softmax + int8 probability image
+    (eps_p = 1/127), per-page integer P.V accumulation.  The float
+    island runs on the same-shaped (1, T) row as the kernel, so the
+    mirror is bit-exact against it (tolerance 0 in tests).
+
+    q (B, H, hd) int8; pools (n_pages + 1, K, ps, hd) int8;
+    table (B, pps) int32; pos (B,) int32. -> (B, H, hd) int32
+    accumulator (eps_p * eps_v units; ctx_rqt applied by the caller).
+    """
+    B, H, hd = q.shape
+    _, K, ps, _ = k_pool.shape
+    pps = table.shape[1]
+    assert H == K * group, (H, K, group)
+
+    def one(b, h):
+        qr = q[b, h][None]                             # (1, hd) int8
+        blocks = []
+        for j in range(pps):
+            page = table[b, j]
+            k_page = k_pool[page, h // group]          # (ps, hd)
+            s = jax.lax.dot_general(
+                qr, k_page, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            lg = s.astype(jnp.float32) * jnp.float32(score_scale)
+            k_pos = j * ps + jnp.arange(ps)[None, :]
+            blocks.append(lg + jnp.where(k_pos <= pos[b], 0.0, NEG_INF))
+        row = jnp.concatenate(blocks, axis=1)          # (1, T)
+        m = jnp.max(row, axis=-1, keepdims=True)
+        p = jnp.exp(row - m)
+        probs = p / jnp.sum(p, axis=-1, keepdims=True)
+        qp = jnp.round(probs * 127.0).astype(jnp.int8)
+        acc = jnp.zeros((1, hd), jnp.int32)
+        for j in range(pps):
+            page = table[b, j]
+            v_page = v_pool[page, h // group]
+            acc = acc + jax.lax.dot_general(
+                qp[:, j * ps:(j + 1) * ps], v_page,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+        return acc[0]
+
+    return jnp.stack(
+        [jnp.stack([one(b, h) for h in range(H)]) for b in range(B)]
+    )
+
+
+def attention_unfused_ref(
+    q,
+    k,
+    v,
+    *,
+    score_scale: float,
+    eps_ctx: float,
+    causal: bool = True,
+    q_offset=0,
+):
     """The model's unfused ID attention (global softmax then one global
     int8 probability image) — used to bound kernel divergence.
 
@@ -102,8 +170,7 @@ def attention_unfused_ref(q, k, v, *, score_scale: float, eps_ctx: float,
         logits = jnp.where(k_pos <= q_pos, logits, NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     qp = jnp.round(p * 127.0).astype(jnp.int8)
-    acc = jnp.einsum("bqk,bkd->bqd", qp.astype(jnp.int32),
-                     v.astype(jnp.int32))
+    acc = jnp.einsum("bqk,bkd->bqd", qp.astype(jnp.int32), v.astype(jnp.int32))
     ctx = acc.astype(jnp.float32) / 127.0
     return jnp.clip(jnp.round(ctx * np.float32(1.0 / eps_ctx)),
                     -128, 127).astype(jnp.int8)

@@ -26,9 +26,20 @@ def _kernel(q_ref, m_ref, s0_ref, lo_ref, hi_ref, o_ref, *, d: int,
     o_ref[...] = jnp.clip(out, qmin, qmax).astype(jnp.int8)
 
 
-def requant_pallas(q, m, s0, lo, hi, *, d: int, zp: int = 0,
-                   qmin: int = -128, qmax: int = 127, bm: int = 256,
-                   interpret: bool = True):
+def requant_pallas(
+    q,
+    m,
+    s0,
+    lo,
+    hi,
+    *,
+    d: int,
+    zp: int = 0,
+    qmin: int = -128,
+    qmax: int = 127,
+    bm: int = 256,
+    interpret: bool = True,
+):
     """q (M, N) int32; m/s0/lo/hi (N,) int32 -> (M, N) int8."""
     M, N = q.shape
     assert M % bm == 0, (M, bm)

@@ -78,9 +78,11 @@ def _loop_multipliers(comps: dict) -> dict:
     """
     # call edges: comp -> comps it references
     refs = {
-        name: set(re.findall(
-            r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)",
-                             text))
+        name: set(
+            re.findall(
+                r"(?:calls|body|condition|to_apply)=%?([\w\.\-]+)", text
+            )
+        )
         for name, text in comps.items()
     }
     # while ops: (body_comp, cond_comp)
@@ -92,8 +94,9 @@ def _loop_multipliers(comps: dict) -> dict:
         return max(consts) if consts else 1
 
     # propagate: BFS from entry computations, multiplying at while edges
-    entry = [n for n in comps if n.startswith("main") or "ENTRY" in
-             comps[n][:40]] or list(comps)[:1]
+    entry = [
+        n for n in comps if n.startswith("main") or "ENTRY" in comps[n][:40]
+    ] or list(comps)[:1]
     seen = {}
 
     def visit(name, m):
@@ -128,8 +131,13 @@ def parse_collectives(hlo_text: str) -> dict:
     device are derived with ring-collective cost models in roofline()."""
     comps = _split_computations(hlo_text)
     mults = _loop_multipliers(comps)
-    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
-           "all-to-all": 0, "collective-permute": 0}
+    out = {
+        "all-reduce": 0,
+        "all-gather": 0,
+        "reduce-scatter": 0,
+        "all-to-all": 0,
+        "collective-permute": 0,
+    }
     counts = dict.fromkeys(out, 0)
     for name, text in comps.items():
         m_exec = mults.get(name, 1)
@@ -147,8 +155,16 @@ def parse_collectives(hlo_text: str) -> dict:
     return {"bytes": out, "counts": counts}
 
 
-def roofline(arch: str, shape: str, *, flops: float, hbm_bytes: float,
-             coll: dict, n_chips: int, integer_path: bool) -> dict:
+def roofline(
+    arch: str,
+    shape: str,
+    *,
+    flops: float,
+    hbm_bytes: float,
+    coll: dict,
+    n_chips: int,
+    integer_path: bool,
+) -> dict:
     """Three roofline terms in seconds-per-step.
 
     compiled.cost_analysis() / the optimized HLO describe the PER-DEVICE
@@ -185,14 +201,24 @@ def roofline(arch: str, shape: str, *, flops: float, hbm_bytes: float,
     }
 
 
-def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
-             variant: dict | None = None) -> dict:
+def run_cell(
+    arch: str,
+    shape: str,
+    mesh_kind: str,
+    out_dir: Path,
+    variant: dict | None = None,
+) -> dict:
     from repro.launch import variants as var_mod
 
     cfg = get_config(arch)
     reason = cell_supported(cfg, shape)
-    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
-           "variant": variant or {}, "time": time.strftime("%F %T")}
+    rec = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_kind,
+        "variant": variant or {},
+        "time": time.strftime("%F %T"),
+    }
     if reason:
         rec["status"] = "skipped"
         rec["reason"] = reason
@@ -212,8 +238,15 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
     flops = float(cost.get("flops", 0.0))
     hbm_bytes = float(cost.get("bytes accessed", 0.0))
     integer_path = SHAPES[shape]["kind"] != "train"
-    rl = roofline(arch, shape, flops=flops, hbm_bytes=hbm_bytes, coll=coll,
-                  n_chips=n_chips, integer_path=integer_path)
+    rl = roofline(
+        arch,
+        shape,
+        flops=flops,
+        hbm_bytes=hbm_bytes,
+        coll=coll,
+        n_chips=n_chips,
+        integer_path=integer_path,
+    )
     rec.update({
         "status": "ok",
         "version": RECORD_VERSION,
@@ -266,9 +299,10 @@ def main():
         path = out_dir / f"{tag}.json"
         if path.exists():
             old = json.loads(path.read_text())
-            fresh = (old.get("status") == "skipped"
-                     or (old.get("status") == "ok"
-                         and old.get("version", 0) >= RECORD_VERSION))
+            fresh = old.get("status") == "skipped" or (
+                old.get("status") == "ok"
+                and old.get("version", 0) >= RECORD_VERSION
+            )
             if fresh:
                 print(f"[skip existing] {tag}")
                 continue
@@ -276,15 +310,26 @@ def main():
         try:
             rec = run_cell(arch, shape, args.mesh, out_dir, variant=variant)
         except Exception as e:  # record failures — they are bugs to fix
-            rec = {"arch": arch, "shape": shape, "mesh": args.mesh,
-                   "status": "error", "error": f"{type(e).__name__}: {e}",
-                   "traceback": traceback.format_exc()[-2000:]}
+            rec = {
+                "arch": arch,
+                "shape": shape,
+                "mesh": args.mesh,
+                "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+            }
         path.write_text(json.dumps(rec, indent=1))
-        print(f"  -> {rec['status']}"
-              + (f" dominant={rec['roofline']['dominant']}"
-                 if rec.get("roofline") else "")
-              + (f" err={rec.get('error','')[:200]}"
-                 if rec["status"] == "error" else ""), flush=True)
+        dom = (
+            f" dominant={rec['roofline']['dominant']}"
+            if rec.get("roofline")
+            else ""
+        )
+        err = (
+            f" err={rec.get('error', '')[:200]}"
+            if rec["status"] == "error"
+            else ""
+        )
+        print(f"  -> {rec['status']}" + dom + err, flush=True)
 
 
 if __name__ == "__main__":

@@ -71,8 +71,9 @@ class TrainSupervisor:
         start = 0
         last = ckpt.latest_step(self.ckpt_dir)
         if last is not None:
-            state = ckpt.restore(self.ckpt_dir, last, state,
-                                 shardings=shardings)
+            state = ckpt.restore(
+                self.ckpt_dir, last, state, shardings=shardings
+            )
             start = last
         losses = []
         preempted = {"flag": False}

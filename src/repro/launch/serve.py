@@ -28,8 +28,9 @@ from repro.models.lm import DecoderLM
 from repro.serving import SchedulerConfig, ServingEngine
 
 
-def deploy_model(arch: str, *, reduced: bool, max_seq: int,
-                 calib_batch: int = 4):
+def deploy_model(
+    arch: str, *, reduced: bool, max_seq: int, calib_batch: int = 4
+):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -82,27 +83,49 @@ def main():
     ap.add_argument("--ragged", action="store_true",
                     help="vary prompt/gen lengths per request")
     ap.add_argument("--prefill-bucket", type=int, default=16)
-    ap.add_argument("--prefill-chunk", type=int, default=32,
-                    help="chunked-prefill chunk size (dense family); "
-                         "0 = whole-prompt bucketed prefill")
-    ap.add_argument("--max-chunks-per-step", type=int, default=0,
-                    help="fairness knob: chunk rows per packed prefill "
-                         "dispatch (0: every prefilling slot)")
-    ap.add_argument("--paged", action="store_true",
-                    help="paged KV arena (page budgets instead of "
-                         "worst-case slot rows)")
+    ap.add_argument(
+        "--prefill-chunk",
+        type=int,
+        default=32,
+        help="chunked-prefill chunk size (dense family); "
+        "0 = whole-prompt bucketed prefill",
+    )
+    ap.add_argument(
+        "--max-chunks-per-step",
+        type=int,
+        default=0,
+        help="fairness knob: chunk rows per packed prefill "
+        "dispatch (0: every prefilling slot)",
+    )
+    ap.add_argument(
+        "--paged",
+        action="store_true",
+        help="paged KV arena (page budgets instead of "
+        "worst-case slot rows)",
+    )
     ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--pages", type=int, default=0,
-                    help="page pool size (0: slots*max_len/page_size)")
+    ap.add_argument(
+        "--pages",
+        type=int,
+        default=0,
+        help="page pool size (0: slots*max_len/page_size)",
+    )
+    ap.add_argument(
+        "--paged-gather",
+        action="store_true",
+        help="paged decode through the write-then-gather "
+        "jnp oracle instead of the fused "
+        "paged-attention kernel (parity debugging)",
+    )
     args = ap.parse_args()
 
     max_len = args.max_len or (args.prompt_len + args.gen)
-    lm, tables = deploy_model(args.arch, reduced=args.reduced,
-                              max_seq=max_len)
+    lm, tables = deploy_model(args.arch, reduced=args.reduced, max_seq=max_len)
     engine = ServingEngine(
         lm, tables, n_slots=args.slots, max_len=max_len,
         paged=args.paged, page_size=args.page_size,
         n_pages=args.pages or None,
+        paged_kernel=not args.paged_gather,
         scheduler=SchedulerConfig(
             prefill_bucket=args.prefill_bucket,
             prefill_chunk=args.prefill_chunk,
@@ -113,29 +136,37 @@ def main():
         if args.ragged:
             # p <= max_len - 1 keeps >= 1 position for generation
             hi = min(args.prompt_len, max_len - 1)
-            p = int(rng.integers(max(1, min(args.prompt_len // 4, hi)),
-                                 hi + 1))
+            p = int(
+                rng.integers(max(1, min(args.prompt_len // 4, hi)), hi + 1)
+            )
             g = int(rng.integers(1, min(args.gen, max_len - p) + 1))
         else:
             p, g = args.prompt_len, args.gen
-        engine.submit(rng.integers(0, lm.cfg.vocab, size=(p,)),
-                      max_new_tokens=g)
+        engine.submit(
+            rng.integers(0, lm.cfg.vocab, size=(p,)), max_new_tokens=g
+        )
         engine.step()  # arrivals interleave with decoding
     completions = engine.run_until_drained()
     s = engine.stats()
-    print(f"drained {s['n_completed']} requests / "
-          f"{s['n_generated']} tokens in {s['wall_s']:.2f}s "
-          f"({s['throughput_tok_s']:.1f} tok/s integer-only, "
-          f"mean TTFT {s['mean_ttft_s'] * 1e3:.0f} ms, "
-          f"occupancy {s['mean_occupancy']:.2f})")
+    print(
+        f"drained {s['n_completed']} requests / "
+        f"{s['n_generated']} tokens in {s['wall_s']:.2f}s "
+        f"({s['throughput_tok_s']:.1f} tok/s integer-only, "
+        f"mean TTFT {s['mean_ttft_s'] * 1e3:.0f} ms, "
+        f"occupancy {s['mean_occupancy']:.2f})"
+    )
     if args.paged:
-        print(f"  paged arena: peak {s['max_pages_in_use']}/{s['n_pages']} "
-              f"pages of {s['page_size']} positions, "
-              f"peak concurrency {s['max_active']}")
+        print(
+            f"  paged arena: peak {s['max_pages_in_use']}/{s['n_pages']} "
+            f"pages of {s['page_size']} positions, "
+            f"peak concurrency {s['max_active']}"
+        )
     for c in completions[: min(4, len(completions))]:
-        print(f"  req {c.req_id}: P={c.prompt_len} "
-              f"-> {c.n_generated} toks [{c.finish_reason}] "
-              f"{np.asarray(c.tokens)[:8]}")
+        print(
+            f"  req {c.req_id}: P={c.prompt_len} "
+            f"-> {c.n_generated} toks [{c.finish_reason}] "
+            f"{np.asarray(c.tokens)[:8]}"
+        )
 
 
 if __name__ == "__main__":

@@ -192,16 +192,21 @@ def deploy_specs(lm: DecoderLM) -> dict:
     segs = []
     for kind, tpl, n in lm.plan():
         if kind == "dense":
-            one = _dense_block(c, lm.max_seq, moe=(c.n_experts > 0
-                                                   and c.moe_every == 1))
+            one = _dense_block(
+                c, lm.max_seq, moe=(c.n_experts > 0 and c.moe_every == 1)
+            )
         elif kind == "pair":
-            one = {"a": _dense_block(c, lm.max_seq, False),
-                   "b": _dense_block(c, lm.max_seq, True)}
+            one = {
+                "a": _dense_block(c, lm.max_seq, False),
+                "b": _dense_block(c, lm.max_seq, True),
+            }
         elif kind == "mamba":
             one = _mamba_block(c)
         elif kind == "hybrid":
-            one = {"m": _stack(_mamba_block(c), c.shared_attn_every),
-                   "sh": _shared_block(c, lm.max_seq)}
+            one = {
+                "m": _stack(_mamba_block(c), c.shared_attn_every),
+                "sh": _shared_block(c, lm.max_seq),
+            }
         segs.append(_stack(one, n))
     t["segments"] = segs
     t["norm_f"] = _norm(c.d_model, c.norm, c.norm_bias)

@@ -59,8 +59,9 @@ def build_train_step(lm: DecoderLM, *, microbatches: int = 1):
 
     def loss_of(tr, mb):
         if c.input_mode == "embeds":
-            return lm.loss_fn_embeds(tr["params"], tr["qstate"],
-                                     mb["embeds"], mb["targets"], Rep.FQ)
+            return lm.loss_fn_embeds(
+                tr["params"], tr["qstate"], mb["embeds"], mb["targets"], Rep.FQ
+            )
         return lm.loss_fn(tr["params"], tr["qstate"], mb["tokens"], Rep.FQ)
 
     def train_step(trainable, opt_state, batch):
@@ -83,8 +84,9 @@ def build_train_step(lm: DecoderLM, *, microbatches: int = 1):
                 g_sum = jax.tree.map(jnp.add, g_sum, gi)
                 return (loss_sum + li, g_sum), None
 
-            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                              trainable)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), trainable
+            )
             (loss_sum, g_sum), _ = jax.lax.scan(
                 acc_body, (jnp.float32(0.0), g0), mbs)
             inv = 1.0 / microbatches
@@ -219,8 +221,9 @@ MICROBATCH = {
 }
 
 
-def lower_cell(arch: str, shape: str, mesh, *, check=True,
-               microbatches: int = 0):
+def lower_cell(
+    arch: str, shape: str, mesh, *, check=True, microbatches: int = 0
+):
     """Lower one (arch x shape) cell on `mesh`. -> jax.stages.Lowered."""
     cfg = get_config(arch)
     reason = cell_supported(cfg, shape)
@@ -229,8 +232,11 @@ def lower_cell(arch: str, shape: str, mesh, *, check=True,
     from repro.launch import variants as var_mod
 
     s = SHAPES[shape]
-    mb = (microbatches or var_mod.get("microbatches")
-          or MICROBATCH.get((arch, shape), 1))
+    mb = (
+        microbatches
+        or var_mod.get("microbatches")
+        or MICROBATCH.get((arch, shape), 1)
+    )
     lm = DecoderLM(cfg, max_seq=s["seq"] + (1 if s["kind"] == "train" else 0))
     with mesh, use_profile(mesh):
         if s["kind"] == "train":

@@ -24,8 +24,15 @@ from repro.optim.grad_compress import (
 from repro.optim.schedule import cosine_schedule
 
 
-def build(arch: str, *, reduced: bool, seq: int, batch: int,
-          grad_compress: bool = False, microbatches: int = 1):
+def build(
+    arch: str,
+    *,
+    reduced: bool,
+    seq: int,
+    batch: int,
+    grad_compress: bool = False,
+    microbatches: int = 1,
+):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -79,8 +86,12 @@ def main():
         ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every)
     out = sup.run(trainable, opt, n_steps=args.steps)
     ls = out["losses"]
-    print(f"status={out['status']} step={out['step']} "
-          f"loss {ls[0]:.4f} -> {ls[-1]:.4f}" if ls else out)
+    print(
+        f"status={out['status']} step={out['step']} "
+        f"loss {ls[0]:.4f} -> {ls[-1]:.4f}"
+        if ls
+        else out
+    )
 
 
 if __name__ == "__main__":

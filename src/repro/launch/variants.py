@@ -38,6 +38,11 @@ DEFAULTS = {
     # "int" (integer-only softmax, core/intsoftmax.py — no float ops
     # left in attention at all)
     "attn_softmax": "float",
+    # paged single-token ID decode: "kernel" (fused Pallas
+    # paged-attention, kernels/paged_attention.py — reads K/V straight
+    # through the page table) | "gather" (write-then-gather jnp path,
+    # kept as the parity oracle; materializes the dense logical view)
+    "paged_decode": "kernel",
 }
 
 

@@ -106,8 +106,11 @@ class QAct:
             hi = max(hi, lo + 1e-6)
             eps_y = (hi - lo) / (2 ** self.n_bits - 1)
             # stored zero-point puts `lo` at ACT_QMIN (0 when symmetric)
-            zp = (0 if (self.sym and not self.kind.zero_lo)
-                  else ACT_QMIN - int(round(lo / eps_y)))
+            zp = (
+                0
+                if (self.sym and not self.kind.zero_lo)
+                else ACT_QMIN - int(round(lo / eps_y))
+            )
             if self.kind in (ActKind.IDENTITY, ActKind.RELU):
                 rqt = make_rqt(
                     eps_in, eps_y, zp_out=zp, qmin=ACT_QMIN, qmax=ACT_QMAX,
@@ -152,8 +155,8 @@ class QAct:
         if self.kind.zero_lo:
             lo, hi = 0.0, ctx.range(full, "act")[1]
         else:
-            lo, hi = ctx.range(full, "act_asym" if self.kind in
-                               (ActKind.SILU, ActKind.GELU) else "resid")
+            asym = self.kind in (ActKind.SILU, ActKind.GELU)
+            lo, hi = ctx.range(full, "act_asym" if asym else "resid")
         eps = (max(hi, lo + 1e-6) - lo) / (2 ** self.n_bits - 1)
         return {"eps_y": np.float32(eps), "alpha_y": np.float32(lo)}
 
@@ -170,8 +173,9 @@ class QAct:
         s = apply_rqt(acc, tables["rqt"], channel_axis=channel_axis)
         return apply_lut(s, tables["lut"], qmin=ACT_QMIN)
 
-    def apply(self, state, x, rep, *, channel_axis: int = -1,
-              calib=None, scope=""):
+    def apply(
+        self, state, x, rep, *, channel_axis: int = -1, calib=None, scope=""
+    ):
         if rep is Rep.ID:
             return self.apply_id(state, x, channel_axis=channel_axis)
         if rep is Rep.FQ:

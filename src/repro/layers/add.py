@@ -53,19 +53,26 @@ class QAdd:
                         qmin=-(1 << 24), qmax=(1 << 24),
                         requant_factor=ctx.factor, acc_bound=float(1 << 16))
         return (
-            {"rq_a": rq_a, "rq_b": rq_b,
-             "zp_a": np.int32(zp_a), "zp_b": np.int32(zp_b)},
-            eps_s, 0,
+            {
+                "rq_a": rq_a,
+                "rq_b": rq_b,
+                "zp_a": np.int32(zp_a),
+                "zp_b": np.int32(zp_b),
+            },
+            eps_s,
+            0,
         )
 
     def apply_id(self, t, s_a, s_b):
         """Branches int8 (any zp) -> symmetric int8 sum (Eq. 24)."""
         qa = s_a.astype(jnp.int32) - t["zp_a"]
         qb = s_b.astype(jnp.int32) - t["zp_b"]
-        ya = apply_rqt(qa, t["rq_a"], qmin=-(1 << 24), qmax=(1 << 24),
-                       out_dtype=jnp.int32)
-        yb = apply_rqt(qb, t["rq_b"], qmin=-(1 << 24), qmax=(1 << 24),
-                       out_dtype=jnp.int32)
+        ya = apply_rqt(
+            qa, t["rq_a"], qmin=-(1 << 24), qmax=(1 << 24), out_dtype=jnp.int32
+        )
+        yb = apply_rqt(
+            qb, t["rq_b"], qmin=-(1 << 24), qmax=(1 << 24), out_dtype=jnp.int32
+        )
         return jnp.clip(ya + yb, ACT_QMIN, ACT_QMAX).astype(jnp.int8)
 
     def apply(self, t, a, b, rep, *, calib=None, scope=""):

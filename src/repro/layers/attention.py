@@ -43,10 +43,15 @@ chunk completed.
 Paged KV (serving.cache.PagedArena): a decode cache dict may carry a
 per-slot page "table" (B, pages_per_slot) next to its pooled "k"/"v"
 leaves (n_pages + 1, K, page_size, hd).  The new column is scattered
-into the page holding each row's `pos`, then the logical (B, K, T, hd)
-view is gathered back through the table; positions past `pos` (stale
-pages, the PAGE_NULL trash page) are hidden by the existing per-slot
-causal masking, so paged decode is bit-exact with the contiguous path.
+into the page holding each row's `pos`; single-token ID decode then
+runs the fused paged-attention kernel straight over the pools
+(kernels/paged_attention.py — bit-exact with the unfused math, see
+its module doc) unless `variants paged_decode="gather"` selects the
+oracle path, which gathers the logical (B, K, T, hd) view back
+through the table.  Multi-token chunked prefill always gathers.
+Positions past `pos` (stale pages, the PAGE_NULL trash page) are
+hidden by the same per-slot causal masking either way, so paged
+decode is bit-exact with the contiguous path.
 """
 from __future__ import annotations
 
@@ -142,8 +147,9 @@ class QAttention:
         q, k, v = self._shape_qkv(q, k, v, B, S)
         if S > 1:  # decode: q stays unhinted so GSPMD follows the
             q = hint(q, "act_bhsd")  # sequence-sharded cache layout
-        rot, cos, sin = rope_tables_fp(hd, self.max_seq, self.rope_base,
-                                       self.rope_fraction)
+        rot, cos, sin = rope_tables_fp(
+            hd, self.max_seq, self.rope_base, self.rope_fraction
+        )
         positions = _positions(S, pos)
         q = apply_rope_fp(q, cos, sin, positions, rot)
         k = apply_rope_fp(k, cos, sin, positions, rot)
@@ -152,10 +158,12 @@ class QAttention:
             if "table" in cache:
                 k_all, v_all, cache = _paged_cache_update(cache, k, v, pos)
             else:
-                k_all = _cache_write(cache["k"],
-                                     k.astype(cache["k"].dtype), pos)
-                v_all = _cache_write(cache["v"],
-                                     v.astype(cache["v"].dtype), pos)
+                k_all = _cache_write(
+                    cache["k"], k.astype(cache["k"].dtype), pos
+                )
+                v_all = _cache_write(
+                    cache["v"], v.astype(cache["v"].dtype), pos
+                )
                 cache = {"k": k_all, "v": v_all}
             k, v = k_all.astype(x.dtype), v_all.astype(x.dtype)
         T = k.shape[2]
@@ -170,8 +178,9 @@ class QAttention:
                             preferred_element_type=jnp.float32)
         scores = scores / np.sqrt(hd)
         scores = scores + _mask(S, T, pos)
-        probs = hint(jax.nn.softmax(scores, axis=-1),
-                     "probs_dec" if S == 1 else "probs")
+        probs = hint(
+            jax.nn.softmax(scores, axis=-1), "probs_dec" if S == 1 else "probs"
+        )
         if calib is not None:
             calib.observe(f"{scope}{self.name}.probs", probs)
         ctx_ = jnp.einsum("bhst,bhtd->bhsd", probs.astype(x.dtype), vh)
@@ -185,17 +194,22 @@ class QAttention:
     def _qkv_acts(self):
         rt2 = float(np.sqrt(2.0))  # RoPE rotation headroom
         return {
-            "q": QAct(ActKind.IDENTITY, sym=True, range_scale=rt2,
-                      name=f"{self.name}.q"),
-            "k": QAct(ActKind.IDENTITY, sym=True, range_scale=rt2,
-                      name=f"{self.name}.k"),
+            "q": QAct(
+                ActKind.IDENTITY, sym=True, range_scale=rt2,
+                name=f"{self.name}.q",
+            ),
+            "k": QAct(
+                ActKind.IDENTITY, sym=True, range_scale=rt2,
+                name=f"{self.name}.k",
+            ),
             "v": QAct(ActKind.IDENTITY, sym=True, name=f"{self.name}.v"),
             "ctx": QAct(ActKind.IDENTITY, sym=True, name=f"{self.name}.ctx"),
         }
 
     # -- transform ---------------------------------------------------------
-    def deploy(self, ctx: DeployCtx, scope: str, p_np: dict, eps_x: float,
-               zp_x: int) -> Tuple[dict, np.ndarray]:
+    def deploy(
+        self, ctx: DeployCtx, scope: str, p_np: dict, eps_x: float, zp_x: int
+    ) -> Tuple[dict, np.ndarray]:
         """-> (tables, eps_acc_out per-channel of wo accumulator)."""
         subs = self._sub()
         acts = self._qkv_acts()
@@ -255,6 +269,18 @@ class QAttention:
 
         if cache is not None:
             if "table" in cache:
+                from repro.launch import variants
+
+                if (S == 1
+                        and variants.get("paged_decode") == "kernel"
+                        and variants.get("attn_softmax") != "int"):
+                    # fused paged decode: no dense logical KV view —
+                    # the kernel streams K/V page by page through the
+                    # table (the gather path below stays available as
+                    # the parity oracle via paged_decode="gather")
+                    return self._paged_kernel_decode(
+                        t, q, k, v, cache, pos, subs
+                    )
                 k_all, v_all, cache = _paged_cache_update(cache, k, v, pos)
             else:
                 k_all = _cache_write(cache["k"], k, pos)
@@ -273,26 +299,34 @@ class QAttention:
             from repro.launch import variants
 
             scores = hint(
-                jnp.einsum("bhsd,bhtd->bhst", q, kh,
-                           preferred_element_type=jnp.int32),
-                "probs_dec" if S == 1 else "probs")
+                jnp.einsum(
+                    "bhsd,bhtd->bhst", q, kh,
+                    preferred_element_type=jnp.int32,
+                ),
+                "probs_dec" if S == 1 else "probs",
+            )
             if variants.get("attn_softmax") == "int" and "sm_tabs" in t:
                 # integer-only softmax: NO float island at all
                 from repro.core.intsoftmax import int_softmax
 
                 bmask = _bool_mask(S, T, pos)
-                s_p = hint(int_softmax(scores, t["sm_tabs"], mask=bmask),
-                           "probs_dec" if S == 1 else "probs")
+                s_p = hint(
+                    int_softmax(scores, t["sm_tabs"], mask=bmask),
+                    "probs_dec" if S == 1 else "probs",
+                )
             else:
                 # ---- float island (paper §3.8: exponentials) ----
                 logits = scores.astype(jnp.float32) * t["score_scale"]
                 logits = logits + _mask(S, T, pos)
-                probs = hint(jax.nn.softmax(logits, axis=-1),
-                             "probs_dec" if S == 1 else "probs")
+                probs = hint(
+                    jax.nn.softmax(logits, axis=-1),
+                    "probs_dec" if S == 1 else "probs",
+                )
                 s_p = jnp.round(probs * 127.0).astype(jnp.int8)
             # ---- island exit ----
-            acc = jnp.einsum("bhst,bhtd->bhsd", s_p, vh,
-                             preferred_element_type=jnp.int32)
+            acc = jnp.einsum(
+                "bhst,bhtd->bhsd", s_p, vh, preferred_element_type=jnp.int32
+            )
             s_ctx = apply_rqt(acc, t["ctx_rqt"])
         s_ctx = s_ctx.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
         return subs["wo"].apply_id(t["wo"], s_ctx), cache
@@ -315,8 +349,12 @@ class QAttention:
         def body(carry, xs):
             m_run, l_run, acc = carry
             j, kb, vb = xs
-            s = jnp.einsum("bhsd,bhtd->bhst", q32, kb.astype(jnp.int32),
-                           preferred_element_type=jnp.int32)
+            s = jnp.einsum(
+                "bhsd,bhtd->bhst",
+                q32,
+                kb.astype(jnp.int32),
+                preferred_element_type=jnp.int32,
+            )
             logits = s.astype(jnp.float32) * t["score_scale"]
             k_pos = j * blk + jnp.arange(blk)
             if q_pos.ndim == 2:  # per-slot positions -> (B,1,S,blk)
@@ -347,6 +385,27 @@ class QAttention:
         # ctx_rqt tables map eps_p*eps_v accumulators; multiply back 127.
         acc_int = jnp.round(ctx * 127.0).astype(jnp.int32)
         return apply_rqt(acc_int, t["ctx_rqt"])
+
+    def _paged_kernel_decode(self, t, q, k, v, cache, pos, subs):
+        """Fused single-token paged ID decode: scatter the new column
+        through the page table, then run attention straight over the
+        page pools (kernels/paged_attention.py) — the dense logical
+        (B, K, T, hd) view is never materialized.  The kernel returns
+        the int32 P.V accumulator and the ctx requantization stays out
+        here, so the math is bit-exact with the gather path.  q/k/v:
+        (B, ., 1, hd) int8 post-RoPE.  Returns (int32 wo-acc, cache)."""
+        from repro.kernels.paged_attention import (
+            paged_attention_decode_pallas,
+        )
+
+        pos_v, cache = _paged_write(cache, k, v, pos)
+        acc = paged_attention_decode_pallas(
+            q[:, :, 0, :], cache["k"], cache["v"], cache["table"], pos_v,
+            score_scale=t["score_scale"], group=self.group)
+        s_ctx = apply_rqt(acc[:, :, None, :], t["ctx_rqt"])
+        B = q.shape[0]
+        s_ctx = s_ctx.reshape(B, 1, self.n_heads * self.head_dim)
+        return subs["wo"].apply_id(t["wo"], s_ctx), cache
 
     # ------------------------------------------------------------------
     def init_cache(self, B: int, max_len: int, rep: Rep, dtype=None):
@@ -420,12 +479,11 @@ def _paged_column_write(pool, new, pos, table):
         new_f.astype(pool.dtype))
 
 
-def _paged_cache_update(cache, k, v, pos):
-    """Paged cache step: write the new column(s) through the page
-    table, then gather the logical dense view (write-then-gather keeps
-    the contiguous-path semantics: the view includes the new tokens).
-    Single-token decode and multi-token chunked prefill share this
-    path.  Returns (k_view, v_view, new_cache)."""
+def _paged_write(cache, k, v, pos):
+    """Scatter the new K/V column(s) through the page table — the
+    write half shared by BOTH paged decode paths (fused kernel and
+    write-then-gather oracle), so their parity cannot drift at the
+    write.  Returns (pos_v, new_cache)."""
     pos_v = jnp.asarray(pos)
     if pos_v.ndim != 1:
         raise NotImplementedError(
@@ -433,9 +491,22 @@ def _paged_cache_update(cache, k, v, pos):
     table = cache["table"]
     k_pool = _paged_column_write(cache["k"], k, pos_v, table)
     v_pool = _paged_column_write(cache["v"], v, pos_v, table)
-    new_cache = {"k": k_pool, "v": v_pool, "table": table}
-    return (_paged_kv_view(k_pool, table), _paged_kv_view(v_pool, table),
-            new_cache)
+    return pos_v, {"k": k_pool, "v": v_pool, "table": table}
+
+
+def _paged_cache_update(cache, k, v, pos):
+    """Paged cache step: write the new column(s) through the page
+    table, then gather the logical dense view (write-then-gather keeps
+    the contiguous-path semantics: the view includes the new tokens).
+    Single-token oracle decode and multi-token chunked prefill share
+    this path.  Returns (k_view, v_view, new_cache)."""
+    _, new_cache = _paged_write(cache, k, v, pos)
+    table = new_cache["table"]
+    return (
+        _paged_kv_view(new_cache["k"], table),
+        _paged_kv_view(new_cache["v"], table),
+        new_cache,
+    )
 
 
 def _cache_write(cache, new, pos):

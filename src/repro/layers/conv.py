@@ -68,13 +68,17 @@ class QConv2d:
             y = y + p["b"]
         return y
 
-    def deploy(self, p_np: dict, eps_x: float,
-               zp_x: int) -> Tuple[dict, np.ndarray]:
+    def deploy(self, p_np: dict, eps_x: float, zp_x: int) -> Tuple[
+        dict, np.ndarray
+    ]:
         w = np.asarray(p_np["w"], np.float64)
         beta = np.maximum(np.abs(w).reshape(-1, self.c_out).max(axis=0), 1e-8)
         eps_w = 2.0 * beta / (2 ** self.n_bits_w - 1)
-        q_w = np.clip(np.floor(w / eps_w), -(2 ** (self.n_bits_w - 1)),
-                      2 ** (self.n_bits_w - 1) - 1).astype(np.int8)
+        q_w = np.clip(
+            np.floor(w / eps_w),
+            -(2 ** (self.n_bits_w - 1)),
+            2 ** (self.n_bits_w - 1) - 1,
+        ).astype(np.int8)
         eps_acc = eps_w * float(eps_x)
         colsum = q_w.astype(np.int64).reshape(-1, self.c_out).sum(axis=0)
         b_eff = -int(zp_x) * colsum
@@ -87,8 +91,9 @@ class QConv2d:
                 "zp_in": np.int32(zp_x)}, eps_acc
 
     def acc_bound(self) -> float:
-        return min(self.kernel * self.kernel * self.c_in * 127.0 * 127.0,
-                   2.0 ** 30)
+        return min(
+            self.kernel * self.kernel * self.c_in * 127.0 * 127.0, 2.0 ** 30
+        )
 
     def apply_id(self, ip, s_x):
         zp = int(np.asarray(ip["zp_in"]))  # static at transform time
@@ -133,15 +138,27 @@ class QBatchNorm2d:
         return bn_apply_float(x, p["gamma"], p["beta"], p["mu"], p["sigma"])
 
     def make_integer(self, p_np, eps_phi, acc_bound) -> IntegerBNParams:
-        return make_integer_bn(p_np["gamma"], p_np["beta"], p_np["mu"],
-                               p_np["sigma"], eps_phi, acc_bound=acc_bound)
+        return make_integer_bn(
+            p_np["gamma"],
+            p_np["beta"],
+            p_np["mu"],
+            p_np["sigma"],
+            eps_phi,
+            acc_bound=acc_bound,
+        )
 
     def make_thresholds(self, p_np, eps_phi, eps_y, n_levels,
                         rounded: bool = False):
-        return make_bn_act_thresholds(p_np["gamma"], p_np["beta"],
-                                      p_np["mu"], p_np["sigma"],
-                                      eps_phi, eps_y, n_levels,
-                                      rounded=rounded)
+        return make_bn_act_thresholds(
+            p_np["gamma"],
+            p_np["beta"],
+            p_np["mu"],
+            p_np["sigma"],
+            eps_phi,
+            eps_y,
+            n_levels,
+            rounded=rounded,
+        )
 
 
 @dataclasses.dataclass(frozen=True)

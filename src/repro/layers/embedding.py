@@ -30,8 +30,8 @@ class QEmbed:
     name: str = "embed"
 
     def init(self, key) -> dict:
-        return {"table": jax.random.normal(key, (self.vocab, self.d),
-                                           jnp.float32) * 0.02}
+        table = jax.random.normal(key, (self.vocab, self.d), jnp.float32)
+        return {"table": table * 0.02}
 
     def apply_fp(self, p, tok, calib=None, scope: str = ""):
         y = jnp.take(p["table"], tok, axis=0)

@@ -68,8 +68,9 @@ class QLinear:
         return y
 
     # -- transform -------------------------------------------------------
-    def deploy(self, p_np: dict, eps_x: float,
-               zp_x: int) -> Tuple[dict, np.ndarray]:
+    def deploy(self, p_np: dict, eps_x: float, zp_x: int) -> Tuple[
+        dict, np.ndarray
+    ]:
         """-> (int params, eps_acc per out-channel).
 
         eps_acc[c] = eps_w[c] * eps_x ; accumulator zero-point is 0.
@@ -82,9 +83,11 @@ class QLinear:
                 np.maximum(np.max(np.abs(w)), 1e-8), (self.d_out,)).copy()
         eps_w = 2.0 * beta / (2 ** self.n_bits_w - 1)
         # floor, matching pact_weight exactly (FQ->ID bit-consistency)
-        q_w = np.clip(np.floor(w / eps_w[None, :]),
-                      -(2 ** (self.n_bits_w - 1)),
-                      2 ** (self.n_bits_w - 1) - 1).astype(np.int8)
+        q_w = np.clip(
+            np.floor(w / eps_w[None, :]),
+            -(2 ** (self.n_bits_w - 1)),
+            2 ** (self.n_bits_w - 1) - 1,
+        ).astype(np.int8)
         eps_acc = eps_w * float(eps_x)
         # static bias: real bias rescaled + zero-point correction
         colsum = q_w.astype(np.int64).sum(axis=0)

@@ -77,8 +77,10 @@ class QMLP:
             h = maybe_fq(act_fn(self.act, u))
         if calib is not None:
             if self.gated:
-                calib.observe(f"{scope}{self.name}.gate.pre",
-                              subs["wg"].apply_fp(p["wg"], x))
+                calib.observe(
+                    f"{scope}{self.name}.gate.pre",
+                    subs["wg"].apply_fp(p["wg"], x),
+                )
                 calib.observe(
                     f"{scope}{self.name}.gate",
                     act_fn(self.act, subs["wg"].apply_fp(p["wg"], x)))
@@ -90,19 +92,22 @@ class QMLP:
         return subs["wd"].apply(p["wd"], h, rep)
 
     # -- transform -----------------------------------------------------------
-    def deploy(self, ctx: DeployCtx, scope: str, p_np: dict, eps_x: float,
-               zp_x: int) -> Tuple[dict, np.ndarray]:
+    def deploy(
+        self, ctx: DeployCtx, scope: str, p_np: dict, eps_x: float, zp_x: int
+    ) -> Tuple[dict, np.ndarray]:
         subs = self._sub()
         t: dict = {}
         if self.gated:
             act_g = QAct(self.act, name=f"{self.name}.gate")
             ip_g, eps_acc_g = subs["wg"].deploy(p_np["wg"], eps_x, zp_x)
-            tg, eps_g, zp_g = act_g.deploy(ctx, scope, eps_acc_g, 0,
-                                           subs["wg"].acc_bound())
+            tg, eps_g, zp_g = act_g.deploy(
+                ctx, scope, eps_acc_g, 0, subs["wg"].acc_bound()
+            )
             act_u = QAct(ActKind.IDENTITY, sym=True, name=f"{self.name}.up")
             ip_u, eps_acc_u = subs["wu"].deploy(p_np["wu"], eps_x, zp_x)
-            tu, eps_u, zp_u = act_u.deploy(ctx, scope, eps_acc_u, 0,
-                                           subs["wu"].acc_bound())
+            tu, eps_u, zp_u = act_u.deploy(
+                ctx, scope, eps_acc_u, 0, subs["wu"].acc_bound()
+            )
             # product space -> symmetric int8 h
             act_h = QAct(ActKind.IDENTITY, sym=True, name=f"{self.name}.h")
             th, eps_h, _ = act_h.deploy(ctx, scope, eps_g * eps_u, 0,
@@ -116,8 +121,9 @@ class QMLP:
             return t, eps_acc_d
         act_u = QAct(self.act, name=f"{self.name}.act")
         ip_u, eps_acc_u = subs["wu"].deploy(p_np["wu"], eps_x, zp_x)
-        tu, eps_h, zp_h = act_u.deploy(ctx, scope, eps_acc_u, 0,
-                                       subs["wu"].acc_bound())
+        tu, eps_h, zp_h = act_u.deploy(
+            ctx, scope, eps_acc_u, 0, subs["wu"].acc_bound()
+        )
         ip_d, eps_acc_d = subs["wd"].deploy(p_np["wd"], eps_h, zp_h)
         t.update({"wu": ip_u, "u_tab": tu, "wd": ip_d})
         return t, eps_acc_d

@@ -171,16 +171,22 @@ class QMoE:
         x_pad = jnp.concatenate(
             [xg, jnp.zeros_like(xg[:, :1])], axis=1)
         xe = hint(self._gather_tokens(x_pad, tfs), "moe_ecd")  # (G,E,C,d)
-        g = hint(jnp.einsum("gecd,edf->gecf", xe, w3("wg").astype(x.dtype)),
-                 "moe_ecf")
-        u = hint(jnp.einsum("gecd,edf->gecf", xe, w3("wu").astype(x.dtype)),
-                 "moe_ecf")
+        g = hint(
+            jnp.einsum("gecd,edf->gecf", xe, w3("wg").astype(x.dtype)),
+            "moe_ecf",
+        )
+        u = hint(
+            jnp.einsum("gecd,edf->gecf", xe, w3("wu").astype(x.dtype)),
+            "moe_ecf",
+        )
         ga = act_fn(self.act, g)
         if rep is Rep.FQ and qs is not None:
             ga = pact_act_asymm(ga, qs["alpha"], qs["beta"], 8)
         h = ga * u
-        he = hint(jnp.einsum("gecf,efd->gecd", h, w3("wd").astype(x.dtype)),
-                  "moe_ecd")
+        he = hint(
+            jnp.einsum("gecf,efd->gecd", h, w3("wd").astype(x.dtype)),
+            "moe_ecd",
+        )
         if calib is not None:
             calib.observe(f"{scope}{self.name}.gate.pre", g)
             calib.observe(f"{scope}{self.name}.gate", act_fn(self.act, g))
@@ -200,8 +206,9 @@ class QMoE:
         return y.reshape(x.shape), aux
 
     # -- transform ------------------------------------------------------------
-    def deploy(self, ctx: DeployCtx, scope: str, p_np: dict, eps_x: float,
-               zp_x: int) -> Tuple[dict, np.ndarray]:
+    def deploy(
+        self, ctx: DeployCtx, scope: str, p_np: dict, eps_x: float, zp_x: int
+    ) -> Tuple[dict, np.ndarray]:
         t: dict = {}
         ip_r, eps_acc_r = self._router().deploy(p_np["router"], eps_x, zp_x)
         t["router"] = ip_r
@@ -210,10 +217,15 @@ class QMoE:
         E, d, f = self.n_experts, self.d_model, self.d_ff
 
         def quant_expert(w, axis_in):
-            # per-(expert, out-channel) symmetric int8
+            # per-(expert, out-channel) symmetric int8.  Deploy-time
+            # round-to-nearest, not floor: expert tables have no FQ
+            # grid to stay bit-consistent with (QLinear keeps floor for
+            # pact_weight parity), and floor's -eps/2 systematic bias
+            # compounds across the three chained expert matmuls — the
+            # same deploy-time fix as the CNN thresholds (PR 2).
             amax = np.maximum(np.abs(w).max(axis=axis_in), 1e-8)  # (E, out)
             eps_w = 2.0 * amax / 255.0
-            q = np.clip(np.floor(w / eps_w[:, None, :]),
+            q = np.clip(np.round(w / eps_w[:, None, :]),
                         -128, 127).astype(np.int8)
             return q, eps_w
 
@@ -223,36 +235,54 @@ class QMoE:
         lo, hi = ctx.range(f"{scope}{self.name}.gate.pre", "attn")
         amax_pre = max(abs(lo), abs(hi), 1e-6)
         eps_pre = 2.0 * amax_pre / 255.0
-        t["g_rqt"] = make_rqt(eps_wg * eps_x, eps_pre, zp_out=0,
-                              requant_factor=ctx.factor,
-                              acc_bound=d * 127.0 * 127.0)
+        t["g_rqt"] = make_rqt(
+            eps_wg * eps_x,
+            eps_pre,
+            zp_out=0,
+            requant_factor=ctx.factor,
+            acc_bound=d * 127.0 * 127.0,
+        )
         lo_g, hi_g = ctx.range(f"{scope}{self.name}.gate", "act_asym")
         eps_gact = (max(hi_g, lo_g + 1e-6) - lo_g) / 255.0
         zp_g = ACT_QMIN - int(round(lo_g / eps_gact))
-        t["g_lut"] = build_lut(lambda v: act_fn_np(self.act, v), eps_pre, 0,
-                               eps_gact, zp_g)
+        t["g_lut"] = build_lut(
+            lambda v: act_fn_np(self.act, v), eps_pre, 0, eps_gact, zp_g
+        )
         lo_u, hi_u = ctx.range(f"{scope}{self.name}.up", "attn")
         amax_u = max(abs(lo_u), abs(hi_u), 1e-6)
         eps_u = 2.0 * amax_u / 255.0
-        t["u_rqt"] = make_rqt(eps_wu * eps_x, eps_u, zp_out=0,
-                              requant_factor=ctx.factor,
-                              acc_bound=d * 127.0 * 127.0)
+        t["u_rqt"] = make_rqt(
+            eps_wu * eps_x,
+            eps_u,
+            zp_out=0,
+            requant_factor=ctx.factor,
+            acc_bound=d * 127.0 * 127.0,
+        )
         lo_h, hi_h = ctx.range(f"{scope}{self.name}.h", "attn")
         amax_h = max(abs(lo_h), abs(hi_h), 1e-6)
         eps_h = 2.0 * amax_h / 255.0
-        t["h_rqt"] = make_rqt(eps_gact * eps_u, eps_h, zp_out=0,
-                              requant_factor=ctx.factor,
-                              acc_bound=float(256 * 128))
+        t["h_rqt"] = make_rqt(
+            eps_gact * eps_u,
+            eps_h,
+            zp_out=0,
+            requant_factor=ctx.factor,
+            acc_bound=float(256 * 128),
+        )
         wd_q, eps_wd = quant_expert(np.asarray(p_np["wd"], np.float64), 1)
-        t.update({"wg_q": wg_q, "wu_q": wu_q, "wd_q": wd_q,
-                  "zp_g": np.int32(zp_g)})
+        t.update(
+            {"wg_q": wg_q, "wu_q": wu_q, "wd_q": wd_q, "zp_g": np.int32(zp_g)}
+        )
         # expert output -> shared int8 space, then gate-combine
         lo_o, hi_o = ctx.range(f"{scope}{self.name}.out", "resid")
         amax_o = max(abs(lo_o), abs(hi_o), 1e-6)
         eps_o = 2.0 * amax_o / 255.0
-        t["o_rqt"] = make_rqt(eps_wd * eps_h, eps_o, zp_out=0,
-                              requant_factor=ctx.factor,
-                              acc_bound=f * 127.0 * 127.0)
+        t["o_rqt"] = make_rqt(
+            eps_wd * eps_h,
+            eps_o,
+            zp_out=0,
+            requant_factor=ctx.factor,
+            acc_bound=f * 127.0 * 127.0,
+        )
         # combine: sum_k gate(int8, eps=1/127) * he(int8, eps_o) -> int32
         eps_comb = EPS_GATE * eps_o
         return t, np.asarray([eps_comb])  # layer-wise acc quantum
@@ -271,19 +301,30 @@ class QMoE:
         from repro.sharding.hints import hint
 
         x_pad = jnp.concatenate([xg, jnp.zeros_like(xg[:, :1])], axis=1)
-        xe = hint(self._gather_tokens(x_pad, tfs),
-                  "moe_ecd")                            # (G,E,C,d) int8
-        acc_g = jnp.einsum("gecd,edf->gecf", xe.astype(jnp.int8), t["wg_q"],
-                           preferred_element_type=jnp.int32)
-        acc_u = jnp.einsum("gecd,edf->gecf", xe.astype(jnp.int8), t["wu_q"],
-                           preferred_element_type=jnp.int32)
+        xe = hint(self._gather_tokens(x_pad, tfs), "moe_ecd")  # (G,E,C,d)
+        acc_g = jnp.einsum(
+            "gecd,edf->gecf",
+            xe.astype(jnp.int8),
+            t["wg_q"],
+            preferred_element_type=jnp.int32,
+        )
+        acc_u = jnp.einsum(
+            "gecd,edf->gecf",
+            xe.astype(jnp.int8),
+            t["wu_q"],
+            preferred_element_type=jnp.int32,
+        )
         s_pre = apply_rqt(acc_g, _expand(t["g_rqt"], 1))
         s_g = apply_lut(s_pre, t["g_lut"])
         s_u = apply_rqt(acc_u, _expand(t["u_rqt"], 1))
         prod = (s_g.astype(jnp.int32) - t["zp_g"]) * s_u.astype(jnp.int32)
         s_h = apply_rqt(prod, t["h_rqt"])
-        acc_o = jnp.einsum("gecf,efd->gecd", s_h.astype(jnp.int8), t["wd_q"],
-                           preferred_element_type=jnp.int32)
+        acc_o = jnp.einsum(
+            "gecf,efd->gecd",
+            s_h.astype(jnp.int8),
+            t["wd_q"],
+            preferred_element_type=jnp.int32,
+        )
         s_o = apply_rqt(acc_o, _expand(t["o_rqt"], 1))  # (G,E,C,d) int8
         o_pad = jnp.concatenate([s_o, jnp.zeros_like(s_o[:, :, :1])], axis=2)
         pos_safe = jnp.where(s_gates > 0, pos, C)

@@ -75,8 +75,9 @@ class QNorm:
     apply_fq = apply_fp
 
     # -- transform ---------------------------------------------------------
-    def deploy(self, ctx: DeployCtx, scope: str, p_np: dict,
-               eps_in: float) -> Tuple[dict, float, int]:
+    def deploy(
+        self, ctx: DeployCtx, scope: str, p_np: dict, eps_in: float
+    ) -> Tuple[dict, float, int]:
         """-> (tables, eps_out, zp_out=0). Input must be symmetric (zp=0)."""
         g = np.asarray(p_np["g"], np.float64)
         beta_g = np.maximum(np.max(np.abs(g)), 1e-8)

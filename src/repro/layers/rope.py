@@ -34,8 +34,9 @@ def _angles(head_dim: int, max_pos: int, base: float, fraction: float):
     return rot, np.cos(ang), np.sin(ang)
 
 
-def rope_tables_fp(head_dim: int, max_pos: int, base: float = 10000.0,
-                   fraction: float = 1.0):
+def rope_tables_fp(
+    head_dim: int, max_pos: int, base: float = 10000.0, fraction: float = 1.0
+):
     rot, cos, sin = _angles(head_dim, max_pos, base, fraction)
     return rot, jnp.asarray(cos, jnp.float32), jnp.asarray(sin, jnp.float32)
 

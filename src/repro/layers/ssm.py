@@ -117,8 +117,9 @@ def _chunked_recurrence(inputs, make_au, y_of_h, h_shape, h0=None,
 
     if checkpoint:
         step = jax.checkpoint(step)
-    hinit = hint(jnp.zeros(h_shape, jnp.float32) if h0 is None else h0,
-                 "ssm_h")
+    hinit = hint(
+        jnp.zeros(h_shape, jnp.float32) if h0 is None else h0, "ssm_h"
+    )
     h_last, ys = jax.lax.scan(step, hinit, chunked)
     y = ys.swapaxes(0, 1)
     return y.reshape(y.shape[0], L, *y.shape[3:]), h_last
@@ -205,8 +206,12 @@ class QMamba1:
 
         def make_au(xs):
             a = hint(jnp.exp(xs["dt"][..., None] * A), "ssm_u")
-            u = hint(xs["dt"][..., None] * xs["B"][..., None, :]
-                     * xs["x1"][..., None], "ssm_u")
+            u = hint(
+                xs["dt"][..., None]
+                * xs["B"][..., None, :]
+                * xs["x1"][..., None],
+                "ssm_u",
+            )
             return a, u
 
         def y_of_h(h, xs):
@@ -246,27 +251,35 @@ class QMamba1:
         dt = jax.nn.softplus(subs["dt_proj"].apply(p["dt_proj"], dt_r, rep))
         A = -jnp.exp(p["A_log"])
         h0 = cache["h"] if cache is not None else None
-        y, h_last = self._core_fp(x1a.astype(jnp.float32),
-                                  dt.astype(jnp.float32),
-                                  Bm.astype(jnp.float32),
-                                  Cm.astype(jnp.float32), A, p["D"],
-                                  h0=h0, return_h=True)
+        y, h_last = self._core_fp(
+            x1a.astype(jnp.float32),
+            dt.astype(jnp.float32),
+            Bm.astype(jnp.float32),
+            Cm.astype(jnp.float32),
+            A,
+            p["D"],
+            h0=h0,
+            return_h=True,
+        )
         y = y.astype(x.dtype)
         if calib is not None:
             calib.observe(f"{scope}{self.name}.y", y)
             calib.observe(f"{scope}{self.name}.z.pre", z)
             calib.observe(f"{scope}{self.name}.z", act_fn(ActKind.SILU, z))
-            calib.observe(f"{scope}{self.name}.gated",
-                          y * act_fn(ActKind.SILU, z))
+            calib.observe(
+                f"{scope}{self.name}.gated", y * act_fn(ActKind.SILU, z)
+            )
         out = subs["out_proj"].apply(
             p["out_proj"], y * act_fn(ActKind.SILU, z), rep)
-        new_cache = ({"conv": new_conv, "h": h_last}
-                     if cache is not None else None)
+        new_cache = (
+            {"conv": new_conv, "h": h_last} if cache is not None else None
+        )
         return out, new_cache
 
     # -- transform ------------------------------------------------------------
-    def deploy(self, ctx: DeployCtx, scope: str, p_np: dict, eps_x: float,
-               zp_x: int) -> Tuple[dict, np.ndarray]:
+    def deploy(
+        self, ctx: DeployCtx, scope: str, p_np: dict, eps_x: float, zp_x: int
+    ) -> Tuple[dict, np.ndarray]:
         subs = self._sub()
         di, ds, r = self.d_inner, self.d_state, self.rank
         t: dict = {}
@@ -275,8 +288,9 @@ class QMamba1:
         ip, eps_acc = subs["in_proj"].deploy(p_np["in_proj"], eps_x, zp_x)
         t["in_proj"] = ip
         act_xz = QAct(ActKind.IDENTITY, sym=True, name=f"{self.name}.xz")
-        txz, eps_xz, _ = act_xz.deploy(ctx, scope, eps_acc, 0,
-                                       subs["in_proj"].acc_bound())
+        txz, eps_xz, _ = act_xz.deploy(
+            ctx, scope, eps_acc, 0, subs["in_proj"].acc_bound()
+        )
         t["xz_rqt"] = txz["rqt"]
         # conv (int8 w, per-tap) -> silu LUT
         w = np.asarray(p_np["conv_w"], np.float64)
@@ -289,22 +303,33 @@ class QMamba1:
         lo, hi = ctx.range(f"{nm}.conv.pre", "ssm")
         amax = max(abs(lo), abs(hi), 1e-6)
         eps_cpre = 2.0 * amax / 255.0
-        t["conv_rqt"] = make_rqt(eps_cacc, eps_cpre, zp_out=0,
-                                 requant_factor=ctx.factor,
-                                 acc_bound=self.conv_k * 127.0 * 127.0)
+        t["conv_rqt"] = make_rqt(
+            eps_cacc,
+            eps_cpre,
+            zp_out=0,
+            requant_factor=ctx.factor,
+            acc_bound=self.conv_k * 127.0 * 127.0,
+        )
         lo_c, hi_c = ctx.range(f"{nm}.conv", "act_asym")
         eps_conv = (max(hi_c, lo_c + 1e-6) - lo_c) / 255.0
         zp_conv = ACT_QMIN - int(round(lo_c / eps_conv))
-        t["conv_lut"] = build_lut(lambda v: act_fn_np(ActKind.SILU, v),
-                                  eps_cpre, 0, eps_conv, zp_conv)
+        t["conv_lut"] = build_lut(
+            lambda v: act_fn_np(ActKind.SILU, v),
+            eps_cpre,
+            0,
+            eps_conv,
+            zp_conv,
+        )
         t["zp_conv"] = np.int32(zp_conv)
         # x_proj consumes the (asym) conv output
-        ipx, eps_accx = subs["x_proj"].deploy(p_np["x_proj"], eps_conv,
-                                              zp_conv)
+        ipx, eps_accx = subs["x_proj"].deploy(
+            p_np["x_proj"], eps_conv, zp_conv
+        )
         t["x_proj"] = ipx
         act_xdb = QAct(ActKind.IDENTITY, sym=True, name=f"{self.name}.xdb")
-        txdb, eps_xdb, _ = act_xdb.deploy(ctx, scope, eps_accx, 0,
-                                          subs["x_proj"].acc_bound())
+        txdb, eps_xdb, _ = act_xdb.deploy(
+            ctx, scope, eps_accx, 0, subs["x_proj"].acc_bound()
+        )
         t["xdb_rqt"] = txdb["rqt"]
         # dt_proj int8; its accumulator enters the island (softplus)
         ipdt, eps_accdt = subs["dt_proj"].deploy(p_np["dt_proj"], eps_xdb, 0)
@@ -325,16 +350,21 @@ class QMamba1:
         lo_z, hi_z = ctx.range(f"{nm}.z", "act_asym")
         eps_z = (max(hi_z, lo_z + 1e-6) - lo_z) / 255.0
         zp_z = ACT_QMIN - int(round(lo_z / eps_z))
-        t["z_lut"] = build_lut(lambda v: act_fn_np(ActKind.SILU, v),
-                               eps_xz, 0, eps_z, zp_z)
+        t["z_lut"] = build_lut(
+            lambda v: act_fn_np(ActKind.SILU, v), eps_xz, 0, eps_z, zp_z
+        )
         t["zp_z"] = np.int32(zp_z)
         # gated product -> symmetric int8 -> out_proj
         lo_g, hi_g = ctx.range(f"{nm}.gated", "ssm")
         amax_g = max(abs(lo_g), abs(hi_g), 1e-6)
         eps_gt = 2.0 * amax_g / 255.0
-        t["gated_rqt"] = make_rqt(eps_y * eps_z, eps_gt, zp_out=0,
-                                  requant_factor=ctx.factor,
-                                  acc_bound=float(256 * 128))
+        t["gated_rqt"] = make_rqt(
+            eps_y * eps_z,
+            eps_gt,
+            zp_out=0,
+            requant_factor=ctx.factor,
+            acc_bound=float(256 * 128),
+        )
         ipo, eps_acco = subs["out_proj"].deploy(p_np["out_proj"], eps_gt, 0)
         t["out_proj"] = ipo
         return t, eps_acco
@@ -348,12 +378,14 @@ class QMamba1:
         s_x1, s_z = jnp.split(s_xz, 2, axis=-1)
         if cache is not None:
             conv_in = jnp.concatenate([cache["conv"], s_x1], axis=1)
-            c_acc = _causal_conv1d_int(conv_in, t["conv_wq"], t["conv_bq"],
-                                       self.conv_k)[:, -s_x1.shape[1]:]
+            c_acc = _causal_conv1d_int(
+                conv_in, t["conv_wq"], t["conv_bq"], self.conv_k
+            )[:, -s_x1.shape[1]:]
             new_conv = conv_in[:, -(self.conv_k - 1):]
         else:
-            c_acc = _causal_conv1d_int(s_x1, t["conv_wq"], t["conv_bq"],
-                                       self.conv_k)
+            c_acc = _causal_conv1d_int(
+                s_x1, t["conv_wq"], t["conv_bq"], self.conv_k
+            )
             new_conv = s_x1[:, -(self.conv_k - 1):]
         s_cpre = apply_rqt(c_acc, t["conv_rqt"])
         s_conv = apply_lut(s_cpre, t["conv_lut"])         # asym int8
@@ -367,17 +399,20 @@ class QMamba1:
         Bf = s_B.astype(jnp.float32) * t["eps_xdb_f"]
         Cf = s_C.astype(jnp.float32) * t["eps_xdb_f"]
         h0 = cache["h"] if cache is not None else None
-        y, h_last = self._core_fp(x1f, dt, Bf, Cf, t["A"], t["Dv"],
-                                  h0=h0, return_h=True)
-        s_y = jnp.clip(jnp.round(y * t["eps_y_inv"]),
-                       -128, 127).astype(jnp.int8)
+        y, h_last = self._core_fp(
+            x1f, dt, Bf, Cf, t["A"], t["Dv"], h0=h0, return_h=True
+        )
+        s_y = jnp.clip(jnp.round(y * t["eps_y_inv"]), -128, 127).astype(
+            jnp.int8
+        )
         # ---- island exit ----
         s_zs = apply_lut(s_z, t["z_lut"])
         prod = s_y.astype(jnp.int32) * (s_zs.astype(jnp.int32) - t["zp_z"])
         s_g = apply_rqt(prod, t["gated_rqt"])
         out = subs["out_proj"].apply_id(t["out_proj"], s_g)
-        new_cache = ({"conv": new_conv, "h": h_last}
-                     if cache is not None else None)
+        new_cache = (
+            {"conv": new_conv, "h": h_last} if cache is not None else None
+        )
         return out, new_cache
 
     def init_cache(self, B: int, rep: Rep, dtype=None):
@@ -480,8 +515,12 @@ class QMamba2:
 
         def make_au(xs):
             a = jnp.exp(xs["dt"] * A)[..., None, None]       # (B,c,H,1,1)
-            u = hint(xs["dt"][..., None, None] * xs["xh"][..., :, None]
-                     * xs["Bm"][..., None, :], "ssm_u2")     # (B,c,H,P,ds)
+            u = hint(
+                xs["dt"][..., None, None]
+                * xs["xh"][..., :, None]
+                * xs["Bm"][..., None, :],
+                "ssm_u2",
+            )  # (B,c,H,P,ds)
             return a, u
 
         def y_of_h(h, xs):
@@ -525,23 +564,27 @@ class QMamba2:
         y = y.reshape(B_, L, di).astype(x.dtype)
         # gated RMS norm (mamba2): norm(y * silu(z)) * g
         gated = y * act_fn(ActKind.SILU, z)
-        var = jnp.mean(jnp.square(gated.astype(jnp.float32)), axis=-1,
-                       keepdims=True)
-        yn = (gated.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
-              * p["norm_g"]).astype(x.dtype)
+        var = jnp.mean(
+            jnp.square(gated.astype(jnp.float32)), axis=-1, keepdims=True
+        )
+        yn = (
+            gated.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * p["norm_g"]
+        ).astype(x.dtype)
         if calib is not None:
             calib.observe(f"{scope}{self.name}.y", y)
             calib.observe(f"{scope}{self.name}.z.pre", z)
             calib.observe(f"{scope}{self.name}.gated", gated)
             calib.observe(f"{scope}{self.name}.norm", yn)
         out = subs["out_proj"].apply(p["out_proj"], yn, rep)
-        new_cache = ({"conv": new_conv, "h": h_last}
-                     if cache is not None else None)
+        new_cache = (
+            {"conv": new_conv, "h": h_last} if cache is not None else None
+        )
         return out, new_cache
 
     # -- transform ------------------------------------------------------------
-    def deploy(self, ctx: DeployCtx, scope: str, p_np: dict, eps_x: float,
-               zp_x: int) -> Tuple[dict, np.ndarray]:
+    def deploy(
+        self, ctx: DeployCtx, scope: str, p_np: dict, eps_x: float, zp_x: int
+    ) -> Tuple[dict, np.ndarray]:
 
         subs = self._sub()
         di, ds, H = self.d_inner, self.d_state, self.n_heads
@@ -562,14 +605,23 @@ class QMamba2:
                                 / eps_cacc).astype(np.int32)
         lo, hi = ctx.range(f"{nm}.conv.pre", "ssm")
         eps_cpre = 2.0 * max(abs(lo), abs(hi), 1e-6) / 255.0
-        t["conv_rqt"] = make_rqt(eps_cacc, eps_cpre, zp_out=0,
-                                 requant_factor=ctx.factor,
-                                 acc_bound=self.conv_k * 127.0 * 127.0)
+        t["conv_rqt"] = make_rqt(
+            eps_cacc,
+            eps_cpre,
+            zp_out=0,
+            requant_factor=ctx.factor,
+            acc_bound=self.conv_k * 127.0 * 127.0,
+        )
         lo_c, hi_c = ctx.range(f"{nm}.conv", "act_asym")
         eps_conv = (max(hi_c, lo_c + 1e-6) - lo_c) / 255.0
         zp_conv = ACT_QMIN - int(round(lo_c / eps_conv))
-        t["conv_lut"] = build_lut(lambda v: act_fn_np(ActKind.SILU, v),
-                                  eps_cpre, 0, eps_conv, zp_conv)
+        t["conv_lut"] = build_lut(
+            lambda v: act_fn_np(ActKind.SILU, v),
+            eps_cpre,
+            0,
+            eps_conv,
+            zp_conv,
+        )
         # island constants
         t["A"] = -np.exp(np.asarray(p_np["A_log"], np.float32))
         t["Dv"] = np.asarray(p_np["D"], np.float32)
@@ -598,12 +650,14 @@ class QMamba2:
         s_z, s_xBC, s_dt = self._split_proj(s_all)
         if cache is not None:
             conv_in = jnp.concatenate([cache["conv"], s_xBC], axis=1)
-            c_acc = _causal_conv1d_int(conv_in, t["conv_wq"], t["conv_bq"],
-                                       self.conv_k)[:, -s_xBC.shape[1]:]
+            c_acc = _causal_conv1d_int(
+                conv_in, t["conv_wq"], t["conv_bq"], self.conv_k
+            )[:, -s_xBC.shape[1]:]
             new_conv = conv_in[:, -(self.conv_k - 1):]
         else:
-            c_acc = _causal_conv1d_int(s_xBC, t["conv_wq"], t["conv_bq"],
-                                       self.conv_k)
+            c_acc = _causal_conv1d_int(
+                s_xBC, t["conv_wq"], t["conv_bq"], self.conv_k
+            )
             new_conv = s_xBC[:, -(self.conv_k - 1):]
         s_cpre = apply_rqt(c_acc, t["conv_rqt"])
         s_conv = apply_lut(s_cpre, t["conv_lut"])
@@ -611,8 +665,9 @@ class QMamba2:
         B_, L = s_x.shape[0], s_x.shape[1]
         xBCf = (s_conv.astype(jnp.float32) - t["zp_conv_f"]) * t["eps_conv_f"]
         x1, Bm, Cm = jnp.split(xBCf, [di, di + self.n_groups * ds], axis=-1)
-        dt = jax.nn.softplus(s_dt.astype(jnp.float32) * t["eps_p_f"]
-                             + t["dt_bias"])
+        dt = jax.nn.softplus(
+            s_dt.astype(jnp.float32) * t["eps_p_f"] + t["dt_bias"]
+        )
         xh = x1.reshape(B_, L, H, P)
         Bm = Bm.reshape(B_, L, self.n_groups, ds)
         Cm = Cm.reshape(B_, L, self.n_groups, ds)
@@ -624,20 +679,24 @@ class QMamba2:
         gated = y * (zf / (1.0 + jnp.exp(-zf)))
         var = jnp.mean(gated * gated, axis=-1, keepdims=True)
         yn = gated * jax.lax.rsqrt(var + 1e-6) * t["norm_g_f"]
-        s_n = jnp.clip(jnp.round(yn * t["eps_n_inv"]), -128, 127
-                       ).astype(jnp.int8)
+        s_n = jnp.clip(jnp.round(yn * t["eps_n_inv"]), -128, 127).astype(
+            jnp.int8
+        )
         # ---- island exit ----
         out = subs["out_proj"].apply_id(t["out_proj"], s_n)
-        new_cache = ({"conv": new_conv, "h": h_last}
-                     if cache is not None else None)
+        new_cache = (
+            {"conv": new_conv, "h": h_last} if cache is not None else None
+        )
         return out, new_cache
 
     def init_cache(self, B: int, rep: Rep, dtype=None):
         dt = jnp.int8 if rep is Rep.ID else (dtype or jnp.bfloat16)
         return {
             "conv": jnp.zeros((B, self.conv_k - 1, self.d_conv_in), dt),
-            "h": jnp.zeros((B, self.n_heads, self.head_dim, self.d_state),
-                           jnp.float32),
+            "h": jnp.zeros(
+                (B, self.n_heads, self.head_dim, self.d_state),
+                jnp.float32,
+            ),
         }
 
     def apply(self, p, x, rep, *, cache=None, calib=None, scope=""):

@@ -53,15 +53,24 @@ class DenseBlock:
 
     def _subs(self):
         s = {
-            "norm1": QNorm(self.d_model, kind=self.norm,
-                           use_bias=self.norm_bias, name="norm1"),
-            "attn": QAttention(self.d_model, self.n_heads, self.n_kv_heads,
-                               self.head_dim, rope_base=self.rope_base,
-                               rope_fraction=self.rope_fraction,
-                               max_seq=self.max_seq),
+            "norm1": QNorm(
+                self.d_model, kind=self.norm,
+                use_bias=self.norm_bias, name="norm1",
+            ),
+            "attn": QAttention(
+                self.d_model,
+                self.n_heads,
+                self.n_kv_heads,
+                self.head_dim,
+                rope_base=self.rope_base,
+                rope_fraction=self.rope_fraction,
+                max_seq=self.max_seq,
+            ),
             "add1": QAdd(name="add1"),
-            "norm2": QNorm(self.d_model, kind=self.norm,
-                           use_bias=self.norm_bias, name="norm2"),
+            "norm2": QNorm(
+                self.d_model, kind=self.norm,
+                use_bias=self.norm_bias, name="norm2",
+            ),
             "add2": QAdd(name="add2"),
         }
         if self.n_experts > 0:
@@ -113,44 +122,67 @@ class DenseBlock:
         aux = None
         if self.n_experts > 0:
             B, S, D = h.shape
-            m, aux = subs["moe"].apply(p["moe"], h.reshape(B * S, D), rep,
-                                       qs=(qs or {}).get("moe"),
-                                       calib=calib, scope=scope)
+            m, aux = subs["moe"].apply(
+                p["moe"],
+                h.reshape(B * S, D),
+                rep,
+                qs=(qs or {}).get("moe"),
+                calib=calib,
+                scope=scope,
+            )
             m = m.reshape(B, S, D)
             if self.shared_expert:
-                m = m + subs["mlp"].apply(p["mlp"], h, rep,
-                                          qs=(qs or {}).get("mlp"),
-                                          calib=calib, scope=scope + "sh.")
+                m = m + subs["mlp"].apply(
+                    p["mlp"],
+                    h,
+                    rep,
+                    qs=(qs or {}).get("mlp"),
+                    calib=calib,
+                    scope=scope + "sh.",
+                )
         else:
-            m = subs["mlp"].apply(p["mlp"], h, rep, qs=(qs or {}).get("mlp"),
-                                  calib=calib, scope=scope)
+            m = subs["mlp"].apply(
+                p["mlp"],
+                h,
+                rep,
+                qs=(qs or {}).get("mlp"),
+                calib=calib,
+                scope=scope,
+            )
         x = subs["add2"].apply_fp(x, m, calib=calib, scope=scope)
         return x, cache, aux
 
     # -- transform ------------------------------------------------------------
-    def deploy(self, ctx: DeployCtx, scope: str, p_np: dict,
-               eps_in: float) -> Tuple[dict, float]:
+    def deploy(
+        self, ctx: DeployCtx, scope: str, p_np: dict, eps_in: float
+    ) -> Tuple[dict, float]:
         subs = self._subs()
         t: dict = {}
-        tn1, eps_n1, _ = subs["norm1"].deploy(ctx, scope + "n1.",
-                                              p_np["norm1"], eps_in)
+        tn1, eps_n1, _ = subs["norm1"].deploy(
+            ctx, scope + "n1.", p_np["norm1"], eps_in
+        )
         t["norm1"] = tn1
-        ta, eps_attn_acc = subs["attn"].deploy(ctx, scope, p_np["attn"],
-                                               eps_n1, 0)
+        ta, eps_attn_acc = subs["attn"].deploy(
+            ctx, scope, p_np["attn"], eps_n1, 0
+        )
         t["attn"] = ta
-        tadd1, eps_r1, _ = subs["add1"].deploy(ctx, scope, eps_in, 0,
-                                               eps_attn_acc, 0)
+        tadd1, eps_r1, _ = subs["add1"].deploy(
+            ctx, scope, eps_in, 0, eps_attn_acc, 0
+        )
         t["add1"] = tadd1
-        tn2, eps_n2, _ = subs["norm2"].deploy(ctx, scope + "n2.",
-                                              p_np["norm2"], eps_r1)
+        tn2, eps_n2, _ = subs["norm2"].deploy(
+            ctx, scope + "n2.", p_np["norm2"], eps_r1
+        )
         t["norm2"] = tn2
         if self.n_experts > 0:
-            tm, eps_m_acc = subs["moe"].deploy(ctx, scope, p_np["moe"],
-                                               eps_n2, 0)
+            tm, eps_m_acc = subs["moe"].deploy(
+                ctx, scope, p_np["moe"], eps_n2, 0
+            )
             t["moe"] = tm
             if self.shared_expert:
-                tsh, eps_sh_acc = subs["mlp"].deploy(ctx, scope + "sh.",
-                                                     p_np["mlp"], eps_n2, 0)
+                tsh, eps_sh_acc = subs["mlp"].deploy(
+                    ctx, scope + "sh.", p_np["mlp"], eps_n2, 0
+                )
                 t["mlp"] = tsh
                 # combine shared + routed in a common int32 space: requant
                 # shared acc into the moe comb space before the add
@@ -161,11 +193,13 @@ class DenseBlock:
                     requant_factor=ctx.factor,
                     acc_bound=subs["mlp"].d_ff * 127.0 * 127.0)
         else:
-            tm, eps_m_acc = subs["mlp"].deploy(ctx, scope, p_np["mlp"],
-                                               eps_n2, 0)
+            tm, eps_m_acc = subs["mlp"].deploy(
+                ctx, scope, p_np["mlp"], eps_n2, 0
+            )
             t["mlp"] = tm
-        tadd2, eps_r2, _ = subs["add2"].deploy(ctx, scope, eps_r1, 0,
-                                               eps_m_acc, 0)
+        tadd2, eps_r2, _ = subs["add2"].deploy(
+            ctx, scope, eps_r1, 0, eps_m_acc, 0
+        )
         t["add2"] = tadd2
         return t, eps_r2
 
@@ -177,8 +211,9 @@ class DenseBlock:
         subs = self._subs()
         s_x = hint(s_x, "act_bs_only" if self.n_experts > 0 else "act_bsd")
         h = subs["norm1"].apply_id(t["norm1"], s_x)
-        a_acc, cache = subs["attn"].apply_id(t["attn"], h, cache=cache,
-                                             pos=pos)
+        a_acc, cache = subs["attn"].apply_id(
+            t["attn"], h, cache=cache, pos=pos
+        )
         s_r = subs["add1"].apply_id(t["add1"], s_x, a_acc)
         h = subs["norm2"].apply_id(t["norm2"], s_r)
         if self.n_experts > 0:
@@ -187,9 +222,13 @@ class DenseBlock:
             m_acc = m_acc.reshape(B, S, D)
             if self.shared_expert:
                 sh_acc = subs["mlp"].apply_id(t["mlp"], h)
-                m_acc = m_acc + apply_rqt(sh_acc, t["sh_rqt"],
-                                          qmin=-(1 << 24), qmax=(1 << 24),
-                                          out_dtype=jnp.int32)
+                m_acc = m_acc + apply_rqt(
+                    sh_acc,
+                    t["sh_rqt"],
+                    qmin=-(1 << 24),
+                    qmax=(1 << 24),
+                    out_dtype=jnp.int32,
+                )
         else:
             m_acc = subs["mlp"].apply_id(t["mlp"], h)
         s_out = subs["add2"].apply_id(t["add2"], s_r, m_acc)
@@ -212,11 +251,16 @@ class MambaBlock:
 
     def _subs(self):
         if self.ssm_kind == "mamba1":
-            core = QMamba1(self.d_model, d_state=self.d_state,
-                           expand=self.expand)
+            core = QMamba1(
+                self.d_model, d_state=self.d_state, expand=self.expand
+            )
         else:
-            core = QMamba2(self.d_model, d_state=self.d_state,
-                           expand=self.expand, head_dim=self.head_dim)
+            core = QMamba2(
+                self.d_model,
+                d_state=self.d_state,
+                expand=self.expand,
+                head_dim=self.head_dim,
+            )
         return {
             "norm": QNorm(self.d_model, kind=self.norm, name="norm"),
             "core": core,
@@ -239,25 +283,30 @@ class MambaBlock:
         x = hint(x, "act_bs_only")  # SSM cores run L-unsharded (chunking
         # a model-sharded L reshards per chunk); channels carry the model
         # axis instead (ssm_ch)
-        h = subs["norm"].apply(p["norm"], x, rep, calib=calib,
-                               scope=scope + "n.")
+        h = subs["norm"].apply(
+            p["norm"], x, rep, calib=calib, scope=scope + "n."
+        )
         y, cache = subs["core"].apply_float(p["core"], h, rep, cache=cache,
                                             calib=calib, scope=scope)
         x = subs["add"].apply_fp(x, y, calib=calib, scope=scope)
         return x, cache, None
 
-    def deploy(self, ctx: DeployCtx, scope: str, p_np: dict,
-               eps_in: float) -> Tuple[dict, float]:
+    def deploy(
+        self, ctx: DeployCtx, scope: str, p_np: dict, eps_in: float
+    ) -> Tuple[dict, float]:
         subs = self._subs()
         t = {}
-        tn, eps_n, _ = subs["norm"].deploy(ctx, scope + "n.", p_np["norm"],
-                                           eps_in)
+        tn, eps_n, _ = subs["norm"].deploy(
+            ctx, scope + "n.", p_np["norm"], eps_in
+        )
         t["norm"] = tn
-        tc, eps_core_acc = subs["core"].deploy(ctx, scope, p_np["core"],
-                                               eps_n, 0)
+        tc, eps_core_acc = subs["core"].deploy(
+            ctx, scope, p_np["core"], eps_n, 0
+        )
         t["core"] = tc
-        tadd, eps_out, _ = subs["add"].deploy(ctx, scope, eps_in, 0,
-                                              eps_core_acc, 0)
+        tadd, eps_out, _ = subs["add"].deploy(
+            ctx, scope, eps_in, 0, eps_core_acc, 0
+        )
         t["add"] = tadd
         return t, eps_out
 
@@ -294,9 +343,14 @@ class SharedAttnBlock:
     def _subs(self):
         return {
             "norm": QNorm(2 * self.d_model, kind=self.norm, name="norm"),
-            "attn": QAttention(self.d_model, self.n_heads, self.n_kv_heads,
-                               self.head_dim, max_seq=self.max_seq,
-                               d_in=2 * self.d_model),
+            "attn": QAttention(
+                self.d_model,
+                self.n_heads,
+                self.n_kv_heads,
+                self.head_dim,
+                max_seq=self.max_seq,
+                d_in=2 * self.d_model,
+            ),
             "add": QAdd(name="add"),
         }
 
@@ -312,32 +366,51 @@ class SharedAttnBlock:
                     calib=None, scope: str = ""):
         subs = self._subs()
         cat = jnp.concatenate([x, x0], axis=-1)
-        h = subs["norm"].apply(p["norm"], cat, rep, calib=calib,
-                               scope=scope + "n.")
+        h = subs["norm"].apply(
+            p["norm"], cat, rep, calib=calib, scope=scope + "n."
+        )
         a, cache = subs["attn"].apply_float(p["attn"], h, rep, cache=cache,
                                             pos=pos, calib=calib, scope=scope)
         x = subs["add"].apply_fp(x, a, calib=calib, scope=scope)
         return x, cache, None
 
-    def deploy(self, ctx: DeployCtx, scope: str, p_np: dict, eps_in: float,
-               eps_x0: float) -> Tuple[dict, float]:
+    def deploy(
+        self,
+        ctx: DeployCtx,
+        scope: str,
+        p_np: dict,
+        eps_in: float,
+        eps_x0: float,
+    ) -> Tuple[dict, float]:
         from repro.core.requant import make_rqt
 
         subs = self._subs()
         t = {}
         # unify the two concat halves into one symmetric space
         eps_cat = max(eps_in, eps_x0)
-        t["cat_rqt_x"] = make_rqt(eps_in, eps_cat, zp_out=0,
-                                  requant_factor=ctx.factor, acc_bound=128.0)
-        t["cat_rqt_x0"] = make_rqt(eps_x0, eps_cat, zp_out=0,
-                                   requant_factor=ctx.factor, acc_bound=128.0)
-        tn, eps_n, _ = subs["norm"].deploy(ctx, scope + "n.", p_np["norm"],
-                                           eps_cat)
+        t["cat_rqt_x"] = make_rqt(
+            eps_in,
+            eps_cat,
+            zp_out=0,
+            requant_factor=ctx.factor,
+            acc_bound=128.0,
+        )
+        t["cat_rqt_x0"] = make_rqt(
+            eps_x0,
+            eps_cat,
+            zp_out=0,
+            requant_factor=ctx.factor,
+            acc_bound=128.0,
+        )
+        tn, eps_n, _ = subs["norm"].deploy(
+            ctx, scope + "n.", p_np["norm"], eps_cat
+        )
         t["norm"] = tn
         ta, eps_a_acc = subs["attn"].deploy(ctx, scope, p_np["attn"], eps_n, 0)
         t["attn"] = ta
-        tadd, eps_out, _ = subs["add"].deploy(ctx, scope, eps_in, 0,
-                                              eps_a_acc, 0)
+        tadd, eps_out, _ = subs["add"].deploy(
+            ctx, scope, eps_in, 0, eps_a_acc, 0
+        )
         t["add"] = tadd
         return t, eps_out
 

@@ -43,8 +43,12 @@ class NemoCNN:
 
     def _head(self):
         side = self.img // (2 ** len(self.channels))
-        return QLinear(self.channels[-1] * side * side, self.n_classes,
-                       use_bias=True, per_channel=False)
+        return QLinear(
+            self.channels[-1] * side * side,
+            self.n_classes,
+            use_bias=True,
+            per_channel=False,
+        )
 
     def init(self, key) -> dict:
         convs = self._convs()
@@ -106,12 +110,15 @@ class NemoCNN:
         for i, conv in enumerate(self._convs()):
             bp = dict(p_np["blocks"][i])
             w = bp["conv"]["w"]
-            beta = np.maximum(np.abs(w).reshape(-1, w.shape[-1]).max(axis=0),
-                              1e-8)
+            beta = np.maximum(
+                np.abs(w).reshape(-1, w.shape[-1]).max(axis=0), 1e-8
+            )
             eps_w = 2.0 * beta / 255.0
             q = np.clip(np.floor(w / eps_w), -128, 127)
-            bp = {"conv": {**bp["conv"], "w": (q * eps_w).astype(np.float32)},
-                  "bn": bp["bn"]}
+            bp = {
+                "conv": {**bp["conv"], "w": (q * eps_w).astype(np.float32)},
+                "bn": bp["bn"],
+            }
             out["blocks"].append(bp)
         return out
 
@@ -137,9 +144,16 @@ class NemoCNN:
             })
         return ds
 
-    def deploy(self, p, calib: Calibrator, *, bn_mode: str = "intbn",
-               factor: int = 256, eps_in: float = 1.0 / 255.0,
-               zp_in: int = -128) -> dict:
+    def deploy(
+        self,
+        p,
+        calib: Calibrator,
+        *,
+        bn_mode: str = "intbn",
+        factor: int = 256,
+        eps_in: float = 1.0 / 255.0,
+        zp_in: int = -128,
+    ) -> dict:
         """-> ID tables.  bn_mode in {'fold', 'intbn', 'thresh'}.
 
         The deployed activation quantizer is round-to-nearest rather
@@ -151,8 +165,10 @@ class NemoCNN:
         is what keeps the ID path faithful to FP (test_low_bitwidth).
         """
         p_np = jax.tree.map(np.asarray, p)
-        t = {"meta": {"eps_in": eps_in, "zp_in": zp_in, "bn_mode": bn_mode},
-             "blocks": []}
+        t = {
+            "meta": {"eps_in": eps_in, "zp_in": zp_in, "bn_mode": bn_mode},
+            "blocks": [],
+        }
         eps_x, zp_x = eps_in, zp_in
         for i, conv in enumerate(self._convs()):
             bp = p_np["blocks"][i]
@@ -161,11 +177,16 @@ class NemoCNN:
             eps_y = beta_y / (2 ** self.act_bits - 1)
             blk = {}
             if bn_mode == "fold":
-                w_f, b_f = fold_bn(bp["conv"]["w"], bp["conv"].get("b"),
-                                   bn["gamma"], bn["beta"], bn["mu"],
-                                   bn["sigma"], channel_axis=-1)
-                cf = QConv2d(conv.c_in, conv.c_out, conv.kernel,
-                             use_bias=True)
+                w_f, b_f = fold_bn(
+                    bp["conv"]["w"],
+                    bp["conv"].get("b"),
+                    bn["gamma"],
+                    bn["beta"],
+                    bn["mu"],
+                    bn["sigma"],
+                    channel_axis=-1,
+                )
+                cf = QConv2d(conv.c_in, conv.c_out, conv.kernel, use_bias=True)
                 ip, eps_acc = cf.deploy(
                     {"w": w_f, "b": b_f + 0.5 * eps_y}, eps_x, zp_x)
                 blk["conv"] = ip
@@ -181,8 +202,8 @@ class NemoCNN:
                         bn, eps_acc, acc_bound=conv.acc_bound())
                     half = np.round(0.5 * eps_y / ibn.eps_out)
                     ibn = dataclasses.replace(
-                        ibn, q_lambda=(ibn.q_lambda
-                                       + half).astype(np.int32))
+                        ibn, q_lambda=(ibn.q_lambda + half).astype(np.int32)
+                    )
                     blk["ibn"] = ibn
                     blk["rqt"] = make_rqt(
                         ibn.eps_out, eps_y, zp_out=ACT_QMIN, qmin=ACT_QMIN,

@@ -31,8 +31,12 @@ from repro.layers.linear import QLinear
 from repro.layers.norms import QNorm
 from repro.models.blocks import DenseBlock, MambaBlock, SharedAttnBlock
 
-ACT_MAP = {"silu": ActKind.SILU, "gelu": ActKind.GELU,
-           "relu": ActKind.RELU, "relu2": ActKind.RELU2}
+ACT_MAP = {
+    "silu": ActKind.SILU,
+    "gelu": ActKind.GELU,
+    "relu": ActKind.RELU,
+    "relu2": ActKind.RELU2,
+}
 
 
 def _tree_slice(tree, i):
@@ -60,35 +64,47 @@ class DecoderLM:
 
     def _mamba_tpl(self) -> MambaBlock:
         c = self.cfg
-        return MambaBlock(d_model=c.d_model, ssm_kind=c.ssm_kind,
-                          d_state=c.ssm_state, expand=c.ssm_expand,
-                          head_dim=c.ssm_head_dim, norm=c.norm)
+        return MambaBlock(
+            d_model=c.d_model,
+            ssm_kind=c.ssm_kind,
+            d_state=c.ssm_state,
+            expand=c.ssm_expand,
+            head_dim=c.ssm_head_dim,
+            norm=c.norm,
+        )
 
     def _shared_tpl(self) -> SharedAttnBlock:
         c = self.cfg
-        return SharedAttnBlock(d_model=c.d_model, n_heads=c.n_heads,
-                               n_kv_heads=c.n_kv_heads, head_dim=c.hd,
-                               max_seq=self.max_seq, norm=c.norm)
+        return SharedAttnBlock(
+            d_model=c.d_model,
+            n_heads=c.n_heads,
+            n_kv_heads=c.n_kv_heads,
+            head_dim=c.hd,
+            max_seq=self.max_seq,
+            norm=c.norm,
+        )
 
     def plan(self):
         """-> list of segments: (kind, template(s), n_steps)."""
         c = self.cfg
-        if c.family == "dense" or (c.family == "moe" and c.moe_every == 1
-                                   and c.n_experts == 0):
+        if c.family == "dense" or (
+            c.family == "moe" and c.moe_every == 1 and c.n_experts == 0
+        ):
             return [("dense", self._dense_tpl(False), c.n_layers)]
         if c.family == "moe" and c.moe_every == 1:
             return [("dense", self._dense_tpl(True), c.n_layers)]
         if c.family == "moe" and c.moe_every == 2:
             assert c.n_layers % 2 == 0
-            return [("pair", (self._dense_tpl(False), self._dense_tpl(True)),
-                     c.n_layers // 2)]
+            pair = (self._dense_tpl(False), self._dense_tpl(True))
+            return [("pair", pair, c.n_layers // 2)]
         if c.family == "ssm":
             return [("mamba", self._mamba_tpl(), c.n_layers)]
         if c.family == "hybrid":
             k = c.shared_attn_every
             groups, tail = divmod(c.n_layers, k)
-            segs = [("hybrid", (self._mamba_tpl(), self._shared_tpl()),
-                     groups)]
+            segs = [
+                ("hybrid", (self._mamba_tpl(), self._shared_tpl()), groups)
+            ]
             if tail:
                 segs.append(("mamba", self._mamba_tpl(), tail))
             return segs
@@ -116,8 +132,10 @@ class DecoderLM:
             elif kind == "pair":
                 a, b = tpl
                 k2 = jax.vmap(lambda k: jax.random.split(k))(layer_keys)
-                stacked = {"a": jax.vmap(a.init)(k2[:, 0]),
-                           "b": jax.vmap(b.init)(k2[:, 1])}
+                stacked = {
+                    "a": jax.vmap(a.init)(k2[:, 0]),
+                    "b": jax.vmap(b.init)(k2[:, 1]),
+                }
             elif kind == "hybrid":
                 mam, sha = tpl
                 k = self.cfg.shared_attn_every
@@ -161,8 +179,9 @@ class DecoderLM:
                 p["embed"], batch, rep, calib=calib, scope="")
         return batch  # embeds provided by the (stubbed) modality frontend
 
-    def apply(self, p, x, rep, *, qstate=None, caches=None, pos=None,
-              calib=None):
+    def apply(
+        self, p, x, rep, *, qstate=None, caches=None, pos=None, calib=None
+    ):
         """x: embedded input (B,S,d) float. -> (hidden, caches, aux_sum)"""
         c = self.cfg
         aux_total = jnp.float32(0.0)
@@ -171,8 +190,11 @@ class DecoderLM:
         ci = 0
         for si, (kind, tpl, n) in enumerate(self.plan()):
             seg_p = p["segments"][si]
-            seg_qs = ((qstate or {}).get("segments", [None] * 8)[si]
-                      if qstate else None)
+            seg_qs = (
+                (qstate or {}).get("segments", [None] * 8)[si]
+                if qstate
+                else None
+            )
             if calib is not None:
                 # eager per-layer walk with unique scopes
                 x, caches_i, aux = self._seg_eager(
@@ -188,12 +210,28 @@ class DecoderLM:
             ci += 1
         return x, (new_caches if caches else None), aux_total
 
-    def _seg_eager(self, kind, tpl, seg_p, seg_qs, x, x0, rep, caches, pos,
-                   calib, scope, p_root):
+    def _seg_eager(
+        self,
+        kind,
+        tpl,
+        seg_p,
+        seg_qs,
+        x,
+        x0,
+        rep,
+        caches,
+        pos,
+        calib,
+        scope,
+        p_root,
+    ):
         """Python loop over layers (calibration: unique scope per layer)."""
         aux_total = jnp.float32(0.0)
-        n = (jax.tree.leaves(seg_p)[0].shape[0] if kind != "pair"
-             else jax.tree.leaves(seg_p["a"])[0].shape[0])
+        n = (
+            jax.tree.leaves(seg_p)[0].shape[0]
+            if kind != "pair"
+            else jax.tree.leaves(seg_p["a"])[0].shape[0]
+        )
         outs = []
         for i in range(n):
             sc = f"{scope}L{i}."
@@ -221,13 +259,17 @@ class DecoderLM:
                     qs=_tree_slice(seg_qs["b"], i) if seg_qs else None,
                     cache=cb, pos=pos, calib=calib, scope=sc + "b.")
                 aux_total += (aux if aux is not None else 0.0)
-                cache_i = jax.tree.map(lambda a_, b_: jnp.stack([a_, b_]),
-                                       ca, cb) if ca is not None else None
+                cache_i = jax.tree.map(
+                    lambda a_, b_: jnp.stack([a_, b_]), ca, cb
+                ) if ca is not None else None
             elif kind == "hybrid":
                 mam, sha = tpl
                 k = self.cfg.shared_attn_every
-                cm = (_tree_slice(cache_i, slice(0, k))
-                      if cache_i is not None else None)
+                cm = (
+                    _tree_slice(cache_i, slice(0, k))
+                    if cache_i is not None
+                    else None
+                )
                 for j in range(k):
                     cmj = _tree_slice(cm, j) if cm is not None else None
                     x, cmj, _ = mam.apply_float(
@@ -242,8 +284,9 @@ class DecoderLM:
         caches_out = stack_trees(outs) if (caches is not None) else None
         return x, caches_out, aux_total
 
-    def _seg_scan(self, kind, tpl, seg_p, seg_qs, x, x0, rep, caches, pos,
-                  p_root):
+    def _seg_scan(
+        self, kind, tpl, seg_p, seg_qs, x, x0, rep, caches, pos, p_root
+    ):
         """lax.scan over stacked layer params (jit path)."""
         c = self.cfg
         aux0 = jnp.float32(0.0)
@@ -256,8 +299,9 @@ class DecoderLM:
                     h2, lc2 = tpl.apply_id(lp, h, cache=lc, pos=pos)
                     a2 = aux
                 else:
-                    h2, lc2, a = tpl.apply_float(lp, h, rep, qs=lqs,
-                                                 cache=lc, pos=pos)
+                    h2, lc2, a = tpl.apply_float(
+                        lp, h, rep, qs=lqs, cache=lc, pos=pos
+                    )
                     a2 = aux + (a if a is not None else 0.0)
                 return (h2, a2), lc2
 
@@ -291,9 +335,11 @@ class DecoderLM:
                         lp["b"], h, rep,
                         qs=lqs["b"] if lqs else None, cache=cb, pos=pos)
                     a_sum = aux + (aux_b if aux_b is not None else 0.0)
-                lc2 = (jax.tree.map(lambda u, v: jnp.stack([u, v]),
-                                    ca2, cb2)
-                       if ca2 is not None else None)
+                lc2 = (
+                    jax.tree.map(lambda u, v: jnp.stack([u, v]), ca2, cb2)
+                    if ca2 is not None
+                    else None
+                )
                 return (h, a_sum), lc2
 
             if rep in (Rep.FP, Rep.FQ):
@@ -316,19 +362,22 @@ class DecoderLM:
                     if rep is Rep.ID:
                         h2, mc2 = mam_tpl.apply_id(mp, hh, cache=mc, pos=pos)
                     else:
-                        h2, mc2, _ = mam_tpl.apply_float(mp, hh, rep,
-                                                         cache=mc, pos=pos)
+                        h2, mc2, _ = mam_tpl.apply_float(
+                            mp, hh, rep, cache=mc, pos=pos
+                        )
                     return h2, mc2
 
                 mc_in = lc["m"] if lc is not None else None
                 h, mc_out = jax.lax.scan(mbody, h, (lp["m"], mc_in))
                 sc_in = lc["sh"] if lc is not None else None
                 if rep is Rep.ID:
-                    h, sc_out = sha_tpl.apply_id(lp["sh"], h, x0,
-                                                 cache=sc_in, pos=pos)
+                    h, sc_out = sha_tpl.apply_id(
+                        lp["sh"], h, x0, cache=sc_in, pos=pos
+                    )
                 else:
-                    h, sc_out, _ = sha_tpl.apply_float(sh_p, h, x0, rep,
-                                                       cache=sc_in, pos=pos)
+                    h, sc_out, _ = sha_tpl.apply_float(
+                        sh_p, h, x0, rep, cache=sc_in, pos=pos
+                    )
                 lc2 = {"m": mc_out, "sh": sc_out} if lc is not None else None
                 return (h, aux), lc2
 
@@ -352,9 +401,8 @@ class DecoderLM:
             calib.observe("final.head_in", h)
         from repro.sharding.hints import hint
 
-        logits = hint(QLinear(c.d_model, c.vocab_padded,
-                              per_channel=False).apply(p["head"], h, rep),
-                      "logits")
+        head = QLinear(c.d_model, c.vocab_padded, per_channel=False)
+        logits = hint(head.apply(p["head"], h, rep), "logits")
         if c.vocab_padded != c.vocab:  # mask padded vocab slots
             mask = jnp.arange(c.vocab_padded) < c.vocab
             logits = jnp.where(mask, logits, jnp.asarray(-1e9, logits.dtype))
@@ -373,8 +421,9 @@ class DecoderLM:
         return jnp.mean(nll) + 0.01 * aux
 
     def loss_fn_embeds(self, p, qstate, embeds, tgt, rep):
-        x, _, aux = self.apply(p, embeds.astype(jnp.bfloat16), rep,
-                               qstate=qstate)
+        x, _, aux = self.apply(
+            p, embeds.astype(jnp.bfloat16), rep, qstate=qstate
+        )
         logits = self.logits(p, x, rep).astype(jnp.float32)
         logp = jax.nn.log_softmax(logits, axis=-1)
         nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
@@ -391,8 +440,14 @@ class DecoderLM:
         self.logits(p, x, Rep.FP, calib=calib)
         return calib
 
-    def deploy(self, p, calib: Optional[Calibrator], *,
-               factor: int = 256, eps_in: Optional[float] = None) -> dict:
+    def deploy(
+        self,
+        p,
+        calib: Optional[Calibrator],
+        *,
+        factor: int = 256,
+        eps_in: Optional[float] = None,
+    ) -> dict:
         """-> ID params: integer tables, stacked to mirror the plan."""
         c = self.cfg
         ctx = DeployCtx(calib=calib, factor=factor)
@@ -412,17 +467,21 @@ class DecoderLM:
             for i in range(n):
                 sc = f"S{si}.L{i}."
                 if kind == "dense":
-                    ti, eps_x = tpl.deploy(ctx, sc, _tree_slice(seg_p, i),
-                                           eps_x)
+                    ti, eps_x = tpl.deploy(
+                        ctx, sc, _tree_slice(seg_p, i), eps_x
+                    )
                 elif kind == "mamba":
-                    ti, eps_x = tpl.deploy(ctx, sc, _tree_slice(seg_p, i),
-                                           eps_x)
+                    ti, eps_x = tpl.deploy(
+                        ctx, sc, _tree_slice(seg_p, i), eps_x
+                    )
                 elif kind == "pair":
                     a, b = tpl
-                    ta, eps_x = a.deploy(ctx, sc + "a.",
-                                         _tree_slice(seg_p["a"], i), eps_x)
-                    tb, eps_x = b.deploy(ctx, sc + "b.",
-                                         _tree_slice(seg_p["b"], i), eps_x)
+                    ta, eps_x = a.deploy(
+                        ctx, sc + "a.", _tree_slice(seg_p["a"], i), eps_x
+                    )
+                    tb, eps_x = b.deploy(
+                        ctx, sc + "b.", _tree_slice(seg_p["b"], i), eps_x
+                    )
                     ti = {"a": ta, "b": tb}
                 elif kind == "hybrid":
                     mam, sha = tpl
@@ -465,9 +524,8 @@ class DecoderLM:
             t["norm_f"], s_x)
         from repro.sharding.hints import hint
 
-        logits = hint(QLinear(c.d_model, c.vocab_padded,
-                              per_channel=False).apply_id(t["head"], h),
-                      "logits")
+        head = QLinear(c.d_model, c.vocab_padded, per_channel=False)
+        logits = hint(head.apply_id(t["head"], h), "logits")
         if c.vocab_padded != c.vocab:  # integer mask for padded slots
             mask = jnp.arange(c.vocab_padded) < c.vocab
             logits = jnp.where(mask, logits, jnp.int32(-(2 ** 30)))
@@ -514,8 +572,7 @@ class DecoderLM:
         engine ignores the rest.
         """
         x = self.embed_in_id(t, batch)
-        x, caches, _ = self.apply(t, x, Rep.ID, caches=caches,
-                                  pos=start_pos)
+        x, caches, _ = self.apply(t, x, Rep.ID, caches=caches, pos=start_pos)
         idx = jnp.broadcast_to(
             last_index[:, None, None], (x.shape[0], 1, x.shape[-1]))
         h = jnp.take_along_axis(x, idx, axis=1)

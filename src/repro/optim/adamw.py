@@ -23,8 +23,18 @@ def adamw_init(params, *, dtype=jnp.float32):
     }
 
 
-def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
-                 weight_decay=0.1, clip_norm: Optional[float] = 1.0):
+def adamw_update(
+    params,
+    grads,
+    state,
+    *,
+    lr,
+    b1=0.9,
+    b2=0.95,
+    eps=1e-8,
+    weight_decay=0.1,
+    clip_norm: Optional[float] = 1.0,
+):
     step = state["step"] + 1
     if clip_norm is not None:
         gnorm = jnp.sqrt(sum(
@@ -44,8 +54,9 @@ def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
     def upd(p, m, v):
         mhat = m.astype(jnp.float32) / bc1
         vhat = v.astype(jnp.float32) / bc2
-        delta = (mhat / (jnp.sqrt(vhat) + eps)
-                 + weight_decay * p.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+            jnp.float32
+        )
         return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
 
     new_params = jax.tree.map(upd, params, mu, nu)

@@ -9,6 +9,7 @@ def cosine_schedule(step, *, peak_lr=3e-4, warmup=100, total=10000,
     step = step.astype(jnp.float32)
     warm = peak_lr * step / max(warmup, 1)
     frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
-    cos = peak_lr * (floor_frac + (1 - floor_frac)
-                     * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    cos = peak_lr * (
+        floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    )
     return jnp.where(step < warmup, warm, cos)

@@ -519,8 +519,9 @@ class PagedArena:
         on the trash page, so only real positions need pages)."""
         if end <= start:
             return
-        for blk in range(start // self.page_size,
-                         (end - 1) // self.page_size + 1):
+        for blk in range(
+            start // self.page_size, (end - 1) // self.page_size + 1
+        ):
             self.touch(slot, blk * self.page_size)
 
     def release(self, slot: int):
@@ -555,7 +556,16 @@ class PagedArena:
         """Attach the current page table inside every attention cache
         dict (broadcast over its stacked leading axes) — the decode
         step's cache pytree keeps one structure, so paging costs no
-        extra compilation."""
+        extra compilation.
+
+        This IS the fused paged-attention kernel's layout contract
+        (kernels/paged_attention.py): int8 pools
+        (n_pages + 1, K, page_size, hd) with physical page 0 reserved
+        as the PAGE_NULL trash page, an int32 (n_slots,
+        pages_per_slot) table whose stale/unallocated entries point at
+        PAGE_NULL, and the engine's int32 per-slot position vector
+        alongside.  The kernel reads K/V straight through this view —
+        no dense logical gather on the decode hot path."""
         tab = jnp.asarray(self.page_table)
         axes = iter(self._kv_batch_axes)
 

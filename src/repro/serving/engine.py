@@ -22,7 +22,10 @@ cache.PagedArena when ``paged=True``) and drives the ID-representation
                            with a per-slot position vector; per-slot
                            done-masking is host-side (finished slots
                            are released and their rows become
-                           don't-cares)
+                           don't-cares); paged arenas decode through
+                           the fused paged-attention kernel by default
+                           (paged_kernel=False keeps the
+                           write-then-gather oracle)
   run_until_drained() step until queue + prefills + slots are empty
 
 The prefill dispatch decision is made in ONE place (_prefill_mode):
@@ -86,6 +89,7 @@ class ServingEngine:
         paged: bool = False,
         page_size: int = 16,
         n_pages: Optional[int] = None,
+        paged_kernel: Optional[bool] = None,
     ):
         if lm.cfg.input_mode != "tokens":
             raise ValueError(
@@ -122,7 +126,24 @@ class ServingEngine:
         self.completed: List[Completion] = []
         self._next_id = 0
 
-        self._decode = jax.jit(lm.decode_step)
+        # paged decode path: the fused paged-attention kernel by
+        # default (kernels/paged_attention.py — K/V stream page by page
+        # through the table, no dense logical gather), or the
+        # write-then-gather jnp oracle when paged_kernel=False.  The
+        # variant is pinned at trace time, so the single decode
+        # compilation bakes the chosen path in.
+        self.paged_kernel = paged if paged_kernel is None else (
+            bool(paged_kernel) and paged
+        )
+
+        def _decode_step(t, token, caches, pos):
+            from repro.launch import variants
+
+            mode = "kernel" if self.paged_kernel else "gather"
+            with variants.use_variants(paged_decode=mode):
+                return lm.decode_step(t, token, caches, pos)
+
+        self._decode = jax.jit(_decode_step)
 
         def _prefill_one(t, prompt, last_index):
             caches = lm.init_caches(1, max_len, Rep.ID)

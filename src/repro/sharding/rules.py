@@ -137,8 +137,7 @@ def params_sharding(params, mesh, *, weight_stationary: bool = False):
     return jax.tree_util.tree_map_with_path(one, params)
 
 
-def batch_spec(mesh, ndim: int, batch_axis: int = 0,
-               shape=None) -> P:
+def batch_spec(mesh, ndim: int, batch_axis: int = 0, shape=None) -> P:
     """Tokens/activations: batch dim over ("pod","data")."""
     b = _logical_to_mesh("batch", mesh)
     spec = [None] * ndim
