@@ -19,7 +19,15 @@ chunked superiority,
 and (f) a paged_kernel_vs_gather decode micro-benchmark: the fused
 paged-attention kernel vs the write-then-gather oracle on one
 decode-heavy workload (bit-exact paths, so the trajectory isolates the
-decode step's cost).
+decode step's cost),
+and (g) kv_shard_vs_single: the multi-device engine — KV arena sharded
+along kv heads over a forced (4, 2) host mesh, explicit-sharding
+dispatches, async dispatch queue — vs the plain single-device engine on
+the same decode-heavy workload.  On a CPU host mesh this measures the
+partitioning/pipeline OVERHEAD (no real parallel speedup exists on one
+machine), which is exactly what the gate should hold flat; token parity
+between all three variants is asserted (DESIGN.md §Serving
+¶Multi-device).
 Emits BENCH_serving.json so CI can track the trajectory
 (.github/workflows/ci.yml `bench` job +
 benchmarks/check_serving_regression.py, which gates tok/s AND the
@@ -29,12 +37,26 @@ mixed-workload TTFT percentiles).
 """
 from __future__ import annotations
 
+import os
+
+# the kv_shard benchmark needs a multi-device host platform; the count
+# locks at jax's first backend init, so force it before any jax import
+# (the launch/dryrun.py trick)
+if "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""
+):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", "")
+    )
+
 import argparse
 import json
 import time
 
 import numpy as np
 
+from repro.launch.mesh import make_serving_mesh
 from repro.launch.serve import deploy_model, serve_batch
 from repro.serving import SchedulerConfig, ServingEngine
 
@@ -103,6 +125,9 @@ def bench_engine(
     ttft_percentiles=False,
     repeats=1,
     paged_kernel=None,
+    mesh=None,
+    kv_shard=False,
+    dispatch_depth=0,
 ):
     sched_kw = {"prefill_bucket": bucket,
                 "max_prefills_per_step": max_prefills}
@@ -112,6 +137,7 @@ def bench_engine(
         lm, tables, n_slots=slots, max_len=max_len,
         paged=paged, page_size=page_size, n_pages=n_pages,
         paged_kernel=paged_kernel,
+        mesh=mesh, kv_shard=kv_shard, dispatch_depth=dispatch_depth,
         scheduler=SchedulerConfig(**sched_kw))
     # warm THIS engine's jit wrappers (every chunk row bucket + the
     # fused decode via engine.warmup, one whole-prompt prefill compile
@@ -266,6 +292,54 @@ def bench_paged_kernel_vs_gather(
     }
 
 
+def bench_kv_shard_vs_single(
+    lm, tables, rng, *, slots, max_len, page_size, bucket
+):
+    """Multi-device serving trajectory (DESIGN.md §Serving
+    ¶Multi-device): the paged engine with the KV arena sharded along
+    kv heads over a (4, 2) host mesh — sync and with the depth-1 async
+    dispatch queue — vs the plain single-device engine, SAME
+    decode-heavy workload.  All three are bit-exact by construction
+    (asserted), so the gated tok/s ratios isolate the partitioning and
+    pipeline overhead the host mesh adds: a regression here means the
+    multi-device path got structurally more expensive (an accidental
+    resharding, a new sync point), not that scheduling changed."""
+    mesh = make_serving_mesh(2, n_data=4)
+    p_len = max(1, max_len // 8)
+    gen = max_len - p_len
+    workload = [
+        (rng.integers(0, lm.cfg.vocab, size=(p_len,)), gen)
+        for _ in range(2 * slots)
+    ]
+    single_toks, shard_toks, async_toks = [], [], []
+    common = dict(
+        paged=True, page_size=page_size, max_prefills=2 * slots,
+        repeats=3,
+    )
+    single = bench_engine(
+        lm, tables, workload, slots, max_len, bucket,
+        collect_tokens=single_toks, **common)
+    sharded = bench_engine(
+        lm, tables, workload, slots, max_len, bucket,
+        mesh=mesh, kv_shard=True,
+        collect_tokens=shard_toks, **common)
+    sharded_async = bench_engine(
+        lm, tables, workload, slots, max_len, bucket,
+        mesh=mesh, kv_shard=True, dispatch_depth=1,
+        collect_tokens=async_toks, **common)
+    assert shard_toks == single_toks, "kv_shard token divergence"
+    assert async_toks == single_toks, "async dispatch token divergence"
+    return {
+        "requests": len(workload), "prompt_len": p_len, "gen": gen,
+        "mesh": dict(mesh.shape),
+        "single": single, "kv_shard": sharded,
+        "kv_shard_async": sharded_async,
+        "shard_to_single": (
+            sharded["tok_s"] / single["tok_s"] if single["tok_s"] else 0.0
+        ),
+    }
+
+
 def bench_mixed(lm, tables, rng, *, slots, max_len, chunk, bucket):
     """Mixed long/short-prompt burst: a few near-arena-length prompts
     arrive alongside a burst of short ones.  Whole-prompt prefill makes
@@ -384,6 +458,9 @@ def main():
             lm, tables, rng, slots=args.slots, max_len=max_len,
             page_size=args.page_size, bucket=args.prefill_bucket),
         "paged_kernel_vs_gather": bench_paged_kernel_vs_gather(
+            lm, tables, rng, slots=args.slots, max_len=max_len,
+            page_size=args.page_size, bucket=args.prefill_bucket),
+        "kv_shard_vs_single": bench_kv_shard_vs_single(
             lm, tables, rng, slots=args.slots, max_len=max_len,
             page_size=args.page_size, bucket=args.prefill_bucket),
         "mixed_ttft": bench_mixed(

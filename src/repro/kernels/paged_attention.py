@@ -176,3 +176,72 @@ def paged_attention_decode_pallas(
         q, k_pool, v_pool, table.astype(jnp.int32), pos.astype(jnp.int32),
         scale,
     )
+
+
+def paged_attention_decode(
+    q,
+    k_pool,
+    v_pool,
+    table,
+    pos,
+    *,
+    score_scale,
+    group: int = 1,
+    mesh=None,
+    interpret: bool = True,
+):
+    """Mesh-aware dispatch for the fused paged decode (same contract as
+    `paged_attention_decode_pallas`, plus an optional serving mesh).
+
+    With a mesh whose "model" axis divides the kv-head count, the
+    kernel runs under shard_map with a per-shard head range: the pools
+    arrive split along their K axis, q along H, and each shard executes
+    the unmodified kernel over its own K/n kv heads and the matching
+    H/n query heads.  GQA groups never straddle a shard boundary —
+    H = K * group is sharded in the same contiguous blocks as K, so the
+    local `h // group` fold still lands on the local kv head — and the
+    per-head math is untouched, so the sharded call is bit-exact with
+    the single-shard one (each (b, h) grid cell computes on exactly the
+    same bytes, just on a different device).  The page table, position
+    vector, and score_scale are replicated: every shard walks the full
+    table (pages hold all kv heads; only the head axis splits).
+
+    Falls back to the plain call when there is no mesh, the model axis
+    is width 1, or it does not divide K (the GQA-aware replication
+    fallback of sharding/rules.arena_leaf_spec — the pools are then
+    replicated too, and the constraint-free call matches them).
+    """
+    n = dict(mesh.shape).get("model", 1) if mesh is not None else 1
+    K = k_pool.shape[1]
+    if n <= 1 or K % n:
+        return paged_attention_decode_pallas(
+            q, k_pool, v_pool, table, pos,
+            score_scale=score_scale, group=group, interpret=interpret,
+        )
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def local(q_, k_, v_, tab_, pos_, scale_):
+        return paged_attention_decode_pallas(
+            q_, k_, v_, tab_, pos_,
+            score_scale=scale_, group=group, interpret=interpret,
+        )
+
+    sharded = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(None, "model", None),
+            P(None, "model", None, None),
+            P(None, "model", None, None),
+            P(),
+            P(),
+            P(),
+        ),
+        out_specs=P(None, "model", None),
+        check_rep=False,
+    )
+    return sharded(
+        q, k_pool, v_pool, table.astype(jnp.int32), pos.astype(jnp.int32),
+        jnp.asarray(score_scale, jnp.float32),
+    )

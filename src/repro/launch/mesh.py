@@ -1,11 +1,15 @@
-"""Production mesh construction.
+"""Production + serving mesh construction.
 
-A function (not a module-level constant) so importing this module never
+Functions (not module-level constants) so importing this module never
 touches jax device state — the dry-run sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax init.
 
 Single pod : (16, 16)    axes ("data", "model")        — 256 chips (v5e pod)
 Multi-pod  : (2, 16, 16) axes ("pod", "data", "model") — 512 chips / 2 pods
+Serving    : (d, m)      axes ("data", "model")        — m shards the KV
+             arena along kv heads (repro.serving, DESIGN.md §Serving
+             ¶Multi-device); on a CPU host the device pool comes from
+             the same forced-host-platform trick the dry-run uses.
 
 The "pod" axis carries data parallelism across the DCN boundary (gradient
 all-reduce spans pods); "model" carries TP/EP/sequence-sharding inside a
@@ -16,21 +20,41 @@ from __future__ import annotations
 import jax
 
 
+def _axis_kwargs(n_axes: int) -> dict:
+    """jax.make_mesh kwargs, tolerant of jax versions without AxisType."""
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is None:
+        return {}
+    return {"axis_types": (at.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_host_mesh():
     """1-device mesh with the same axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"), **_axis_kwargs(2))
+
+
+def make_serving_mesh(n_model: int = 0, *, n_data: int = 1):
+    """("data", "model") mesh for the multi-device serving engine.
+
+    `n_model` is the KV-shard width (0 = every device not claimed by
+    `n_data`).  Host-mesh fallback: when the platform exposes fewer
+    devices than requested — a plain CPU run without the forced
+    host-platform device count — this degrades to the 1-device host
+    mesh instead of failing, so the same serving entry point runs
+    everywhere and sharding simply becomes replication.
+    """
+    n_dev = jax.device_count()
+    n_data = max(1, n_data)
+    if n_model <= 0:
+        n_model = max(1, n_dev // n_data)
+    if n_data * n_model > n_dev:
+        return make_host_mesh()
     return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
-
-
-def batch_axes(mesh) -> tuple:
-    """Mesh axes that shard the batch dimension."""
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        (n_data, n_model), ("data", "model"), **_axis_kwargs(2)
+    )

@@ -9,23 +9,68 @@ the original fixed-shape lockstep loop, kept as the parity reference
 (tests/test_serving.py asserts the engine reproduces it token-for-token
 for simultaneous same-length requests).
 
+Multi-device serving (DESIGN.md §Serving ¶Multi-device): `--mesh N`
+builds a ("data", "model") serving mesh with N devices on the model
+axis, `--kv-shard` shards the KV arena along kv heads over it, and
+`--dispatch-depth 1` overlaps host scheduling with the in-flight
+device step.  On a single-CPU host `--mesh N` forces N XLA host
+devices before jax initializes (the launch/dryrun.py trick), so the
+whole multi-device path runs anywhere; if the platform still exposes
+fewer devices than asked, make_serving_mesh falls back to the 1-device
+host mesh and sharding degrades to replication.
+
 CPU-scale example:
   PYTHONPATH=src python -m repro.launch.serve --arch granite_3_2b \
-      --reduced --requests 8 --slots 4 --prompt-len 16 --gen 16 --ragged
+      --reduced --requests 8 --slots 4 --prompt-len 16 --gen 16 --ragged \
+      --mesh 2 --kv-shard --dispatch-depth 1
 """
 from __future__ import annotations
 
-import argparse
+import os
+import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import get_config
-from repro.core.rep import Rep
-from repro.data.synthetic import SyntheticConfig, SyntheticStream
-from repro.models.lm import DecoderLM
-from repro.serving import SchedulerConfig, ServingEngine
+def _force_host_devices():
+    """--mesh N on a CPU host: request N host-platform devices BEFORE
+    any jax import (the device count locks on first backend init —
+    same preamble trick as launch/dryrun.py).  Handles both
+    `--mesh N` and `--mesh=N`."""
+    n = 0
+    for i, arg in enumerate(sys.argv):
+        if arg == "--mesh" and i + 1 < len(sys.argv):
+            val = sys.argv[i + 1]
+        elif arg.startswith("--mesh="):
+            val = arg.split("=", 1)[1]
+        else:
+            continue
+        try:
+            n = int(val)
+        except ValueError:
+            return
+        break
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={n} " + flags
+        )
+
+
+# only when this module IS the program: an importing program's argv
+# must not leak device-count side effects into its jax init
+if __name__ == "__main__":
+    _force_host_devices()
+
+import argparse  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs.base import get_config  # noqa: E402
+from repro.core.rep import Rep  # noqa: E402
+from repro.data.synthetic import SyntheticConfig, SyntheticStream  # noqa: E402
+from repro.models.lm import DecoderLM  # noqa: E402
+from repro.serving import SchedulerConfig, ServingEngine  # noqa: E402
 
 
 def deploy_model(
@@ -117,7 +162,38 @@ def main():
         "jnp oracle instead of the fused "
         "paged-attention kernel (parity debugging)",
     )
+    ap.add_argument(
+        "--mesh",
+        type=int,
+        default=0,
+        help="devices on the serving mesh's model axis "
+        "(0: single-device; on CPU this forces that many "
+        "host devices before jax init)",
+    )
+    ap.add_argument(
+        "--kv-shard",
+        action="store_true",
+        help="shard the KV arena along kv heads over the "
+        "mesh model axis (needs --mesh)",
+    )
+    ap.add_argument(
+        "--dispatch-depth",
+        type=int,
+        default=0,
+        choices=(0, 1),
+        help="async dispatch queue depth: 1 overlaps host "
+        "scheduling with the in-flight device step "
+        "(0: synchronous)",
+    )
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serving_mesh
+
+        mesh = make_serving_mesh(args.mesh)
+    elif args.kv_shard:
+        ap.error("--kv-shard needs --mesh N")
 
     max_len = args.max_len or (args.prompt_len + args.gen)
     lm, tables = deploy_model(args.arch, reduced=args.reduced, max_seq=max_len)
@@ -126,6 +202,8 @@ def main():
         paged=args.paged, page_size=args.page_size,
         n_pages=args.pages or None,
         paged_kernel=not args.paged_gather,
+        mesh=mesh, kv_shard=args.kv_shard,
+        dispatch_depth=args.dispatch_depth,
         scheduler=SchedulerConfig(
             prefill_bucket=args.prefill_bucket,
             prefill_chunk=args.prefill_chunk,
@@ -148,6 +226,12 @@ def main():
         engine.step()  # arrivals interleave with decoding
     completions = engine.run_until_drained()
     s = engine.stats()
+    if mesh is not None:
+        print(
+            f"serving mesh {dict(mesh.shape)} "
+            f"(kv_shard={args.kv_shard}, "
+            f"dispatch_depth={args.dispatch_depth})"
+        )
     print(
         f"drained {s['n_completed']} requests / "
         f"{s['n_generated']} tokens in {s['wall_s']:.2f}s "

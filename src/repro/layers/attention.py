@@ -52,6 +52,17 @@ through the table.  Multi-token chunked prefill always gathers.
 Positions past `pos` (stale pages, the PAGE_NULL trash page) are
 hidden by the same per-slot causal masking either way, so paged
 decode is bit-exact with the contiguous path.
+
+Multi-device serving (DESIGN.md §Serving ¶Multi-device): under a mesh
+profile the serving engine shards the cache arena along kv heads on
+the "model" axis.  The per-slot write helpers below are elementwise
+along the head axis, so they partition without collectives; the
+"kv_heads" constraints pin that layout through write and gather, and
+the fused paged kernel runs with a per-shard head range (shard_map in
+kernels/paged_attention.py).  Integer accumulation is exactly
+associative and the float softmax island is per-(row, head), so the
+sharded math is BIT-EXACT with single-device serving — parity is
+pinned token-for-token in tests/test_serving_sharded.py.
 """
 from __future__ import annotations
 
@@ -286,7 +297,12 @@ class QAttention:
                 k_all = _cache_write(cache["k"], k, pos)
                 v_all = _cache_write(cache["v"], v, pos)
                 cache = {"k": k_all, "v": v_all}
-            k, v = k_all, v_all
+            # serving under a mesh profile: pin the arena's kv-head
+            # sharding through the write and (paged) gather, so GSPMD
+            # neither replicates the returned cache nor round-trips the
+            # pools through a dense layout between steps
+            cache = _hint_kv_cache(cache)
+            k, v = hint(k_all, "kv_heads"), hint(v_all, "kv_heads")
         T = k.shape[2]
 
         kh = self._expand_kv(k) if S == 1 else hint(
@@ -392,16 +408,21 @@ class QAttention:
         page pools (kernels/paged_attention.py) — the dense logical
         (B, K, T, hd) view is never materialized.  The kernel returns
         the int32 P.V accumulator and the ctx requantization stays out
-        here, so the math is bit-exact with the gather path.  q/k/v:
+        here, so the math is bit-exact with the gather path.  Under a
+        serving mesh profile the kernel runs with a per-shard head
+        range (shard_map over the "model" axis — see
+        paged_attention_decode); the math per (slot, head) is
+        unchanged, so sharding keeps bit-exactness.  q/k/v:
         (B, ., 1, hd) int8 post-RoPE.  Returns (int32 wo-acc, cache)."""
-        from repro.kernels.paged_attention import (
-            paged_attention_decode_pallas,
-        )
+        from repro.kernels.paged_attention import paged_attention_decode
+        from repro.sharding.hints import profile_mesh
 
         pos_v, cache = _paged_write(cache, k, v, pos)
-        acc = paged_attention_decode_pallas(
+        cache = _hint_kv_cache(cache)
+        acc = paged_attention_decode(
             q[:, :, 0, :], cache["k"], cache["v"], cache["table"], pos_v,
-            score_scale=t["score_scale"], group=self.group)
+            score_scale=t["score_scale"], group=self.group,
+            mesh=profile_mesh())
         s_ctx = apply_rqt(acc[:, :, None, :], t["ctx_rqt"])
         B = q.shape[0]
         s_ctx = s_ctx.reshape(B, 1, self.n_heads * self.head_dim)
@@ -423,6 +444,19 @@ class QAttention:
             "wv": {"w": ("embed", "heads")},
             "wo": {"w": ("heads", "embed")},
         }
+
+
+def _hint_kv_cache(cache):
+    """Pin the serving arena's kv-head sharding on a cache dict's K/V
+    leaves (slot rows or page pools — both carry the head axis at
+    position 1, the "kv_heads" hint kind).  A no-op outside a mesh
+    profile, and for leaves the mesh's model axis cannot divide."""
+    from repro.sharding.hints import hint
+
+    return {
+        kk: hint(vv, "kv_heads") if kk in ("k", "v") else vv
+        for kk, vv in cache.items()
+    }
 
 
 def _positions(S: int, pos):

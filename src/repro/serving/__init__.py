@@ -12,7 +12,7 @@ from repro.serving.cache import (
     assert_integer_caches,
     float_cache_leaves,
 )
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import DispatchQueue, ServingEngine
 from repro.serving.request import (
     FINISH_LENGTH,
     FINISH_MAX_LEN,
@@ -25,6 +25,7 @@ from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 __all__ = [
     "Completion",
+    "DispatchQueue",
     "FINISH_LENGTH",
     "FINISH_MAX_LEN",
     "FINISH_STOP",

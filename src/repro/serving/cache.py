@@ -26,6 +26,15 @@ changes no step-function signature and still compiles exactly once.
 Physical page 0 is a trash page: free rows and unallocated logical
 blocks map to it, and per-slot masking hides whatever lands there.
 
+Multi-device (DESIGN.md §Serving ¶Multi-device): both arenas take an
+optional serving ``mesh`` (+ ``kv_shard``) and are then placed with
+explicit NamedShardings — KV leaves split along kv heads over the mesh
+"model" axis, page tables / slot metadata / recurrent state replicated
+(sharding/rules.arena_leaf_spec).  The ``*_shardings()`` methods expose
+the matching pytrees for the engine's explicitly-sharded dispatch jits,
+and the arenas' own scatter/gather jits pin the same shardings on
+their outputs so the layout survives every engine step.
+
 Prefill runs at batch 1 into a scratch cache of identical per-slot
 shape, then is scattered into the arena at the leased slot's batch row
 (SlotArena) or through the slot's page-table row (PagedArena).  The
@@ -132,10 +141,57 @@ def _probe_axes(lm, max_len: int):
     return treedef, jax.tree.leaves(s1), tuple(batch_axes), tuple(seq_axes)
 
 
-class SlotArena:
-    """Owns the cache arena + slot lifecycle (free -> leased -> free)."""
+def _arena_place(arena, kv_shard: bool):
+    """Compute the arena's leaf shardings and device_put its caches.
 
-    def __init__(self, lm, n_slots: int, max_len: int):
+    Returns the leaf-aligned NamedSharding list (None without a mesh).
+    With `kv_shard` each KV leaf splits along its kv-head axis on the
+    mesh "model" axis (sharding/rules.arena_leaf_spec — GQA-aware:
+    indivisible head counts degrade to replication); page tables, slot
+    metadata, and sequence-axis-free leaves (SSM recurrent state)
+    replicate.  Without `kv_shard` everything replicates, which gives
+    the mesh-but-unsharded ablation point.
+    """
+    if arena.mesh is None:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.sharding.rules import arena_shardings
+
+    leaves = jax.tree.leaves(arena.caches)
+    if kv_shard:
+        shs = arena_shardings(
+            arena.mesh,
+            [x.shape for x in leaves],
+            arena._batch_axes,
+            arena._seq_axes,
+        )
+    else:
+        shs = [NamedSharding(arena.mesh, P()) for _ in leaves]
+    arena.caches = jax.device_put(
+        arena.caches, jax.tree.unflatten(arena._treedef, shs)
+    )
+    return shs
+
+
+def _out_shardings(shardings) -> dict:
+    """jit kwargs pinning `shardings` on the outputs (empty off-mesh)."""
+    return {} if shardings is None else {"out_shardings": shardings}
+
+
+class SlotArena:
+    """Owns the cache arena + slot lifecycle (free -> leased -> free).
+
+    `mesh` + `kv_shard` (DESIGN.md §Serving ¶Multi-device): with a mesh
+    the arena is placed with explicit NamedShardings — KV leaves split
+    along kv heads on the "model" axis when `kv_shard`, everything
+    replicated otherwise — and every internal scatter/gather jit pins
+    the same shardings on its outputs, so the arena never silently
+    migrates layout between engine steps.
+    """
+
+    def __init__(self, lm, n_slots: int, max_len: int, *,
+                 mesh=None, kv_shard: bool = False):
         if max_len > lm.max_seq:
             raise ValueError(
                 f"max_len {max_len} exceeds model max_seq {lm.max_seq}"
@@ -144,7 +200,14 @@ class SlotArena:
         self.max_len = max_len
         self.caches = lm.init_caches(n_slots, max_len, Rep.ID)
 
-        self._treedef, _, self._batch_axes, _ = _probe_axes(lm, max_len)
+        (
+            self._treedef,
+            _,
+            self._batch_axes,
+            self._seq_axes,
+        ) = _probe_axes(lm, max_len)
+        self.mesh = mesh
+        self._shardings = _arena_place(self, kv_shard)
 
         def _scatter(arena, single, slot):
             la = jax.tree.leaves(arena)
@@ -155,7 +218,9 @@ class SlotArena:
             ]
             return jax.tree.unflatten(self._treedef, out)
 
-        self._scatter = jax.jit(_scatter)
+        self._scatter = jax.jit(
+            _scatter, **_out_shardings(self.cache_shardings())
+        )
 
         # chunked prefill: gather a compact row subset for the packed
         # dispatch, scatter the written rows back.  Slot indices are
@@ -175,8 +240,12 @@ class SlotArena:
                 )
             ]
 
-        self._gather_rows = jax.jit(_gather_rows)
-        self._scatter_rows = jax.jit(_scatter_rows)
+        self._gather_rows = jax.jit(
+            _gather_rows, **_out_shardings(self._shardings)
+        )
+        self._scatter_rows = jax.jit(
+            _scatter_rows, **_out_shardings(self._shardings)
+        )
 
         # slot bookkeeping (host-side)
         self._free = list(range(n_slots - 1, -1, -1))  # pop() -> slot 0
@@ -227,6 +296,23 @@ class SlotArena:
         self.owner[slot] = None
         self.lengths[slot] = 0
         self._free.append(slot)
+
+    # -- shardings ------------------------------------------------------
+    def cache_shardings(self):
+        """NamedSharding pytree matching `self.caches` (None off-mesh)."""
+        if self._shardings is None:
+            return None
+        return jax.tree.unflatten(self._treedef, self._shardings)
+
+    def decode_shardings(self):
+        """Shardings of decode_view() — the arena tree itself."""
+        return self.cache_shardings()
+
+    def prefill_shardings(self):
+        """Shardings of prefill_view(slots): the row gather keeps every
+        axis and the batch axis is never sharded, so the arena leaf
+        specs apply verbatim at any row count."""
+        return self.cache_shardings()
 
     # -- cache plumbing -------------------------------------------------
     def write_slot(self, slot: int, single_caches):
@@ -304,6 +390,9 @@ class PagedArena:
         max_len: int,
         page_size: int = 16,
         n_pages: int = 64,
+        *,
+        mesh=None,
+        kv_shard: bool = False,
     ):
         if max_len > lm.max_seq:
             raise ValueError(
@@ -340,6 +429,11 @@ class PagedArena:
                 shape[s_ax] = page_size
             leaves.append(jnp.zeros(shape, leaf.dtype))
         self.caches = jax.tree.unflatten(self._treedef, leaves)
+        # pool leaves swap (B, T) for (pages, page_size) but keep the
+        # kv-head axis in place, so the same structural rule shards
+        # them (sharding/rules.arena_leaf_spec on the pool shapes)
+        self.mesh = mesh
+        self._shardings = _arena_place(self, kv_shard)
 
         # Every paged leaf must live inside a {'k','v'} dict so the
         # decode step finds a page table next to it.
@@ -392,7 +486,7 @@ class PagedArena:
                 out.append(x.at[idx].set(z))
             return out
 
-        self._write = jax.jit(_write)
+        self._write = jax.jit(_write, **_out_shardings(self._shardings))
 
         # page-table lead dims: one kv dict per attention cache site,
         # each stacked under the same leading axes as its 'k' leaf
@@ -540,6 +634,31 @@ class PagedArena:
         self.committed_pages -= int(self._commit[slot])
         self._commit[slot] = 0
         self._free_slots.append(slot)
+
+    # -- shardings ------------------------------------------------------
+    def cache_shardings(self):
+        """NamedSharding pytree matching `self.caches` (None off-mesh)."""
+        if self._shardings is None:
+            return None
+        return jax.tree.unflatten(self._treedef, self._shardings)
+
+    def decode_shardings(self):
+        """Shardings of decode_view(): pool shardings with the injected
+        page tables REPLICATED — every shard needs the full table to
+        walk its own heads' pages (DESIGN.md §Serving ¶Multi-device:
+        only the kv-head axis splits; pages are head-complete)."""
+        tree = self.cache_shardings()
+        if tree is None:
+            return None
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        repl = NamedSharding(self.mesh, P())
+        return map_kv_dicts(tree, lambda d: {**d, "table": repl})
+
+    def prefill_shardings(self):
+        """Shardings of prefill_view(slots): same pools, same injected
+        tables — identical to the decode view at any row count."""
+        return self.decode_shardings()
 
     # -- cache plumbing -------------------------------------------------
     def write_slot(self, slot: int, single_caches):

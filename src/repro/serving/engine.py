@@ -41,17 +41,45 @@ Greedy sampling is argmax on int32 logits — no dequantization anywhere
 arena at construction).  Requests stream tokens through an optional
 `on_token` callback the moment they are decoded.
 
+Multi-device serving (DESIGN.md §Serving ¶Multi-device): with a
+`mesh`, the decode and chunked-prefill dispatches are jitted with
+EXPLICIT in/out shardings — tables and token/position vectors
+replicated, the cache arena placed by its own sharding views
+(`kv_shard=True` splits KV leaves along kv heads over the mesh "model"
+axis; serving/cache.py) — and traced under the mesh + hints profile so
+layer-level constraints and the per-shard-head paged kernel engage.
+Sharded serving is BIT-EXACT with single-device serving: the integer
+path's accumulations are associative and the softmax island is
+per-(row, head), so partitioning cannot reorder anything observable.
+
+Async dispatch (`dispatch_depth=1`, the `DispatchQueue`): the engine
+runs a one-step-deep pipeline — while step t's fused decode executes
+on the device, the host already runs step t+1's admission,
+`plan_chunks` packing, and chunk-dispatch enqueue, and only blocks
+(`np.asarray` on a (B,)-token array, the only forced sync) at token
+harvest.  The pipeline is bounded at ONE in-flight step by the
+autoregressive feedback: decode t+1's input tokens are decode t's
+argmax.  Depth 1 produces token-for-token the same output as the
+synchronous engine for row-independent families (each request's greedy
+chain depends only on its own slot), which the parity tests pin;
+request *timing* may shift by a step (admission sees slot releases one
+harvest later).
+
 Decode rows of free slots compute garbage that is never read; for pure
 dense/ssm/hybrid families rows are independent so active slots are
 bit-exact with the lockstep path.  MoE capacity routing couples rows
 (a garbage row can compete for expert capacity) — see DESIGN.md
-§Serving for the caveat.
+§Serving for the caveat (under async dispatch the same caveat covers
+the one-step admission shift).
 """
 
 from __future__ import annotations
 
+import collections
+import contextlib
+import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -76,6 +104,64 @@ from repro.serving.request import (
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 
+@dataclasses.dataclass
+class _InFlightDecode:
+    """One dispatched-but-unharvested fused decode step."""
+
+    tokens: Any  # device (n_slots,) int32 — the step's argmax
+    slots: List[int]  # active slots at dispatch time
+
+
+@dataclasses.dataclass
+class _InFlightChunk:
+    """One dispatched-but-unharvested chunked-prefill step."""
+
+    tokens: Any  # device (rows,) int32 — per-row last-index argmax
+    plan: List  # the (PrefillState, offset, n) triples dispatched
+
+
+class DispatchQueue:
+    """Host/device pipeline for the engine's fused decode dispatches
+    (DESIGN.md §Serving ¶Multi-device).
+
+    depth 0 — synchronous: every dispatch is harvested in the same
+    engine step (the pre-queue behavior, kept as the token-parity
+    oracle for depth 1).
+
+    depth 1 — double-buffered: the engine leaves one decode in flight
+    and overlaps the NEXT step's host work (admission, chunk packing,
+    chunk-dispatch enqueue) with it, harvesting only when the next
+    decode needs the tokens.  Deeper pipelines are rejected: decode
+    t+1's input IS decode t's argmax, so a second in-flight decode
+    would have to speculate tokens — out of scope for a bit-exact
+    serving engine.
+    """
+
+    def __init__(self, depth: int = 0):
+        if depth not in (0, 1):
+            raise ValueError(
+                "dispatch_depth must be 0 (synchronous) or 1 (the "
+                "autoregressive token feedback bounds the pipeline at "
+                f"one in-flight decode), got {depth}"
+            )
+        self.depth = depth
+        self._inflight: Deque[_InFlightDecode] = collections.deque()
+
+    @property
+    def pending(self) -> int:
+        return len(self._inflight)
+
+    def push(self, rec: _InFlightDecode):
+        if len(self._inflight) >= max(self.depth, 1):
+            raise RuntimeError("dispatch queue overfilled")
+        self._inflight.append(rec)
+
+    def drain(self, harvest: Callable[[_InFlightDecode], None]):
+        """Harvest every in-flight record (oldest first)."""
+        while self._inflight:
+            harvest(self._inflight.popleft())
+
+
 class ServingEngine:
     def __init__(
         self,
@@ -90,13 +176,39 @@ class ServingEngine:
         page_size: int = 16,
         n_pages: Optional[int] = None,
         paged_kernel: Optional[bool] = None,
+        mesh=None,
+        kv_shard: bool = False,
+        dispatch_depth: int = 0,
     ):
         if lm.cfg.input_mode != "tokens":
             raise ValueError(
                 "ServingEngine serves token LMs "
                 f"(input_mode={lm.cfg.input_mode!r})"
             )
+        if kv_shard and mesh is None:
+            raise ValueError(
+                "kv_shard=True needs a mesh "
+                "(launch.mesh.make_serving_mesh)"
+            )
+        if mesh is not None and "model" not in mesh.axis_names:
+            raise ValueError(
+                f'serving mesh needs a "model" axis, got {mesh.axis_names}'
+            )
         self.lm = lm
+        self.mesh = mesh
+        self.kv_shard = bool(kv_shard)
+        self.queue = DispatchQueue(dispatch_depth)
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            # weights stay replicated over the serving mesh (the
+            # weight-stationary serving layout): the arena — KV memory,
+            # the serving bottleneck — is what shards.  One placement
+            # at construction, so no per-step transfers.
+            repl = NamedSharding(mesh, P())
+            tables = jax.device_put(
+                tables, jax.tree.map(lambda _: repl, tables)
+            )
         self.tables = tables
         if paged:
             if n_pages is None:
@@ -109,9 +221,13 @@ class ServingEngine:
                 max_len=max_len,
                 page_size=page_size,
                 n_pages=n_pages,
+                mesh=mesh,
+                kv_shard=kv_shard,
             )
         else:
-            self.arena = SlotArena(lm, n_slots, max_len)
+            self.arena = SlotArena(
+                lm, n_slots, max_len, mesh=mesh, kv_shard=kv_shard
+            )
         assert_integer_caches(
             self.arena.caches,
             allow_ssm_state=lm.cfg.family in ("ssm", "hybrid"),
@@ -141,20 +257,51 @@ class ServingEngine:
 
             mode = "kernel" if self.paged_kernel else "gather"
             with variants.use_variants(paged_decode=mode):
-                return lm.decode_step(t, token, caches, pos)
-
-        self._decode = jax.jit(_decode_step)
+                logits, new_caches = lm.decode_step(t, token, caches, pos)
+            # greedy argmax stays on-device: the async dispatch queue
+            # harvests a (B,) token vector, never (B, 1, V) logits
+            return jnp.argmax(logits[:, 0, :], axis=-1), new_caches
 
         def _prefill_one(t, prompt, last_index):
             caches = lm.init_caches(1, max_len, Rep.ID)
             return lm.prefill(t, prompt, caches, last_index=last_index)
 
-        # compiles once per prompt-shape bucket (scheduler.bucket_len)
-        self._prefill = jax.jit(_prefill_one)
-        # the packed chunk dispatch: compile-cache keyed on its
-        # (row-bucket, prefill_chunk) shape — at most log2(n_slots)+1
-        # compilations regardless of workload raggedness
-        self._prefill_chunk = jax.jit(lm.prefill_chunk)
+        def _prefill_chunk_step(t, toks, view, start, last):
+            logits, rows = lm.prefill_chunk(t, toks, view, start, last)
+            return jnp.argmax(logits[:, 0, :], axis=-1), rows
+
+        if mesh is None:
+            self._decode = jax.jit(_decode_step)
+            # compiles once per prompt-shape bucket (bucket_len)
+            self._prefill = jax.jit(_prefill_one)
+            # the packed chunk dispatch: compile-cache keyed on its
+            # (row-bucket, prefill_chunk) shape — at most
+            # log2(n_slots)+1 compilations regardless of raggedness
+            self._prefill_chunk = jax.jit(_prefill_chunk_step)
+        else:
+            # explicit in/out shardings (DESIGN.md §Serving
+            # ¶Multi-device): replicated tables/tokens/positions are
+            # prefix-broadcast over their pytrees; the arena supplies
+            # the cache-view shardings, and pinning them on the outputs
+            # keeps the arena's layout fixed across steps instead of
+            # drifting with GSPMD propagation
+            dv_sh = self.arena.decode_shardings()
+            pv_sh = self.arena.prefill_shardings()
+            self._decode = jax.jit(
+                _decode_step,
+                in_shardings=(repl, repl, dv_sh, repl),
+                out_shardings=(repl, dv_sh),
+            )
+            self._prefill = jax.jit(
+                _prefill_one,
+                in_shardings=(repl, repl, repl),
+                out_shardings=(repl, repl),
+            )
+            self._prefill_chunk = jax.jit(
+                _prefill_chunk_step,
+                in_shardings=(repl, repl, pv_sh, repl, repl),
+                out_shardings=(repl, pv_sh),
+            )
         # THE prefill dispatch decision (single place; see module doc):
         #   chunked  — dense, prefill_chunk > 0: packed fixed-shape
         #              chunk dispatch straight into the arena
@@ -212,75 +359,132 @@ class ServingEngine:
     # -- one scheduler iteration ---------------------------------------
     def step(self) -> bool:
         """Admit + chunk-prefill + fused-decode once.  Returns False if
-        idle."""
+        idle.  With `dispatch_depth=1` the decode dispatched here is
+        harvested by the NEXT step (the DispatchQueue pipeline)."""
         if self._t_first is None:
             self._t_first = time.perf_counter()
-        progressed = False
+        if self.queue.depth > 0:
+            return self._step_async()
+        return self._step_sync()
+
+    def _step_sync(self) -> bool:
+        """The synchronous engine step (dispatch_depth=0) — every
+        device dispatch is harvested before the step returns; the
+        token-parity oracle for the async path."""
+        progressed = self._admit_pending()
+        if self.prefilling:
+            self._harvest_prefill_chunk(self._dispatch_prefill_chunk())
+            progressed = True
+        self._tick_stats()
+        if self.active:
+            self._harvest_decode(self._dispatch_decode())
+            progressed = True
+        self._t_last = time.perf_counter()
+        return progressed
+
+    def _step_async(self) -> bool:
+        """One-step-deep pipelined step (dispatch_depth=1): the host
+        work below the harvest line — admission, chunk packing, the
+        chunk-dispatch enqueue — overlaps the decode dispatched by the
+        PREVIOUS step, which is still executing on the device.  The
+        only forced sync is the (B,)-token harvest."""
+        progressed = self.queue.pending > 0
+        # (1) host scheduling + prefill enqueue: overlaps the in-flight
+        # decode.  Admission therefore sees slot releases one harvest
+        # later than the sync engine — a timing shift only; per-request
+        # tokens are pinned equal by the parity tests.
+        progressed |= self._admit_pending()
+        chunk_rec = None
+        if self.prefilling:
+            chunk_rec = self._dispatch_prefill_chunk()
+            progressed = True
+        # (2) token harvest: the pipeline's one blocking point
+        self.queue.drain(self._harvest_decode)
+        if chunk_rec is not None:
+            # graduation feeds this step's decode, exactly like sync
+            self._harvest_prefill_chunk(chunk_rec)
+        self._tick_stats()
+        # (3) dispatch this step's decode; the next step harvests it
+        if self.active:
+            self.queue.push(self._dispatch_decode())
+            progressed = True
+        self._t_last = time.perf_counter()
+        return progressed
+
+    def _admit_pending(self) -> bool:
+        """FCFS admission up to max_prefills_per_step (host-side: the
+        arena predicates read host counters, so admission never waits
+        on the device)."""
 
         def fits(req: Request) -> bool:
             return self.arena.can_admit(
                 req.prompt_len, req.prompt_len + req.max_new_tokens
             )
 
+        progressed = False
         for _ in range(self.sched.cfg.max_prefills_per_step):
             req = self.sched.pop_if(fits)
             if req is None:
                 break
             self._admit(req)  # consumes arena capacity `fits` re-reads
             progressed = True
+        return progressed
 
-        if self.prefilling:
-            self._prefill_chunk_step()
-            progressed = True
-
+    def _tick_stats(self):
         self._occupancy_sum += self.arena.n_leased / self.arena.n_slots
         self._max_active = max(self._max_active, len(self.active))
         self._steps += 1
 
-        if self.active:
-            progressed = True
-            B = self.arena.n_slots
-            toks = np.zeros((B, 1), np.int32)
-            # rows without an active decode (free slots, slots still
-            # mid-prefill) are parked at INACTIVE_POS: their cache
-            # writes mask to no-ops, so the fused step can never
-            # clobber a neighbor's prefilled positions
-            pos = np.full((B,), INACTIVE_POS, np.int32)
-            for slot, st in self.active.items():
-                toks[slot, 0] = st.last_token
-                pos[slot] = st.pos
-                # paged arena: allocate the page holding `pos` before
-                # the decode that writes there (no-op for SlotArena)
-                self.arena.touch(slot, st.pos)
-            logits, new_caches = self._decode(
+    def _dispatch_decode(self) -> _InFlightDecode:
+        """Enqueue one fused decode over every active slot (async wrt
+        the host: jax returns futures; nothing blocks here)."""
+        B = self.arena.n_slots
+        toks = np.zeros((B, 1), np.int32)
+        # rows without an active decode (free slots, slots still
+        # mid-prefill) are parked at INACTIVE_POS: their cache
+        # writes mask to no-ops, so the fused step can never
+        # clobber a neighbor's prefilled positions
+        pos = np.full((B,), INACTIVE_POS, np.int32)
+        for slot, st in self.active.items():
+            toks[slot, 0] = st.last_token
+            pos[slot] = st.pos
+            # paged arena: allocate the page holding `pos` before
+            # the decode that writes there (no-op for SlotArena)
+            self.arena.touch(slot, st.pos)
+        with self._dispatch_ctx():
+            nxt, new_caches = self._decode(
                 self.tables,
                 jnp.asarray(toks),
                 self.arena.decode_view(),
                 jnp.asarray(pos),
             )
-            self.arena.absorb(new_caches)
-            nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
-            now = time.perf_counter()
-            for slot in list(self.active):
-                st = self.active[slot]
-                tok = int(nxt[slot])
-                st.tokens.append(tok)
-                st.last_token = tok
-                st.pos += 1
-                self.arena.advance(slot)
-                self._emit(st.request, tok)
-                self._maybe_finish(st, now)
+        self.arena.absorb(new_caches)
+        return _InFlightDecode(tokens=nxt, slots=list(self.active))
 
-        self._t_last = time.perf_counter()
-        return progressed
+    def _harvest_decode(self, rec: _InFlightDecode):
+        """Block on the step's token vector and advance host state.
+        Slots in `rec.slots` cannot have been released in between: the
+        only release site is this harvest."""
+        nxt = np.asarray(rec.tokens)  # the pipeline's blocking point
+        now = time.perf_counter()
+        for slot in rec.slots:
+            st = self.active[slot]
+            tok = int(nxt[slot])
+            st.tokens.append(tok)
+            st.last_token = tok
+            st.pos += 1
+            self.arena.advance(slot)
+            self._emit(st.request, tok)
+            self._maybe_finish(st, now)
 
     def run_until_drained(
         self, max_steps: int = 1_000_000
     ) -> List[Completion]:
-        """Step until the queue, in-flight prefills, and every slot are
-        empty."""
+        """Step until the queue, in-flight prefills, in-flight decode
+        dispatches, and every slot are empty."""
         steps = 0
-        while self.sched.n_pending or self.prefilling or self.active:
+        while (self.sched.n_pending or self.prefilling or self.active
+               or self.queue.pending):
             if steps >= max_steps:
                 raise RuntimeError(f"not drained after {max_steps} steps")
             self.step()
@@ -288,6 +492,24 @@ class ServingEngine:
         return list(self.completed)
 
     # -- internals ------------------------------------------------------
+    def _dispatch_ctx(self):
+        """Trace-time context for the jitted dispatches: the serving
+        mesh + hints profile (layer constraints, the per-shard-head
+        paged kernel).  A no-op without a mesh — and in the
+        mesh-but-unsharded ablation (kv_shard=False): there the arena
+        is pinned replicated, so head-sharding constraints inside the
+        step would only buy a full reshard round-trip per dispatch.
+        Entering per call is cheap; only the tracing call of each
+        shape reads it."""
+        if self.mesh is None or not self.kv_shard:
+            return contextlib.nullcontext()
+        from repro.sharding.hints import use_profile
+
+        stack = contextlib.ExitStack()
+        stack.enter_context(self.mesh)
+        stack.enter_context(use_profile(self.mesh))
+        return stack
+
     def _admit(self, req: Request):
         """Lease a slot and start the request's prefill (mode-dependent:
         chunked admission only enqueues; whole-prompt prefills now)."""
@@ -316,20 +538,22 @@ class ServingEngine:
         padded[0, :P] = req.prompt
         # first token: greedy on the TRUE last prompt position (padded
         # positions after it are causally invisible to it)
-        logits, single = self._prefill(
-            self.tables, jnp.asarray(padded), jnp.int32(P - 1)
-        )
+        with self._dispatch_ctx():
+            logits, single = self._prefill(
+                self.tables, jnp.asarray(padded), jnp.int32(P - 1)
+            )
         first = int(jnp.argmax(logits[0, 0]))
         self.arena.write_slot(slot, single)
         now = time.perf_counter()
         self._start_decoding(req, slot, first, now)
 
-    def _prefill_chunk_step(self):
+    def _dispatch_prefill_chunk(self) -> _InFlightChunk:
         """One packed chunked-prefill dispatch: write the next chunk of
         up to max_chunks_per_step prefilling requests into the arena at
-        their per-slot offsets, and graduate rows whose final chunk
-        completed to decoding with the first token from the dispatch's
-        per-row last-index logits.
+        their per-slot offsets.  Harvesting (graduating rows whose
+        final chunk completed, with the first token from the dispatch's
+        per-row last-index logits) is split off so the async path can
+        enqueue this behind an in-flight decode without syncing.
 
         The dispatch is COMPACT: only the participating slots' cache
         rows ride along (arena.prefill_view), its row count bucketed to
@@ -364,17 +588,23 @@ class ServingEngine:
             # dispatch writes there (no-op for SlotArena; the padded
             # tail of a final partial chunk lands on the trash page)
             self.arena.touch_range(st.slot, off, off + n)
-        logits, new_rows = self._prefill_chunk(
-            self.tables,
-            jnp.asarray(toks),
-            self.arena.prefill_view(slots),
-            jnp.asarray(start),
-            jnp.asarray(last),
-        )
+        with self._dispatch_ctx():
+            nxt, new_rows = self._prefill_chunk(
+                self.tables,
+                jnp.asarray(toks),
+                self.arena.prefill_view(slots),
+                jnp.asarray(start),
+                jnp.asarray(last),
+            )
         self.arena.absorb_rows(slots, new_rows)
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        return _InFlightChunk(tokens=nxt, plan=plan)
+
+    def _harvest_prefill_chunk(self, rec: _InFlightChunk):
+        """Advance chunk cursors; graduate rows whose final chunk just
+        completed (their decode starts the same step, like sync)."""
+        nxt = np.asarray(rec.tokens)
         now = time.perf_counter()
-        for r, (st, off, n) in enumerate(plan):
+        for r, (st, off, n) in enumerate(rec.plan):
             self.arena.advance(st.slot, n)
             if off + n < st.request.prompt_len:
                 st.offset = off + n  # carried into the next dispatch
@@ -439,16 +669,18 @@ class ServingEngine:
         untouched.  Requires an idle engine.  Whole-prompt prefill
         compiles per prompt-length bucket as requests arrive and is not
         warmed here (lengths are workload-dependent)."""
-        if self.sched.n_pending or self.prefilling or self.active:
+        if (self.sched.n_pending or self.prefilling or self.active
+                or self.queue.pending):
             raise RuntimeError("warmup on a non-idle engine")
         B = self.arena.n_slots
         parked = np.full((B,), INACTIVE_POS, np.int32)
-        jax.block_until_ready(self._decode(
-            self.tables,
-            jnp.zeros((B, 1), jnp.int32),
-            self.arena.decode_view(),
-            jnp.asarray(parked),
-        ))
+        with self._dispatch_ctx():
+            jax.block_until_ready(self._decode(
+                self.tables,
+                jnp.zeros((B, 1), jnp.int32),
+                self.arena.decode_view(),
+                jnp.asarray(parked),
+            ))
         if self._prefill_mode != "chunked":
             return
         C = self.sched.cfg.prefill_chunk
@@ -456,13 +688,14 @@ class ServingEngine:
         while True:
             rows = min(rows, B)
             slots = list(range(rows))
-            _, row_caches = self._prefill_chunk(
-                self.tables,
-                jnp.zeros((rows, C), jnp.int32),
-                self.arena.prefill_view(slots),
-                jnp.asarray(parked[:rows]),
-                jnp.zeros((rows,), jnp.int32),
-            )
+            with self._dispatch_ctx():
+                _, row_caches = self._prefill_chunk(
+                    self.tables,
+                    jnp.zeros((rows, C), jnp.int32),
+                    self.arena.prefill_view(slots),
+                    jnp.asarray(parked[:rows]),
+                    jnp.zeros((rows,), jnp.int32),
+                )
             # identity round-trip (every write was masked): warms the
             # scatter-back compile for this row bucket too
             self.arena.absorb_rows(slots, row_caches)
@@ -475,7 +708,8 @@ class ServingEngine:
         """Zero run statistics and the completion log (e.g. after a
         warmup workload that pre-compiled the jit'd steps).  Requires
         an idle engine — in-flight state would skew the next window."""
-        if self.sched.n_pending or self.prefilling or self.active:
+        if (self.sched.n_pending or self.prefilling or self.active
+                or self.queue.pending):
             raise RuntimeError("reset_stats on a non-idle engine")
         self.completed.clear()
         self._steps = 0
@@ -507,6 +741,12 @@ class ServingEngine:
                 self._occupancy_sum / self._steps if self._steps else 0.0
             ),
             "max_active": self._max_active,
+            "dispatch_depth": self.queue.depth,
+            "mesh_devices": (
+                int(np.prod(list(dict(self.mesh.shape).values())))
+                if self.mesh is not None else 1
+            ),
+            "kv_shard": self.kv_shard,
         }
         out.update(self.arena.stats())
         return out

@@ -30,6 +30,17 @@ shares one dispatch instead of queueing B=1 prefills.  The packing
 policy lives in `plan_chunks`: FIFO by admission order, one chunk per
 request per step (chunks of one request are sequential by definition).
 
+Async dispatch (`ServingEngine(dispatch_depth=1)`, DESIGN.md §Serving
+¶Multi-device): every decision this module makes — `pop_if` admission,
+`plan_chunks` packing — reads host-side state only (queue order, arena
+counters, chunk cursors), never a device value.  That is what lets the
+engine's DispatchQueue run the whole scheduling pass for step t+1 while
+step t's fused decode is still executing on the device: the scheduler
+needs no token to decide, so the only forced synchronization left is
+the engine's token harvest.  Under that overlap admission sees slot
+releases one harvest later than the synchronous engine — a pure timing
+shift (per-request tokens are pinned identical by the parity tests).
+
 Whole-prompt mode (`prefill_chunk` == 0, and always for non-dense
 families): prompts are right-padded to a shape *bucket*
 (`prefill_bucket` multiple) before a B=1 prefill, so the number of

@@ -20,6 +20,14 @@ def _mesh():
     return getattr(_STATE, "mesh", None)
 
 
+def profile_mesh():
+    """The active profile's mesh (None outside a profile) — layer code
+    that needs more than a constraint (e.g. the shard_map around the
+    paged-attention kernel, kernels/paged_attention.py) reads it here
+    instead of growing a mesh parameter through every signature."""
+    return _mesh()
+
+
 @contextlib.contextmanager
 def use_profile(mesh):
     prev = getattr(_STATE, "mesh", None)
@@ -54,6 +62,12 @@ _KINDS = {
     "batch0": [(0, None)],      # shard dim 0 on (pod, data) only
     "act_bs_only": [(0, None)],  # residual without seq sharding (MoE
                                  # blocks: avoids the SP<->EP reshard)
+    "kv_heads": [(None, 1)],    # serving KV cache (B, K, T, hd) or page
+                                # pool (P, K, ps, hd): kv heads on model,
+                                # batch/pages replicated — keeps the
+                                # arena's layout pinned through the
+                                # per-slot write and the paged gather
+                                # (DESIGN.md §Serving ¶Multi-device)
 }
 
 

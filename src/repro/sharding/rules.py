@@ -1,6 +1,6 @@
 """Logical-axis sharding rules: param-tree paths -> PartitionSpec.
 
-2-D FSDP x TP layout (DESIGN.md §4):
+2-D FSDP x TP layout (DESIGN.md §Sharding):
   batch           -> ("pod","data")    activations / tokens
   vocab/heads/mlp/experts -> "model"   tensor & expert parallelism
   embed (weight d_model dim) -> "data" FSDP weight sharding
@@ -11,6 +11,16 @@ hit wins), then left-padded with None for stacked-layer leading dims.
 This path-based mapping covers float params, FQ qstate, ID integer
 tables, and optimizer moment trees (which reuse param paths) with one
 rule set — no per-layer axes plumbing.
+
+Serving cache arenas (repro.serving, DESIGN.md §Serving ¶Multi-device)
+use the STRUCTURAL rules at the bottom instead of path matching: the
+arenas discover each cache leaf's batch/sequence axis, and
+`arena_leaf_spec` maps that to "kv heads on the model axis, everything
+else replicated" — GQA-aware (it is the KV-head axis that shards, so a
+mesh wider than n_kv_heads degrades to replication rather than
+splitting a head) and layout-agnostic (contiguous slot rows and paged
+pools share one rule because both keep the head axis just before the
+sequence axis).
 """
 from __future__ import annotations
 
@@ -156,6 +166,54 @@ def cache_spec(mesh, ndim: int) -> P:
     spec[-4] = b       # batch
     spec[-2] = "model"  # sequence
     return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# serving-arena cache rules (structural, not path-based)
+# ---------------------------------------------------------------------------
+
+
+def kv_head_axis(batch_axis: int, seq_axis) -> Optional[int]:
+    """KV-head axis of an attention cache leaf, or None.
+
+    Every attention cache layout the model zoo produces keeps the head
+    axis immediately BEFORE the sequence axis — (..., B, K, T, hd) for
+    contiguous slot rows and (..., n_pages + 1, K, page_size, hd) for
+    paged pools, where the arena's structural probe reports the same
+    (batch_axis, seq_axis) pair for both.  Leaves with no sequence axis
+    (SSM recurrent state) have no head axis to shard.
+    """
+    if seq_axis is None:
+        return None
+    h_ax = seq_axis - 1
+    return h_ax if h_ax > batch_axis else None
+
+
+def arena_leaf_spec(shape, batch_axis: int, seq_axis, mesh) -> P:
+    """PartitionSpec for one serving-arena cache leaf: KV heads on the
+    mesh "model" axis, everything else replicated.
+
+    Replication is deliberate for the non-KV leaves (DESIGN.md §Serving
+    ¶Multi-device): the page table and per-slot metadata are tiny int32
+    host mirrors every shard needs in full, and the SSM recurrent state
+    is per-slot, not a KV cache.  `sanitize_spec` degrades a KV leaf to
+    replication when the model axis does not divide n_kv_heads — a
+    GQA-aware fallback, never a partial head split."""
+    h_ax = kv_head_axis(batch_axis, seq_axis)
+    if h_ax is None:
+        return P()
+    spec = [None] * len(shape)
+    spec[h_ax] = "model"
+    return sanitize_spec(P(*spec), shape, mesh)
+
+
+def arena_shardings(mesh, shapes, batch_axes, seq_axes):
+    """NamedShardings for a serving arena's cache leaves (leaf-list
+    aligned with the arena's flattened pytree)."""
+    return [
+        NamedSharding(mesh, arena_leaf_spec(s, b, q, mesh))
+        for s, b, q in zip(shapes, batch_axes, seq_axes)
+    ]
 
 
 def caches_sharding(caches, mesh):

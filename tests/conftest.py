@@ -1,0 +1,16 @@
+"""Force a multi-device host platform for the whole test session.
+
+The multi-device serving tests (test_serving_sharded.py) need several
+XLA devices on a CPU runner; the device count locks at jax's first
+backend init, so the flag must be set here — conftest imports before
+any test module — rather than inside the test file (the same trick
+launch/dryrun.py uses at 512 devices).  Existing single-device tests
+are unaffected: uncommitted arrays still land on device 0.
+"""
+import os
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 " + _flags
+    )

@@ -1,0 +1,116 @@
+"""CI docs-consistency gate: DESIGN.md references in src/ must resolve.
+
+The source tree cites its design document as `DESIGN.md §<section>`
+(optionally `¶<paragraph>` for a subsection).  Sections drift — §4 once
+covered sharding, now it is the training side — and a stale citation
+is worse than none: it sends the reader to the wrong contract.  This
+script extracts every such reference from src/**/*.py and fails (exit
+1) unless the section (and, when given, a matching subsection heading)
+exists in DESIGN.md.
+
+Anchors recognized in DESIGN.md:
+  `## §Name ...`        top-level sections  (§1, §Serving, §Sharding, ...)
+  `- **§3.2 Title**`    numbered formalism bullets inside §3
+  `### Title`           subsection headings, owned by the enclosing §
+
+A `¶name` reference matches a subsection when the cited text starts
+with the heading title or vice versa (citations may trail into prose:
+"¶Paged KV parity" still anchors at "Paged KV").
+
+  python tools/check_design_refs.py [--design DESIGN.md] [--src src]
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+SECTION_RE = re.compile(r"^##\s+§([A-Za-z0-9][A-Za-z0-9.\-]*)", re.M)
+BULLET_RE = re.compile(r"\*\*§([0-9]+(?:\.[0-9]+)+)\b")
+SUBSECTION_RE = re.compile(r"^###\s+(.+?)\s*$", re.M)
+REF_RE = re.compile(
+    r"DESIGN(?:\.md)?\s+§([A-Za-z0-9][A-Za-z0-9.\-]*)"
+    r"(?:\s+¶([A-Za-z0-9][A-Za-z0-9 \-]*))?"
+)
+
+
+def parse_design(text: str):
+    """-> (sections set, {section: [subsection titles]})."""
+    sections = set()
+    subs: dict = {}
+    current = None
+    for line in text.splitlines():
+        m = SECTION_RE.match(line)
+        if m:
+            current = m.group(1)
+            sections.add(current)
+            subs.setdefault(current, [])
+            continue
+        m = SUBSECTION_RE.match(line)
+        if m and current is not None:
+            subs[current].append(m.group(1))
+    sections.update(BULLET_RE.findall(text))
+    return sections, subs
+
+
+def check_file(path: pathlib.Path, sections, subs):
+    text = path.read_text()
+    failures = []
+    for m in REF_RE.finditer(text):
+        line = text.count("\n", 0, m.start()) + 1
+        sec = m.group(1).rstrip(".")
+        para = (m.group(2) or "").strip()
+        if sec not in sections:
+            failures.append(
+                f"{path}:{line}: DESIGN.md §{sec} does not exist"
+            )
+            continue
+        if not para:
+            continue
+        titles = subs.get(sec, [])
+        if not any(
+            para.startswith(t) or t.startswith(para) for t in titles
+        ):
+            failures.append(
+                f"{path}:{line}: DESIGN.md §{sec} has no ¶{para} "
+                f"(subsections: {titles or 'none'})"
+            )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--design", default="DESIGN.md")
+    ap.add_argument("--src", default="src")
+    args = ap.parse_args()
+
+    sections, subs = parse_design(
+        pathlib.Path(args.design).read_text()
+    )
+    n_refs, failures = 0, []
+    for path in sorted(pathlib.Path(args.src).rglob("*.py")):
+        if "__pycache__" in path.parts:
+            continue
+        text = path.read_text()
+        n_refs += len(REF_RE.findall(text))
+        failures += check_file(path, sections, subs)
+
+    print(
+        f"checked {n_refs} DESIGN.md references against "
+        f"{len(sections)} sections"
+    )
+    if n_refs == 0:
+        print("no references found — the extractor regex is broken")
+        return 1
+    if failures:
+        print("\nstale DESIGN.md references:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("all references resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
