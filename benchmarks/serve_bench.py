@@ -28,10 +28,20 @@ partitioning/pipeline OVERHEAD (no real parallel speedup exists on one
 machine), which is exactly what the gate should hold flat; token parity
 between all three variants is asserted (DESIGN.md §Serving
 ¶Multi-device).
+and (h) telemetry_overhead: the SAME decode-heavy paged workload with
+telemetry off (the NullTelemetry default) vs on (a buffering
+`Telemetry` sink) — token parity asserted (telemetry is bit-neutral by
+construction, DESIGN.md §Observability ¶Bit-neutrality) and the
+off/on tok/s ratio recorded so the enabled hooks' cost stays visible;
+both variants ride the gated trajectory.  With --trace-out /
+--metrics-out the telemetry-on engine's lifecycle trace (JSONL) and
+step-phase metrics (JSON) are exported — CI runs
+tools/trace_summary.py over them as a smoke check and uploads both as
+artifacts.
 Emits BENCH_serving.json so CI can track the trajectory
 (.github/workflows/ci.yml `bench` job +
 benchmarks/check_serving_regression.py, which gates tok/s AND the
-mixed-workload TTFT percentiles).
+mixed-workload TTFT percentiles AND steady-state p95 ITL).
 
   PYTHONPATH=src python benchmarks/serve_bench.py --reduced
 """
@@ -51,6 +61,7 @@ if "xla_force_host_platform_device_count" not in os.environ.get(
     )
 
 import argparse
+import gc
 import json
 import time
 
@@ -58,7 +69,7 @@ import numpy as np
 
 from repro.launch.mesh import make_serving_mesh
 from repro.launch.serve import deploy_model, serve_batch
-from repro.serving import SchedulerConfig, ServingEngine
+from repro.serving import SchedulerConfig, ServingEngine, Telemetry
 
 
 def bench_lockstep(lm, tables, prompts, gen, slots):
@@ -123,11 +134,13 @@ def bench_engine(
     collect_tokens=None,
     chunk=None,
     ttft_percentiles=False,
+    itl_percentiles=False,
     repeats=1,
     paged_kernel=None,
     mesh=None,
     kv_shard=False,
     dispatch_depth=0,
+    telemetry=None,
 ):
     sched_kw = {"prefill_bucket": bucket,
                 "max_prefills_per_step": max_prefills}
@@ -138,6 +151,7 @@ def bench_engine(
         paged=paged, page_size=page_size, n_pages=n_pages,
         paged_kernel=paged_kernel,
         mesh=mesh, kv_shard=kv_shard, dispatch_depth=dispatch_depth,
+        telemetry=telemetry,
         scheduler=SchedulerConfig(**sched_kw))
     # warm THIS engine's jit wrappers (every chunk row bucket + the
     # fused decode via engine.warmup, one whole-prompt prefill compile
@@ -156,6 +170,12 @@ def bench_engine(
     # sub-second windows are too noisy for a CI gate on tail latency
     runs = []
     for _ in range(max(1, repeats)):
+        # start every repeat of every lane from a freshly collected
+        # heap: a generational GC pass landing mid-window otherwise
+        # charges one lane tens of ms the other didn't pay — on this
+        # long-lived jax-heavy process a gen-2 pause dwarfs any real
+        # per-step cost difference being measured
+        gc.collect()
         eng.reset_stats()
         ids = [
             eng.submit(prompt, max_new_tokens=gen) for prompt, gen in workload
@@ -185,6 +205,12 @@ def bench_engine(
     if ttft_percentiles:
         out["p50_ttft_s"] = s["p50_ttft_s"]
         out["p95_ttft_s"] = s["p95_ttft_s"]
+    if itl_percentiles:
+        # steady-state inter-token latency (DESIGN.md §Observability);
+        # p95 rides the normalized regression gate next to TTFT
+        out["p50_itl_s"] = s["p50_itl_s"]
+        out["p95_itl_s"] = s["p95_itl_s"]
+        out["p99_itl_s"] = s["p99_itl_s"]
     if paged:
         out["max_pages_in_use"] = s["max_pages_in_use"]
     return out
@@ -266,6 +292,7 @@ def bench_paged_kernel_vs_gather(
         max_prefills=2 * slots,
         paged_kernel=True,
         collect_tokens=kernel_tokens,
+        itl_percentiles=True,
         repeats=3,
     )
     gather = bench_engine(
@@ -280,6 +307,7 @@ def bench_paged_kernel_vs_gather(
         max_prefills=2 * slots,
         paged_kernel=False,
         collect_tokens=gather_tokens,
+        itl_percentiles=True,
         repeats=3,
     )
     assert kernel_tokens == gather_tokens, "kernel/gather divergence"
@@ -314,7 +342,7 @@ def bench_kv_shard_vs_single(
     single_toks, shard_toks, async_toks = [], [], []
     common = dict(
         paged=True, page_size=page_size, max_prefills=2 * slots,
-        repeats=3,
+        itl_percentiles=True, repeats=3,
     )
     single = bench_engine(
         lm, tables, workload, slots, max_len, bucket,
@@ -337,6 +365,60 @@ def bench_kv_shard_vs_single(
         "shard_to_single": (
             sharded["tok_s"] / single["tok_s"] if single["tok_s"] else 0.0
         ),
+    }
+
+
+def bench_telemetry_overhead(
+    lm, tables, rng, *, slots, max_len, page_size, bucket,
+    trace_out="", metrics_out="",
+):
+    """Telemetry cost + bit-neutrality on one decode-heavy paged
+    workload: the NullTelemetry default vs a buffering `Telemetry`
+    sink recording the full lifecycle trace and per-step spans.  Both
+    variants' tok/s ride the gated trajectory (a hook creeping onto
+    the hot path shows up as the `on` lane regressing while `off`
+    holds), and the off/on ratio is recorded directly; tokens must
+    agree because telemetry reads host state only
+    (DESIGN.md §Observability ¶Bit-neutrality)."""
+    p_len = max(1, max_len // 8)
+    gen = max_len - p_len
+    workload = [
+        (rng.integers(0, lm.cfg.vocab, size=(p_len,)), gen)
+        for _ in range(2 * slots)
+    ]
+    tel = Telemetry()
+    off_toks, on_toks = [], []
+    common = dict(
+        paged=True, page_size=page_size, max_prefills=2 * slots,
+        itl_percentiles=True, repeats=3,
+    )
+    off = bench_engine(
+        lm, tables, workload, slots, max_len, bucket,
+        collect_tokens=off_toks, **common)
+    on = bench_engine(
+        lm, tables, workload, slots, max_len, bucket,
+        telemetry=tel, collect_tokens=on_toks, **common)
+    assert on_toks == off_toks, "telemetry broke bit-neutrality"
+    if trace_out:
+        tel.export_trace(trace_out)
+    if metrics_out:
+        tel.export_metrics(metrics_out)
+    m = tel.metrics()
+    return {
+        "requests": len(workload), "prompt_len": p_len, "gen": gen,
+        "off": off, "on": on,
+        # > 1.0 means the enabled hooks cost throughput; the <5%
+        # budget (DESIGN.md §Observability ¶Overhead budget) is
+        # asserted by tests, not here — single CI runs are too noisy
+        # for a hard cut at that margin
+        "overhead_ratio": (
+            off["tok_s"] / on["tok_s"] if on["tok_s"] else 0.0
+        ),
+        "n_events": m["n_events"],
+        "n_steps": m["n_steps"],
+        "phase_mean_s": m["phase_mean_s"],
+        "compile_hits": m["compile_hits"],
+        "compile_misses": m["compile_misses"],
     }
 
 
@@ -371,6 +453,7 @@ def bench_mixed(lm, tables, rng, *, slots, max_len, chunk, bucket):
         chunk=0,
         collect_tokens=whole_tokens,
         ttft_percentiles=True,
+        itl_percentiles=True,
         repeats=5,
     )
     chunked = bench_engine(
@@ -384,6 +467,7 @@ def bench_mixed(lm, tables, rng, *, slots, max_len, chunk, bucket):
         chunk=chunk,
         collect_tokens=chunk_tokens,
         ttft_percentiles=True,
+        itl_percentiles=True,
         repeats=5,
     )
     assert chunk_tokens == whole_tokens, "chunked/whole token divergence"
@@ -408,6 +492,13 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument(
+        "--trace-out", default="",
+        help="export the telemetry-overhead bench's lifecycle trace "
+        "as JSONL here (tools/trace_summary.py reads it)")
+    ap.add_argument(
+        "--metrics-out", default="",
+        help="export its aggregated step-phase metrics as JSON here")
     args = ap.parse_args()
 
     max_len = args.prompt_len + args.gen
@@ -443,17 +534,18 @@ def main():
             lm, tables, prompts, args.gen, args.slots),
         "engine_uniform": bench_engine(
             lm, tables, uniform, args.slots, max_len,
-            args.prefill_bucket, repeats=3),
+            args.prefill_bucket, itl_percentiles=True, repeats=3),
         "engine_ragged": bench_engine(
             lm, tables, ragged, args.slots, max_len,
-            args.prefill_bucket, repeats=3),
+            args.prefill_bucket, itl_percentiles=True, repeats=3),
         # chunk=0 twin of engine_ragged: keeps the whole-prompt oracle's
         # throughput on the gated trajectory, so the chunked default's
         # per-chunk dispatch overhead stays measured instead of being
         # silently absorbed into a re-recorded baseline
         "engine_ragged_whole": bench_engine(
             lm, tables, ragged, args.slots, max_len,
-            args.prefill_bucket, repeats=3, chunk=0),
+            args.prefill_bucket, itl_percentiles=True, repeats=3,
+            chunk=0),
         "paged_vs_slot": bench_paged_vs_slot(
             lm, tables, rng, slots=args.slots, max_len=max_len,
             page_size=args.page_size, bucket=args.prefill_bucket),
@@ -466,6 +558,10 @@ def main():
         "mixed_ttft": bench_mixed(
             lm, tables, rng, slots=args.slots, max_len=mixed_max_len,
             chunk=args.prefill_chunk, bucket=args.prefill_bucket),
+        "telemetry_overhead": bench_telemetry_overhead(
+            lm, tables, rng, slots=args.slots, max_len=max_len,
+            page_size=args.page_size, bucket=args.prefill_bucket,
+            trace_out=args.trace_out, metrics_out=args.metrics_out),
     }
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)

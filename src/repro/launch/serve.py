@@ -70,7 +70,11 @@ from repro.configs.base import get_config  # noqa: E402
 from repro.core.rep import Rep  # noqa: E402
 from repro.data.synthetic import SyntheticConfig, SyntheticStream  # noqa: E402
 from repro.models.lm import DecoderLM  # noqa: E402
-from repro.serving import SchedulerConfig, ServingEngine  # noqa: E402
+from repro.serving import (  # noqa: E402
+    SchedulerConfig,
+    ServingEngine,
+    Telemetry,
+)
 
 
 def deploy_model(
@@ -185,6 +189,24 @@ def main():
         "scheduling with the in-flight device step "
         "(0: synchronous)",
     )
+    ap.add_argument(
+        "--trace-out",
+        default="",
+        help="write the request-lifecycle trace as JSONL here "
+        "(enables telemetry; tools/trace_summary.py reads it)",
+    )
+    ap.add_argument(
+        "--metrics-out",
+        default="",
+        help="write aggregated step-phase metrics as JSON here "
+        "(enables telemetry)",
+    )
+    ap.add_argument(
+        "--profile-annotations",
+        action="store_true",
+        help="wrap device dispatches in jax.profiler."
+        "TraceAnnotation (enables telemetry)",
+    )
     args = ap.parse_args()
 
     mesh = None
@@ -197,6 +219,9 @@ def main():
 
     max_len = args.max_len or (args.prompt_len + args.gen)
     lm, tables = deploy_model(args.arch, reduced=args.reduced, max_seq=max_len)
+    tel = None
+    if args.trace_out or args.metrics_out or args.profile_annotations:
+        tel = Telemetry(profile_annotations=args.profile_annotations)
     engine = ServingEngine(
         lm, tables, n_slots=args.slots, max_len=max_len,
         paged=args.paged, page_size=args.page_size,
@@ -204,6 +229,7 @@ def main():
         paged_kernel=not args.paged_gather,
         mesh=mesh, kv_shard=args.kv_shard,
         dispatch_depth=args.dispatch_depth,
+        telemetry=tel,
         scheduler=SchedulerConfig(
             prefill_bucket=args.prefill_bucket,
             prefill_chunk=args.prefill_chunk,
@@ -245,12 +271,40 @@ def main():
             f"pages of {s['page_size']} positions, "
             f"peak concurrency {s['max_active']}"
         )
+    # SLO rollup (DESIGN.md §Observability): latency percentiles plus
+    # the queued/prefill/decode breakdown of where wall time went
+    print(
+        f"  TTFT p50/p95/p99 "
+        f"{s['p50_ttft_s'] * 1e3:.0f}/{s['p95_ttft_s'] * 1e3:.0f}/"
+        f"{s['p99_ttft_s'] * 1e3:.0f} ms, "
+        f"ITL p50/p95/p99 "
+        f"{s['p50_itl_s'] * 1e3:.1f}/{s['p95_itl_s'] * 1e3:.1f}/"
+        f"{s['p99_itl_s'] * 1e3:.1f} ms"
+    )
+    print(
+        f"  breakdown: queued {s['mean_queued_s'] * 1e3:.0f} ms, "
+        f"prefill {s['mean_prefill_s'] * 1e3:.0f} ms, "
+        f"decode {s['mean_decode_s'] * 1e3:.0f} ms "
+        f"(admit rejects {s['admit_rejects']})"
+    )
     for c in completions[: min(4, len(completions))]:
         print(
             f"  req {c.req_id}: P={c.prompt_len} "
             f"-> {c.n_generated} toks [{c.finish_reason}] "
             f"{np.asarray(c.tokens)[:8]}"
         )
+    if tel is not None:
+        if args.trace_out:
+            tel.export_trace(args.trace_out)
+            print(
+                f"  trace: {len(tel.events)} events -> {args.trace_out}"
+            )
+        if args.metrics_out:
+            tel.export_metrics(args.metrics_out)
+            print(
+                f"  metrics: {len(tel.steps)} step records -> "
+                f"{args.metrics_out}"
+            )
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ from repro.serving.request import (
     Request,
 )
 from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.telemetry import NULL, NullTelemetry, Telemetry
 
 __all__ = [
     "Completion",
@@ -29,6 +30,8 @@ __all__ = [
     "FINISH_LENGTH",
     "FINISH_MAX_LEN",
     "FINISH_STOP",
+    "NULL",
+    "NullTelemetry",
     "PAGE_NULL",
     "PagedArena",
     "PrefillState",
@@ -37,6 +40,7 @@ __all__ = [
     "SchedulerConfig",
     "ServingEngine",
     "SlotArena",
+    "Telemetry",
     "assert_integer_caches",
     "float_cache_leaves",
 ]

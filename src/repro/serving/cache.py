@@ -365,6 +365,27 @@ class SlotArena:
     def reset_peaks(self):
         """No high-water marks to reset for the contiguous arena."""
 
+    # -- telemetry ------------------------------------------------------
+    def reject_reason(self, prompt_len: int, total_len: int) -> str:
+        """Why can_admit said no — a free slot is the only gate here."""
+        return "no_slot"
+
+    def span_pages(self, slot: int, start: int, end: int) -> list:
+        """Physical pages backing positions [start, end): contiguous
+        rows have no pages (the telemetry `prefill_chunk` event's page
+        context is a paged-arena concept)."""
+        return []
+
+    def gauges(self) -> dict:
+        """Instantaneous occupancy sampled into each telemetry step
+        record (DESIGN.md §Observability ¶Span model) — host counters
+        only, so sampling never touches the device."""
+        return {
+            "n_leased": self.n_leased,
+            "n_free": self.n_free,
+            "occupancy": self.n_leased / self.n_slots,
+        }
+
     def stats(self) -> dict:
         return {
             "arena": "slot",
@@ -734,6 +755,42 @@ class PagedArena:
         into the measured window's report)."""
         self.max_pages_in_use = self.pages_in_use
         self.max_committed = self.committed_pages
+
+    # -- telemetry ------------------------------------------------------
+    def reject_reason(self, prompt_len: int, total_len: int) -> str:
+        """Why can_admit said no: decode rows exhausted, or the page
+        budget (the request's own worst case would overcommit the
+        pool) — the two distinct backpressure causes a scheduler on
+        top of this arena needs to tell apart."""
+        if not self._free_slots:
+            return "no_slot"
+        return "no_pages"
+
+    def span_pages(self, slot: int, start: int, end: int) -> list:
+        """Physical pages backing positions [start, end) of `slot`
+        (the telemetry `prefill_chunk` event's page context).  Call
+        after touch_range: every covered block is then materialized,
+        so no PAGE_NULL appears for a real position."""
+        if end <= start:
+            return []
+        ps = self.page_size
+        return [
+            int(self.page_table[slot, blk])
+            for blk in range(start // ps, (end - 1) // ps + 1)
+        ]
+
+    def gauges(self) -> dict:
+        """Instantaneous occupancy + page pressure sampled into each
+        telemetry step record (DESIGN.md §Observability ¶Span model)."""
+        return {
+            "n_leased": self.n_leased,
+            "n_free": self.n_free,
+            "occupancy": self.n_leased / self.n_slots,
+            "pages_in_use": self.pages_in_use,
+            "free_pages": self.free_pages,
+            "committed_pages": self.committed_pages,
+            "max_pages_in_use": self.max_pages_in_use,
+        }
 
     def stats(self) -> dict:
         return {

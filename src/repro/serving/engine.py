@@ -71,6 +71,20 @@ bit-exact with the lockstep path.  MoE capacity routing couples rows
 (a garbage row can compete for expert capacity) — see DESIGN.md
 §Serving for the caveat (under async dispatch the same caveat covers
 the one-step admission shift).
+
+Telemetry (`telemetry=`, DESIGN.md §Observability): the engine threads
+an off-by-default, bit-neutral observability sink through every
+lifecycle transition (typed trace events), every step phase (spans:
+admission / plan_chunks / chunk_dispatch / chunk_harvest /
+decode_dispatch / harvest), and every jitted dispatch (compile-cache
+hit/miss accounting + optional jax.profiler.TraceAnnotation).  All
+hooks read host state only — no device values, no extra dispatches —
+so enabling telemetry cannot change a single token (pinned by
+tests/test_telemetry.py).  Independent of telemetry, per-token emit
+stamps always accrue on RequestState/Completion, and stats() rolls
+them up into p50/p95/p99 TTFT/ITL plus a queued/prefill/decode latency
+breakdown — the SLO surface an open-loop harness or a preemption
+scheduler reports through.
 """
 
 from __future__ import annotations
@@ -102,6 +116,7 @@ from repro.serving.request import (
     RequestState,
 )
 from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.telemetry import NULL as NULL_TELEMETRY
 
 
 @dataclasses.dataclass
@@ -179,6 +194,7 @@ class ServingEngine:
         mesh=None,
         kv_shard: bool = False,
         dispatch_depth: int = 0,
+        telemetry=None,
     ):
         if lm.cfg.input_mode != "tokens":
             raise ValueError(
@@ -198,6 +214,10 @@ class ServingEngine:
         self.mesh = mesh
         self.kv_shard = bool(kv_shard)
         self.queue = DispatchQueue(dispatch_depth)
+        # observability sink (DESIGN.md §Observability): the shared
+        # no-op singleton unless the caller hands in a Telemetry —
+        # every hook below is bit-neutral (host state only)
+        self.tel = NULL_TELEMETRY if telemetry is None else telemetry
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -330,6 +350,7 @@ class ServingEngine:
         self._occupancy_sum = 0.0
         self._n_generated = 0
         self._max_active = 0
+        self._n_admit_rejects = 0  # steps the FCFS head was blocked
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -354,6 +375,13 @@ class ServingEngine:
         self._next_id += 1
         req.arrival_time = time.perf_counter()
         self.sched.submit(req)
+        if self.tel.enabled:
+            self.tel.event(
+                "submit",
+                req_id=req.req_id,
+                prompt_len=req.prompt_len,
+                max_new_tokens=req.max_new_tokens,
+            )
         return req.req_id
 
     # -- one scheduler iteration ---------------------------------------
@@ -370,16 +398,26 @@ class ServingEngine:
     def _step_sync(self) -> bool:
         """The synchronous engine step (dispatch_depth=0) — every
         device dispatch is harvested before the step returns; the
-        token-parity oracle for the async path."""
-        progressed = self._admit_pending()
+        token-parity oracle for the async path.  Telemetry spans time
+        each phase (DESIGN.md §Observability ¶Span model); with the
+        Null sink each span is a shared no-op context."""
+        tel = self.tel
+        tel.begin_step(self._steps)
+        with tel.span("admission"):
+            progressed = self._admit_pending()
         if self.prefilling:
-            self._harvest_prefill_chunk(self._dispatch_prefill_chunk())
+            rec = self._dispatch_prefill_chunk()
+            with tel.span("chunk_harvest"):
+                self._harvest_prefill_chunk(rec)
             progressed = True
         self._tick_stats()
         if self.active:
-            self._harvest_decode(self._dispatch_decode())
+            drec = self._dispatch_decode()
+            with tel.span("harvest"):
+                self._harvest_decode(drec)
             progressed = True
         self._t_last = time.perf_counter()
+        self._end_step()
         return progressed
 
     def _step_async(self) -> bool:
@@ -388,27 +426,35 @@ class ServingEngine:
         chunk-dispatch enqueue — overlaps the decode dispatched by the
         PREVIOUS step, which is still executing on the device.  The
         only forced sync is the (B,)-token harvest."""
+        tel = self.tel
+        tel.begin_step(self._steps)
         progressed = self.queue.pending > 0
         # (1) host scheduling + prefill enqueue: overlaps the in-flight
         # decode.  Admission therefore sees slot releases one harvest
         # later than the sync engine — a timing shift only; per-request
         # tokens are pinned equal by the parity tests.
-        progressed |= self._admit_pending()
+        with tel.span("admission"):
+            progressed |= self._admit_pending()
         chunk_rec = None
         if self.prefilling:
             chunk_rec = self._dispatch_prefill_chunk()
             progressed = True
-        # (2) token harvest: the pipeline's one blocking point
-        self.queue.drain(self._harvest_decode)
+        # (2) token harvest: the pipeline's one blocking point — under
+        # depth 1 a fat `harvest` span is overlapped DEVICE time (the
+        # previous step's decode finishing), not host work
+        with tel.span("harvest"):
+            self.queue.drain(self._harvest_decode)
         if chunk_rec is not None:
             # graduation feeds this step's decode, exactly like sync
-            self._harvest_prefill_chunk(chunk_rec)
+            with tel.span("chunk_harvest"):
+                self._harvest_prefill_chunk(chunk_rec)
         self._tick_stats()
         # (3) dispatch this step's decode; the next step harvests it
         if self.active:
             self.queue.push(self._dispatch_decode())
             progressed = True
         self._t_last = time.perf_counter()
+        self._end_step()
         return progressed
 
     def _admit_pending(self) -> bool:
@@ -425,6 +471,21 @@ class ServingEngine:
         for _ in range(self.sched.cfg.max_prefills_per_step):
             req = self.sched.pop_if(fits)
             if req is None:
+                # head-of-line backpressure: the FCFS head (if any)
+                # did not fit — count it once per blocked step and
+                # name it in the trace (DESIGN.md §Observability)
+                head = self.sched.peek()
+                if head is not None:
+                    self._n_admit_rejects += 1
+                    if self.tel.enabled:
+                        self.tel.event(
+                            "admit_reject",
+                            req_id=head.req_id,
+                            reason=self.arena.reject_reason(
+                                head.prompt_len,
+                                head.prompt_len + head.max_new_tokens,
+                            ),
+                        )
                 break
             self._admit(req)  # consumes arena capacity `fits` re-reads
             progressed = True
@@ -435,30 +496,49 @@ class ServingEngine:
         self._max_active = max(self._max_active, len(self.active))
         self._steps += 1
 
+    def _end_step(self):
+        """Close the telemetry step record, folding in the queue depth
+        and the arena's instantaneous gauges (host counters only)."""
+        if not self.tel.enabled:
+            return
+        self.tel.end_step(
+            queue_depth=self.queue.pending,
+            n_pending=self.sched.n_pending,
+            n_active=len(self.active),
+            n_prefilling=len(self.prefilling),
+            admit_rejects=self._n_admit_rejects,
+            **self.arena.gauges(),
+        )
+
     def _dispatch_decode(self) -> _InFlightDecode:
         """Enqueue one fused decode over every active slot (async wrt
         the host: jax returns futures; nothing blocks here)."""
-        B = self.arena.n_slots
-        toks = np.zeros((B, 1), np.int32)
-        # rows without an active decode (free slots, slots still
-        # mid-prefill) are parked at INACTIVE_POS: their cache
-        # writes mask to no-ops, so the fused step can never
-        # clobber a neighbor's prefilled positions
-        pos = np.full((B,), INACTIVE_POS, np.int32)
-        for slot, st in self.active.items():
-            toks[slot, 0] = st.last_token
-            pos[slot] = st.pos
-            # paged arena: allocate the page holding `pos` before
-            # the decode that writes there (no-op for SlotArena)
-            self.arena.touch(slot, st.pos)
-        with self._dispatch_ctx():
-            nxt, new_caches = self._decode(
-                self.tables,
-                jnp.asarray(toks),
-                self.arena.decode_view(),
-                jnp.asarray(pos),
-            )
-        self.arena.absorb(new_caches)
+        tel = self.tel
+        with tel.span("decode_dispatch"):
+            B = self.arena.n_slots
+            toks = np.zeros((B, 1), np.int32)
+            # rows without an active decode (free slots, slots still
+            # mid-prefill) are parked at INACTIVE_POS: their cache
+            # writes mask to no-ops, so the fused step can never
+            # clobber a neighbor's prefilled positions
+            pos = np.full((B,), INACTIVE_POS, np.int32)
+            for slot, st in self.active.items():
+                toks[slot, 0] = st.last_token
+                pos[slot] = st.pos
+                # paged arena: allocate the page holding `pos` before
+                # the decode that writes there (no-op for SlotArena)
+                self.arena.touch(slot, st.pos)
+            tel.dispatch("decode", (B,))
+            with self._dispatch_ctx(), tel.annotate(
+                "repro.serving/decode"
+            ):
+                nxt, new_caches = self._decode(
+                    self.tables,
+                    jnp.asarray(toks),
+                    self.arena.decode_view(),
+                    jnp.asarray(pos),
+                )
+            self.arena.absorb(new_caches)
         return _InFlightDecode(tokens=nxt, slots=list(self.active))
 
     def _harvest_decode(self, rec: _InFlightDecode):
@@ -473,8 +553,9 @@ class ServingEngine:
             st.tokens.append(tok)
             st.last_token = tok
             st.pos += 1
+            st.emit_times.append(now)  # the token's host-visible stamp
             self.arena.advance(slot)
-            self._emit(st.request, tok)
+            self._emit(st.request, tok, slot)
             self._maybe_finish(st, now)
 
     def run_until_drained(
@@ -512,7 +593,8 @@ class ServingEngine:
 
     def _admit(self, req: Request):
         """Lease a slot and start the request's prefill (mode-dependent:
-        chunked admission only enqueues; whole-prompt prefills now)."""
+        chunked admission only enqueues; whole-prompt prefills now).
+        The slot-lease stamp ends the request's `queued_s` window."""
         if self._prefill_mode == "chunked":
             slot = self.arena.alloc(
                 req.req_id,
@@ -520,7 +602,11 @@ class ServingEngine:
                 req.prompt_len + req.max_new_tokens,
                 written=0,  # partial-prefill state: chunks arrive later
             )
-            self.prefilling[slot] = PrefillState(request=req, slot=slot)
+            self.prefilling[slot] = PrefillState(
+                request=req, slot=slot, admit_time=time.perf_counter()
+            )
+            if self.tel.enabled:
+                self.tel.event("admit", req_id=req.req_id, slot=slot)
             return
         self._admit_whole(req)
 
@@ -532,20 +618,26 @@ class ServingEngine:
             req.prompt_len,
             req.prompt_len + req.max_new_tokens,
         )
+        admit_t = time.perf_counter()
+        if self.tel.enabled:
+            self.tel.event("admit", req_id=req.req_id, slot=slot)
         P = req.prompt_len
         Pb = self.sched.bucket_len(P) if self._bucketed_prefill else P
         padded = np.zeros((1, Pb), np.int32)
         padded[0, :P] = req.prompt
+        self.tel.dispatch("prefill", (Pb,))
         # first token: greedy on the TRUE last prompt position (padded
         # positions after it are causally invisible to it)
-        with self._dispatch_ctx():
+        with self._dispatch_ctx(), self.tel.annotate(
+            "repro.serving/prefill"
+        ):
             logits, single = self._prefill(
                 self.tables, jnp.asarray(padded), jnp.int32(P - 1)
             )
         first = int(jnp.argmax(logits[0, 0]))
         self.arena.write_slot(slot, single)
         now = time.perf_counter()
-        self._start_decoding(req, slot, first, now)
+        self._start_decoding(req, slot, first, now, admit_t)
 
     def _dispatch_prefill_chunk(self) -> _InFlightChunk:
         """One packed chunked-prefill dispatch: write the next chunk of
@@ -562,41 +654,61 @@ class ServingEngine:
         padding rows borrow spare slots (free ones preferred); parked
         at INACTIVE_POS they write nothing and round-trip unchanged —
         which is why borrowing even a live slot's row is safe."""
-        plan = self.sched.plan_chunks(self.prefilling.values())
-        C = self.sched.cfg.prefill_chunk
-        n_rows = len(plan)
-        rows = 1
-        while rows < n_rows:
-            rows *= 2
-        rows = min(rows, self.arena.n_slots)
-        slots = [st.slot for st, _, _ in plan]
-        if rows > n_rows:
-            taken = set(slots)
-            pad = [s for s in range(self.arena.n_slots) if s not in taken]
-            # stable sort: genuinely free slots pad first, live ones
-            # only when nothing else is left
-            pad.sort(key=lambda s: self.arena.owner[s] is not None)
-            slots += pad[: rows - n_rows]
-        toks = np.zeros((rows, C), np.int32)
-        start = np.full((rows,), INACTIVE_POS, np.int32)  # pad rows
-        last = np.zeros((rows,), np.int32)
-        for r, (st, off, n) in enumerate(plan):
-            toks[r, :n] = st.request.prompt[off:off + n]
-            start[r] = off
-            last[r] = n - 1
-            # paged arena: allocate pages covering the chunk before the
-            # dispatch writes there (no-op for SlotArena; the padded
-            # tail of a final partial chunk lands on the trash page)
-            self.arena.touch_range(st.slot, off, off + n)
-        with self._dispatch_ctx():
-            nxt, new_rows = self._prefill_chunk(
-                self.tables,
-                jnp.asarray(toks),
-                self.arena.prefill_view(slots),
-                jnp.asarray(start),
-                jnp.asarray(last),
-            )
-        self.arena.absorb_rows(slots, new_rows)
+        tel = self.tel
+        with tel.span("plan_chunks"):
+            plan = self.sched.plan_chunks(self.prefilling.values())
+        with tel.span("chunk_dispatch"):
+            C = self.sched.cfg.prefill_chunk
+            n_rows = len(plan)
+            rows = 1
+            while rows < n_rows:
+                rows *= 2
+            rows = min(rows, self.arena.n_slots)
+            slots = [st.slot for st, _, _ in plan]
+            if rows > n_rows:
+                taken = set(slots)
+                pad = [
+                    s for s in range(self.arena.n_slots) if s not in taken
+                ]
+                # stable sort: genuinely free slots pad first, live ones
+                # only when nothing else is left
+                pad.sort(key=lambda s: self.arena.owner[s] is not None)
+                slots += pad[: rows - n_rows]
+            toks = np.zeros((rows, C), np.int32)
+            start = np.full((rows,), INACTIVE_POS, np.int32)  # pad rows
+            last = np.zeros((rows,), np.int32)
+            for r, (st, off, n) in enumerate(plan):
+                toks[r, :n] = st.request.prompt[off:off + n]
+                start[r] = off
+                last[r] = n - 1
+                # paged arena: allocate pages covering the chunk before
+                # the dispatch writes there (no-op for SlotArena; the
+                # padded tail of a final partial chunk lands on the
+                # trash page)
+                self.arena.touch_range(st.slot, off, off + n)
+                if tel.enabled:
+                    # chunk span + the physical pages it landed on
+                    # (touch_range just materialized them)
+                    tel.event(
+                        "prefill_chunk",
+                        req_id=st.request.req_id,
+                        slot=st.slot,
+                        start=off,
+                        end=off + n,
+                        pages=self.arena.span_pages(st.slot, off, off + n),
+                    )
+            tel.dispatch("prefill_chunk", (rows, C))
+            with self._dispatch_ctx(), tel.annotate(
+                "repro.serving/prefill_chunk"
+            ):
+                nxt, new_rows = self._prefill_chunk(
+                    self.tables,
+                    jnp.asarray(toks),
+                    self.arena.prefill_view(slots),
+                    jnp.asarray(start),
+                    jnp.asarray(last),
+                )
+            self.arena.absorb_rows(slots, new_rows)
         return _InFlightChunk(tokens=nxt, plan=plan)
 
     def _harvest_prefill_chunk(self, rec: _InFlightChunk):
@@ -610,10 +722,12 @@ class ServingEngine:
                 st.offset = off + n  # carried into the next dispatch
                 continue
             del self.prefilling[st.slot]  # final chunk completed
-            self._start_decoding(st.request, st.slot, int(nxt[r]), now)
+            self._start_decoding(
+                st.request, st.slot, int(nxt[r]), now, st.admit_time
+            )
 
     def _start_decoding(self, req: Request, slot: int, first: int,
-                        now: float):
+                        now: float, admit_time: float):
         """Graduate a prefilled request to the fused decode batch; its
         TTFT clock stops here (first generated token)."""
         st = RequestState(
@@ -623,13 +737,21 @@ class ServingEngine:
             last_token=first,
             pos=req.prompt_len,
             first_token_time=now,
+            admit_time=admit_time,
+            emit_times=[now],
         )
         self.active[slot] = st
-        self._emit(req, first)
+        if self.tel.enabled:
+            self.tel.event(
+                "first_token", req_id=req.req_id, slot=slot, token=first
+            )
+        self._emit(req, first, slot)
         self._maybe_finish(st, now)
 
-    def _emit(self, req: Request, tok: int):
+    def _emit(self, req: Request, tok: int, slot: int):
         self._n_generated += 1
+        if self.tel.enabled:
+            self.tel.event("emit", req_id=req.req_id, slot=slot, token=tok)
         if self.on_token is not None:
             self.on_token(req.req_id, tok)
 
@@ -653,8 +775,18 @@ class ServingEngine:
                 arrival_time=req.arrival_time,
                 first_token_time=st.first_token_time,
                 finish_time=now,
+                admit_time=st.admit_time,
+                emit_times=list(st.emit_times),
             )
         )
+        if self.tel.enabled:
+            self.tel.event(
+                "finish",
+                req_id=req.req_id,
+                slot=st.slot,
+                reason=reason,
+                n_generated=len(st.tokens),
+            )
         del self.active[st.slot]
         self.arena.release(st.slot)
 
@@ -674,6 +806,9 @@ class ServingEngine:
             raise RuntimeError("warmup on a non-idle engine")
         B = self.arena.n_slots
         parked = np.full((B,), INACTIVE_POS, np.int32)
+        # register warmed shapes with the telemetry compile-cache
+        # accounting: post-warmup dispatches of these shapes are HITS
+        self.tel.dispatch("decode", (B,))
         with self._dispatch_ctx():
             jax.block_until_ready(self._decode(
                 self.tables,
@@ -688,6 +823,7 @@ class ServingEngine:
         while True:
             rows = min(rows, B)
             slots = list(range(rows))
+            self.tel.dispatch("prefill_chunk", (rows, C))
             with self._dispatch_ctx():
                 _, row_caches = self._prefill_chunk(
                     self.tables,
@@ -716,9 +852,13 @@ class ServingEngine:
         self._occupancy_sum = 0.0
         self._n_generated = 0
         self._max_active = 0
+        self._n_admit_rejects = 0
         self._t_first = None
         self._t_last = None
         self.arena.reset_peaks()
+        # start the measured window's trace clean too (the telemetry
+        # compile-cache seen-set survives: warmed shapes stay compiled)
+        self.tel.clear()
 
     def stats(self) -> dict:
         wall = (
@@ -727,6 +867,10 @@ class ServingEngine:
             else 0.0
         )
         ttfts = [c.ttft for c in self.completed]
+        itls = [d for c in self.completed for d in c.itl]
+        queued = [c.queued_s for c in self.completed]
+        prefills = [c.prefill_s for c in self.completed]
+        decodes = [c.decode_s for c in self.completed]
         out = {
             "n_completed": len(self.completed),
             "n_generated": self._n_generated,
@@ -736,7 +880,19 @@ class ServingEngine:
             "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0,
             "p50_ttft_s": float(np.percentile(ttfts, 50)) if ttfts else 0.0,
             "p95_ttft_s": float(np.percentile(ttfts, 95)) if ttfts else 0.0,
+            "p99_ttft_s": float(np.percentile(ttfts, 99)) if ttfts else 0.0,
             "max_ttft_s": float(np.max(ttfts)) if ttfts else 0.0,
+            # inter-token latency: pooled per-request emit gaps
+            # (DESIGN.md §Observability) — the steady-state SLO metric
+            "mean_itl_s": float(np.mean(itls)) if itls else 0.0,
+            "p50_itl_s": float(np.percentile(itls, 50)) if itls else 0.0,
+            "p95_itl_s": float(np.percentile(itls, 95)) if itls else 0.0,
+            "p99_itl_s": float(np.percentile(itls, 99)) if itls else 0.0,
+            # latency breakdown: where a request's wall time went
+            "mean_queued_s": float(np.mean(queued)) if queued else 0.0,
+            "mean_prefill_s": float(np.mean(prefills)) if prefills else 0.0,
+            "mean_decode_s": float(np.mean(decodes)) if decodes else 0.0,
+            "admit_rejects": self._n_admit_rejects,
             "mean_occupancy": (
                 self._occupancy_sum / self._steps if self._steps else 0.0
             ),

@@ -6,6 +6,16 @@ and an optional stop token.  The engine stamps `req_id` and
 all timing fields are host wall-clock (time.perf_counter) stamps so
 TTFT / latency are directly comparable across requests within one run
 (DESIGN.md §Serving).
+
+Per-token timing (DESIGN.md §Observability): the engine stamps
+`admit_time` when a request's slot is leased and appends to
+`emit_times` every time a generated token becomes host-visible (the
+decode harvest).  From those, `Completion` derives the inter-token
+latency series (`itl`) and the three-way latency breakdown — `queued_s`
+(arrival -> slot lease), `prefill_s` (lease -> first token), `decode_s`
+(first token -> finish) — that `ServingEngine.stats()` rolls up into
+p50/p95/p99 TTFT/ITL.  These stamps are always on (plain host floats;
+they are the SLO measurement itself, not optional telemetry).
 """
 from __future__ import annotations
 
@@ -55,6 +65,7 @@ class PrefillState:
     request: Request
     slot: int
     offset: int = 0
+    admit_time: float = 0.0  # slot-lease stamp (queued_s ends here)
 
 
 @dataclasses.dataclass
@@ -72,6 +83,10 @@ class RequestState:
     last_token: int
     pos: int
     first_token_time: float
+    admit_time: float = 0.0
+    # host-visibility stamp of every generated token (first token at
+    # graduation, then one per decode harvest) — the ITL series' source
+    emit_times: List[float] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -85,6 +100,8 @@ class Completion:
     arrival_time: float
     first_token_time: float
     finish_time: float
+    admit_time: float = 0.0  # slot lease (0.0 in pre-telemetry records)
+    emit_times: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def n_generated(self) -> int:
@@ -98,3 +115,30 @@ class Completion:
     @property
     def latency(self) -> float:
         return self.finish_time - self.arrival_time
+
+    @property
+    def itl(self) -> List[float]:
+        """Inter-token latency series: gaps between consecutive token
+        emissions (n_generated - 1 entries).  Tokens harvested from one
+        fused decode step share a stamp, so an entry IS that request's
+        view of one engine-step time (DESIGN.md §Observability)."""
+        return [
+            b - a for a, b in zip(self.emit_times, self.emit_times[1:])
+        ]
+
+    # -- latency breakdown (queued / prefill / decode) ------------------
+    @property
+    def queued_s(self) -> float:
+        """Arrival -> slot lease (admission queueing)."""
+        return self.admit_time - self.arrival_time
+
+    @property
+    def prefill_s(self) -> float:
+        """Slot lease -> first generated token (prefill, incl. chunk
+        streaming for the chunked path)."""
+        return self.first_token_time - self.admit_time
+
+    @property
+    def decode_s(self) -> float:
+        """First generated token -> finish (pure decode)."""
+        return self.finish_time - self.first_token_time

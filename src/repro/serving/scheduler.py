@@ -116,6 +116,14 @@ class Scheduler:
     def n_pending(self) -> int:
         return len(self.pending)
 
+    def peek(self) -> Optional[Request]:
+        """The FCFS queue head without popping it (None when empty).
+        The engine's backpressure accounting reads this: when the head
+        does not fit, IT is the blocked request — head-of-line blocking
+        means nothing younger is even considered — so the telemetry
+        `admit_reject` event names it (DESIGN.md §Observability)."""
+        return self.pending[0] if self.pending else None
+
     # -- admission ------------------------------------------------------
     def pop_if(self, fits: Callable[[Request], bool]) -> Optional[Request]:
         """Pop the FCFS queue head if the arena predicate accepts it

@@ -1,0 +1,226 @@
+"""Summarize + validate a serving trace (DESIGN.md §Observability).
+
+Reads the JSONL request-lifecycle trace that `--trace-out` produces
+(repro.launch.serve / benchmarks/serve_bench.py) and:
+
+  validates it against the one-place event schema
+  (repro.serving.telemetry.EVENT_FIELDS): unknown kinds, missing
+  required fields, non-numeric or non-monotonic timestamps, and broken
+  lifecycles (a finish without a first_token, an emit count that
+  disagrees with the finish record's n_generated) are all malformed —
+  exit code 1.
+
+  rolls the events up per request: TTFT (submit -> first_token), ITL
+  percentiles from the emit-gap series, and the queued (submit ->
+  admit) / prefill (admit -> first_token) / decode (first_token ->
+  finish) breakdown — then prints fleet-level p50/p95/p99.
+
+  with --metrics metrics.json, also renders the per-step phase
+  breakdown (admission / plan_chunks / chunk_dispatch / chunk_harvest /
+  decode_dispatch / harvest) and compile-cache hit/miss totals from the
+  aggregated step metrics export.
+
+Usage:
+  PYTHONPATH=src python tools/trace_summary.py trace.jsonl \
+      [--metrics metrics.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(
+    0, str(pathlib.Path(__file__).resolve().parents[1] / "src")
+)
+
+from repro.serving.telemetry import EVENT_FIELDS, PHASES  # noqa: E402
+
+
+class TraceError(Exception):
+    """A malformed trace: schema or lifecycle violation."""
+
+
+def load_trace(path: str) -> list:
+    """Parse a JSONL trace file into a list of event dicts."""
+    events = []
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise TraceError(f"{path}:{ln}: not JSON: {e}") from e
+            if not isinstance(rec, dict):
+                raise TraceError(f"{path}:{ln}: event is not an object")
+            events.append(rec)
+    return events
+
+
+def validate(events: list):
+    """Check every event against EVENT_FIELDS and global timestamp
+    monotonicity (events are appended in emission order, and the
+    telemetry clock is monotonic, so a backwards step is corruption).
+    """
+    last_t = None
+    for i, rec in enumerate(events):
+        kind = rec.get("event")
+        if kind not in EVENT_FIELDS:
+            raise TraceError(f"event {i}: unknown kind {kind!r}")
+        missing = EVENT_FIELDS[kind] - rec.keys()
+        if missing:
+            raise TraceError(
+                f"event {i} ({kind}): missing fields {sorted(missing)}"
+            )
+        t = rec.get("t")
+        if not isinstance(t, (int, float)):
+            raise TraceError(f"event {i} ({kind}): non-numeric t {t!r}")
+        if last_t is not None and t < last_t:
+            raise TraceError(
+                f"event {i} ({kind}): timestamp went backwards "
+                f"({t} < {last_t})"
+            )
+        last_t = t
+
+
+def lifecycles(events: list) -> dict:
+    """Group events by req_id and derive per-request latencies,
+    checking lifecycle invariants along the way."""
+    by_req: dict = {}
+    for rec in events:
+        rid = rec.get("req_id")
+        if rid is None:
+            continue
+        by_req.setdefault(rid, []).append(rec)
+
+    out = {}
+    for rid, evs in by_req.items():
+        kinds = {}
+        for e in evs:
+            kinds.setdefault(e["event"], []).append(e)
+        fin = kinds.get("finish")
+        if not fin:
+            continue  # still in flight when the trace was cut: fine
+        first = kinds.get("first_token")
+        if not first:
+            raise TraceError(f"req {rid}: finish without first_token")
+        emits = kinds.get("emit", [])
+        n_gen = fin[0]["n_generated"]
+        if len(emits) != n_gen:
+            raise TraceError(
+                f"req {rid}: {len(emits)} emit events but finish says "
+                f"n_generated={n_gen}"
+            )
+        sub = kinds.get("submit")
+        adm = kinds.get("admit")
+        rec = {
+            "n_generated": n_gen,
+            "finish_reason": fin[0]["reason"],
+            "rejects": len(kinds.get("admit_reject", [])),
+            "n_chunks": len(kinds.get("prefill_chunk", [])),
+        }
+        if sub:
+            rec["ttft_s"] = first[0]["t"] - sub[0]["t"]
+            if adm:
+                rec["queued_s"] = adm[0]["t"] - sub[0]["t"]
+        if adm:
+            rec["prefill_s"] = first[0]["t"] - adm[0]["t"]
+        rec["decode_s"] = fin[0]["t"] - first[0]["t"]
+        ts = [e["t"] for e in emits]
+        rec["itl"] = [b - a for a, b in zip(ts, ts[1:])]
+        out[rid] = rec
+    return out
+
+
+def _pct(xs, q):
+    """Nearest-rank percentile without numpy (tools/ stay stdlib)."""
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    k = max(0, min(len(xs) - 1, round(q / 100 * (len(xs) - 1))))
+    return xs[k]
+
+
+def summarize(events: list, reqs: dict) -> str:
+    counts: dict = {}
+    for rec in events:
+        counts[rec["event"]] = counts.get(rec["event"], 0) + 1
+    lines = [
+        f"{len(events)} events, {len(reqs)} finished requests",
+        "  events: " + ", ".join(
+            f"{k}={counts[k]}" for k in EVENT_FIELDS if k in counts
+        ),
+    ]
+    ttfts = [r["ttft_s"] for r in reqs.values() if "ttft_s" in r]
+    itls = [d for r in reqs.values() for d in r["itl"]]
+    if ttfts:
+        lines.append(
+            f"  TTFT p50/p95/p99: "
+            f"{_pct(ttfts, 50) * 1e3:.1f}/{_pct(ttfts, 95) * 1e3:.1f}/"
+            f"{_pct(ttfts, 99) * 1e3:.1f} ms"
+        )
+    if itls:
+        lines.append(
+            f"  ITL  p50/p95/p99: "
+            f"{_pct(itls, 50) * 1e3:.2f}/{_pct(itls, 95) * 1e3:.2f}/"
+            f"{_pct(itls, 99) * 1e3:.2f} ms"
+        )
+    for key, label in (
+        ("queued_s", "queued"),
+        ("prefill_s", "prefill"),
+        ("decode_s", "decode"),
+    ):
+        xs = [r[key] for r in reqs.values() if key in r]
+        if xs:
+            lines.append(
+                f"  mean {label}: {sum(xs) / len(xs) * 1e3:.1f} ms"
+            )
+    return "\n".join(lines)
+
+
+def summarize_metrics(path: str) -> str:
+    with open(path) as f:
+        m = json.load(f)
+    lines = [
+        f"{m['n_steps']} step records, {m['n_events']} events, "
+        f"compile hits/misses: "
+        f"{m['compile_hits']}/{m['compile_misses']}",
+    ]
+    means = m.get("phase_mean_s", {})
+    for ph in PHASES:
+        if ph in means:
+            lines.append(f"  {ph:>16}: {means[ph] * 1e3:.2f} ms/step")
+    for ph in means:
+        if ph not in PHASES:
+            raise TraceError(f"unknown phase in metrics: {ph!r}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="JSONL trace from --trace-out")
+    ap.add_argument(
+        "--metrics",
+        default="",
+        help="aggregated step metrics JSON from --metrics-out",
+    )
+    args = ap.parse_args()
+    try:
+        events = load_trace(args.trace)
+        validate(events)
+        reqs = lifecycles(events)
+        print(f"trace {args.trace}: OK")
+        print(summarize(events, reqs))
+        if args.metrics:
+            print(f"metrics {args.metrics}:")
+            print(summarize_metrics(args.metrics))
+    except TraceError as e:
+        print(f"MALFORMED TRACE: {e}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()
