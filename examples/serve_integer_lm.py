@@ -8,8 +8,8 @@ different times — all greedy argmax on int32 logits, no floats.
   PYTHONPATH=src python examples/serve_integer_lm.py
 
 Multi-device serving (DESIGN.md §Serving ¶Multi-device) — the same
-engine, three knobs (`ServingEngine(mesh=..., kv_shard=...,
-dispatch_depth=...)`), or on the CLI:
+engine, three `ServingConfig` knobs (`mesh=...`, `kv_shard=...`,
+`dispatch_depth=...`), or on the CLI:
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite_3_2b \
       --reduced --requests 8 --slots 4 --ragged \
@@ -36,14 +36,17 @@ import numpy as np
 
 from repro.launch.mesh import make_serving_mesh
 from repro.launch.serve import deploy_model
-from repro.serving import SchedulerConfig, ServingEngine
+from repro.serving import SchedulerConfig, ServingConfig, ServingEngine
 
 lm, tables = deploy_model("granite_3_2b", reduced=True, max_seq=48)
 
 streamed = {}
 engine = ServingEngine(
-    lm, tables, n_slots=3, max_len=48,
-    scheduler=SchedulerConfig(max_prefills_per_step=1, prefill_bucket=8),
+    lm, tables,
+    ServingConfig(
+        n_slots=3, max_len=48,
+        scheduler=SchedulerConfig(
+            max_prefills_per_step=1, prefill_bucket=8)),
     on_token=lambda rid, tok: streamed.setdefault(rid, []).append(tok))
 
 rng = np.random.default_rng(0)
@@ -66,10 +69,10 @@ print(f"{s['throughput_tok_s']:.1f} tok/s, "
 
 # -- multi-device engine: sharded KV arena + async dispatch ----------
 mesh = make_serving_mesh(2)  # host-mesh fallback on a 1-device CPU
-sharded = ServingEngine(
-    lm, tables, n_slots=3, max_len=48, paged=True, page_size=8,
+sharded = ServingEngine(lm, tables, ServingConfig(
+    n_slots=3, max_len=48, paged=True, page_size=8,
     mesh=mesh, kv_shard=True, dispatch_depth=1,
-    scheduler=SchedulerConfig(max_prefills_per_step=1, prefill_bucket=8))
+    scheduler=SchedulerConfig(max_prefills_per_step=1, prefill_bucket=8)))
 rng = np.random.default_rng(0)
 for prompt_len, gen_len in workload:
     sharded.submit(rng.integers(0, lm.cfg.vocab, size=(prompt_len,)),

@@ -9,6 +9,17 @@ the original fixed-shape lockstep loop, kept as the parity reference
 (tests/test_serving.py asserts the engine reproduces it token-for-token
 for simultaneous same-length requests).
 
+Scheduling policy (DESIGN.md §Scheduling): `--policy fcfs` (default)
+reproduces strict FCFS admission; `--policy priority` ranks admission
+by request priority class and preempts lower-class decodes on the
+paged arena (preempted requests resume bit-exactly — the integer
+path's determinism is the oracle).  `--arrival-rate QPS` switches from
+closed-loop replay (submit everything, drain) to the OPEN-LOOP
+harness: Poisson arrivals at the offered rate, with
+`--slo-ttft-p99` / `--slo-itl-p99` (seconds) declaring the SLO targets
+that define goodput — SLO-meeting completions per second — and the
+sustained verdict (aggregate p99s within targets at this rate).
+
 Multi-device serving (DESIGN.md §Serving ¶Multi-device): `--mesh N`
 builds a ("data", "model") serving mesh with N devices on the model
 axis, `--kv-shard` shards the KV arena along kv heads over it, and
@@ -71,9 +82,14 @@ from repro.core.rep import Rep  # noqa: E402
 from repro.data.synthetic import SyntheticConfig, SyntheticStream  # noqa: E402
 from repro.models.lm import DecoderLM  # noqa: E402
 from repro.serving import (  # noqa: E402
+    Request,
     SchedulerConfig,
+    ServingConfig,
     ServingEngine,
     Telemetry,
+    make_policy,
+    poisson_arrivals,
+    run_open_loop,
 )
 
 
@@ -190,6 +206,36 @@ def main():
         "(0: synchronous)",
     )
     ap.add_argument(
+        "--policy",
+        default="fcfs",
+        choices=("fcfs", "priority"),
+        help="scheduling policy (DESIGN.md §Scheduling): fcfs "
+        "reproduces strict arrival order; priority ranks "
+        "admission by request class and preempts lower-class "
+        "decodes (paged arena)",
+    )
+    ap.add_argument(
+        "--arrival-rate",
+        type=float,
+        default=0.0,
+        help="open-loop Poisson arrival rate in requests/s "
+        "(0: closed-loop replay — submit everything, drain)",
+    )
+    ap.add_argument(
+        "--slo-ttft-p99",
+        type=float,
+        default=0.0,
+        help="TTFT SLO target in seconds for the open-loop "
+        "goodput rollup (0: no TTFT SLO)",
+    )
+    ap.add_argument(
+        "--slo-itl-p99",
+        type=float,
+        default=0.0,
+        help="inter-token-latency SLO target in seconds for "
+        "the open-loop goodput rollup (0: no ITL SLO)",
+    )
+    ap.add_argument(
         "--trace-out",
         default="",
         help="write the request-lifecycle trace as JSONL here "
@@ -222,20 +268,26 @@ def main():
     tel = None
     if args.trace_out or args.metrics_out or args.profile_annotations:
         tel = Telemetry(profile_annotations=args.profile_annotations)
-    engine = ServingEngine(
-        lm, tables, n_slots=args.slots, max_len=max_len,
+    engine = ServingEngine(lm, tables, ServingConfig(
+        n_slots=args.slots, max_len=max_len,
         paged=args.paged, page_size=args.page_size,
         n_pages=args.pages or None,
         paged_kernel=not args.paged_gather,
         mesh=mesh, kv_shard=args.kv_shard,
         dispatch_depth=args.dispatch_depth,
         telemetry=tel,
+        policy=make_policy(
+            args.policy,
+            **({"slo_ttft_s": args.slo_ttft_p99}
+               if args.policy == "priority" and args.slo_ttft_p99
+               else {})),
         scheduler=SchedulerConfig(
             prefill_bucket=args.prefill_bucket,
             prefill_chunk=args.prefill_chunk,
-            max_chunks_per_step=args.max_chunks_per_step or None))
+            max_chunks_per_step=args.max_chunks_per_step or None)))
     engine.warmup()  # precompile decode + every chunk row bucket
     rng = np.random.default_rng(0)
+    requests = []
     for i in range(args.requests):
         if args.ragged:
             # p <= max_len - 1 keeps >= 1 position for generation
@@ -246,11 +298,26 @@ def main():
             g = int(rng.integers(1, min(args.gen, max_len - p) + 1))
         else:
             p, g = args.prompt_len, args.gen
-        engine.submit(
-            rng.integers(0, lm.cfg.vocab, size=(p,)), max_new_tokens=g
-        )
-        engine.step()  # arrivals interleave with decoding
-    completions = engine.run_until_drained()
+        requests.append(Request(
+            rng.integers(0, lm.cfg.vocab, size=(p,)),
+            max_new_tokens=g,
+            # under the priority policy, alternate classes so the
+            # class-aware admission/preemption is visible from the CLI
+            priority=i % 2 if args.policy == "priority" else 0,
+        ))
+    open_loop = None
+    if args.arrival_rate > 0:
+        open_loop = run_open_loop(
+            engine, requests,
+            poisson_arrivals(len(requests), args.arrival_rate, rng),
+            slo_ttft_s=args.slo_ttft_p99 or None,
+            slo_itl_s=args.slo_itl_p99 or None)
+        completions = open_loop.completions
+    else:
+        for req in requests:
+            engine.submit(req)
+            engine.step()  # arrivals interleave with decoding
+        completions = engine.run_until_drained()
     s = engine.stats()
     if mesh is not None:
         print(
@@ -263,8 +330,25 @@ def main():
         f"{s['n_generated']} tokens in {s['wall_s']:.2f}s "
         f"({s['throughput_tok_s']:.1f} tok/s integer-only, "
         f"mean TTFT {s['mean_ttft_s'] * 1e3:.0f} ms, "
-        f"occupancy {s['mean_occupancy']:.2f})"
+        f"occupancy {s['mean_occupancy']:.2f}, "
+        f"policy {s['policy']})"
     )
+    if s["n_preempts"]:
+        print(
+            f"  preemptions: {s['n_preempts']} "
+            "(every victim resumed bit-exactly — the resume parity "
+            "oracle raises otherwise)"
+        )
+    if open_loop is not None:
+        o = open_loop
+        print(
+            f"  open loop: offered {o.offered_qps:.2f} req/s, "
+            f"goodput {o.goodput_qps:.2f} req/s "
+            f"(SLO attainment {o.slo_attainment:.0%}"
+            + (f", sustained={o.sustained}" if o.sustained is not None
+               else "")
+            + ")"
+        )
     if args.paged:
         print(
             f"  paged arena: peak {s['max_pages_in_use']}/{s['n_pages']} "

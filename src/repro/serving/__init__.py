@@ -1,18 +1,40 @@
 """Continuous-batching integer serving engine (DESIGN.md §Serving).
 
 The scheduling layer above models/lm.py's ID `prefill`/`decode_step`:
-slot-pooled or paged KV arena, FCFS admission with bucketed prefill,
-fused per-slot-position decode, greedy argmax on int32 logits.
+slot-pooled or paged KV arena behind the `Arena` protocol, pluggable
+`SchedulingPolicy` admission/preemption (DESIGN.md §Scheduling; FCFS
+by default, priority + paged preemption available), fused
+per-slot-position decode, greedy argmax on int32 logits.
 """
 
 from repro.serving.cache import (
     PAGE_NULL,
+    Arena,
     PagedArena,
     SlotArena,
     assert_integer_caches,
     float_cache_leaves,
+    make_arena,
 )
+from repro.serving.config import ServingConfig
 from repro.serving.engine import DispatchQueue, ServingEngine
+from repro.serving.loadgen import (
+    OpenLoopResult,
+    poisson_arrivals,
+    run_open_loop,
+    trace_arrivals,
+)
+from repro.serving.policy import (
+    DecodeSnap,
+    EngineView,
+    FCFSPolicy,
+    PendingSnap,
+    PrefillSnap,
+    PrioritySLOPolicy,
+    SchedulingPolicy,
+    StepPlan,
+    make_policy,
+)
 from repro.serving.request import (
     FINISH_LENGTH,
     FINISH_MAX_LEN,
@@ -20,27 +42,45 @@ from repro.serving.request import (
     Completion,
     PrefillState,
     Request,
+    ResumeState,
 )
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 from repro.serving.telemetry import NULL, NullTelemetry, Telemetry
 
 __all__ = [
+    "Arena",
     "Completion",
+    "DecodeSnap",
     "DispatchQueue",
+    "EngineView",
+    "FCFSPolicy",
     "FINISH_LENGTH",
     "FINISH_MAX_LEN",
     "FINISH_STOP",
     "NULL",
     "NullTelemetry",
+    "OpenLoopResult",
     "PAGE_NULL",
     "PagedArena",
+    "PendingSnap",
+    "PrefillSnap",
     "PrefillState",
+    "PrioritySLOPolicy",
     "Request",
+    "ResumeState",
     "Scheduler",
     "SchedulerConfig",
+    "SchedulingPolicy",
+    "ServingConfig",
     "ServingEngine",
     "SlotArena",
+    "StepPlan",
     "Telemetry",
     "assert_integer_caches",
     "float_cache_leaves",
+    "make_arena",
+    "make_policy",
+    "poisson_arrivals",
+    "run_open_loop",
+    "trace_arrivals",
 ]

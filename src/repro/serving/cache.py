@@ -49,7 +49,15 @@ hybrid groups.
 
 from __future__ import annotations
 
-from typing import Any, List, Optional, Tuple
+from typing import (
+    TYPE_CHECKING,
+    Any,
+    List,
+    Optional,
+    Protocol,
+    Tuple,
+    runtime_checkable,
+)
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +68,9 @@ from repro.core.rep import Rep
 # physical page 0 is the never-allocated trash page (the write helpers
 # in layers/attention.py route masked positions there; one definition)
 from repro.layers.attention import PAGE_NULL
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.serving.config import ServingConfig
 
 
 def float_cache_leaves(caches) -> List[Tuple[str, Any]]:
@@ -179,6 +190,128 @@ def _out_shardings(shardings) -> dict:
     return {} if shardings is None else {"out_shardings": shardings}
 
 
+@runtime_checkable
+class Arena(Protocol):
+    """The engine-facing arena contract (DESIGN.md §Serving).
+
+    `SlotArena` and `PagedArena` have always shared this surface
+    informally; the protocol makes it typed and testable, and lets the
+    engine (and any scheduling policy's capacity math) depend on the
+    contract alone.  The paged-only notions degrade cleanly on the
+    contiguous arena: `budget_left` is None (slots are the only gate),
+    `pages_needed`/`committed_for` are 0, `release_pages` frees
+    nothing.
+
+    Lifecycle: `can_admit` -> `alloc` (lease + commit worst case) ->
+    `touch`/`touch_range` (materialize on demand) -> `release` (or
+    `release_pages` + `release`, the preemption reclaim half).
+    Dispatch plumbing: `decode_view`/`absorb` for the fused decode,
+    `prefill_view`/`absorb_rows` for the packed chunk dispatch,
+    `write_slot` for the one-shot prefill scatter.
+    """
+
+    n_slots: int
+    max_len: int
+
+    # -- capacity / admission --
+    @property
+    def n_free(self) -> int: ...
+
+    @property
+    def n_leased(self) -> int: ...
+
+    @property
+    def budget_left(self) -> Optional[int]:
+        """Uncommitted page budget (None: no page dimension)."""
+        ...
+
+    def can_admit(self, prompt_len: int, total_len: int) -> bool: ...
+
+    def check_request(self, prompt_len: int, total_len: int): ...
+
+    def pages_needed(self, total_len: int) -> int:
+        """Worst-case page commitment for a request (0: unpaged)."""
+        ...
+
+    def committed_for(self, slot: int) -> int:
+        """Pages committed to `slot`'s lease (0: unpaged) — what a
+        preemption of this slot would hand back to the budget."""
+        ...
+
+    # -- lifecycle --
+    def alloc(
+        self,
+        req_id: int,
+        prompt_len: int,
+        total_len: Optional[int] = None,
+        written: Optional[int] = None,
+    ) -> int: ...
+
+    def touch(self, slot: int, pos: int): ...
+
+    def touch_range(self, slot: int, start: int, end: int): ...
+
+    def release(self, slot: int): ...
+
+    def release_pages(self, slot: int) -> List[int]:
+        """Reclaim the slot's physical pages without ending the lease
+        (the preemption primitive; [] for the unpaged arena)."""
+        ...
+
+    def advance(self, slot: int, n: int = 1): ...
+
+    # -- dispatch plumbing --
+    def write_slot(self, slot: int, single_caches): ...
+
+    def decode_view(self): ...
+
+    def absorb(self, new_caches): ...
+
+    def prefill_view(self, slots): ...
+
+    def absorb_rows(self, slots, row_caches): ...
+
+    def cache_shardings(self): ...
+
+    def decode_shardings(self): ...
+
+    def prefill_shardings(self): ...
+
+    # -- observability --
+    def reject_reason(self, prompt_len: int, total_len: int) -> str: ...
+
+    def span_pages(self, slot: int, start: int, end: int) -> list: ...
+
+    def gauges(self) -> dict: ...
+
+    def stats(self) -> dict: ...
+
+    def reset_peaks(self): ...
+
+
+def make_arena(lm, cfg: "ServingConfig") -> "Arena":
+    """Build the arena a ServingConfig describes (the one construction
+    site for both strategies; exported from serving/__init__)."""
+    if cfg.paged:
+        n_pages = cfg.n_pages
+        if n_pages is None:
+            # default: the same arena positions a contiguous SlotArena
+            # of this geometry would reserve
+            n_pages = -(-(cfg.n_slots * cfg.max_len) // cfg.page_size)
+        return PagedArena(
+            lm,
+            n_slots=cfg.n_slots,
+            max_len=cfg.max_len,
+            page_size=cfg.page_size,
+            n_pages=n_pages,
+            mesh=cfg.mesh,
+            kv_shard=cfg.kv_shard,
+        )
+    return SlotArena(
+        lm, cfg.n_slots, cfg.max_len, mesh=cfg.mesh, kv_shard=cfg.kv_shard
+    )
+
+
 class SlotArena:
     """Owns the cache arena + slot lifecycle (free -> leased -> free).
 
@@ -261,12 +394,25 @@ class SlotArena:
     def n_leased(self) -> int:
         return self.n_slots - len(self._free)
 
+    @property
+    def budget_left(self) -> Optional[int]:
+        """No page dimension: slots are the only admission gate."""
+        return None
+
     def can_admit(self, prompt_len: int, total_len: int) -> bool:
         """A free slot always holds a worst-case request."""
         return bool(self._free)
 
     def check_request(self, prompt_len: int, total_len: int):
         """Slot capacity is length-gated by the scheduler; no-op."""
+
+    def pages_needed(self, total_len: int) -> int:
+        """Contiguous rows commit no pages."""
+        return 0
+
+    def committed_for(self, slot: int) -> int:
+        """Contiguous rows commit no pages."""
+        return 0
 
     def alloc(
         self,
@@ -296,6 +442,13 @@ class SlotArena:
         self.owner[slot] = None
         self.lengths[slot] = 0
         self._free.append(slot)
+
+    def release_pages(self, slot: int) -> List[int]:
+        """Nothing page-granular to reclaim: a preempted slot's rows
+        are recycled by release() alone (stale contents stay masked)."""
+        if self.owner[slot] is None:
+            raise RuntimeError(f"slot {slot} is not leased")
+        return []
 
     # -- shardings ------------------------------------------------------
     def cache_shardings(self):
@@ -565,6 +718,22 @@ class PagedArena:
     def free_pages(self) -> int:
         return len(self._free_pages)
 
+    @property
+    def budget_left(self) -> Optional[int]:
+        """Uncommitted page budget — what admission (or a policy's
+        capacity simulation) may still hand out."""
+        return self.n_pages - self.committed_pages
+
+    def pages_needed(self, total_len: int) -> int:
+        """Worst-case commitment for a request (the protocol name for
+        `_pages_for`)."""
+        return self._pages_for(total_len)
+
+    def committed_for(self, slot: int) -> int:
+        """Pages committed to `slot`'s lease — returned to the budget
+        if a policy preempts it."""
+        return int(self._commit[slot])
+
     def can_admit(self, prompt_len: int, total_len: int) -> bool:
         """Admission gate: a free decode row AND uncommitted budget for
         the request's own worst case.  Committing (not materializing)
@@ -639,19 +808,30 @@ class PagedArena:
         ):
             self.touch(slot, blk * self.page_size)
 
-    def release(self, slot: int):
-        """Recycle the slot and ALL its pages.  Page contents stay
-        stale; a future tenant's prefill overwrites every allocated
-        block before any of its positions become visible."""
+    def release_pages(self, slot: int) -> List[int]:
+        """Return ALL of `slot`'s physical pages to the free pool and
+        point its table row back at PAGE_NULL, WITHOUT ending the lease
+        — the reclaim half of preemption (DESIGN.md §Scheduling).  Page
+        contents stay stale; the evicted request's re-prefill (or a
+        future tenant) overwrites every block before any of its
+        positions become visible.  Returns the freed page ids."""
         if self.owner[slot] is None:
             raise RuntimeError(f"slot {slot} is not leased")
+        freed = []
         for blk in range(self.pages_per_slot):
             page = int(self.page_table[slot, blk])
             if page != PAGE_NULL:
                 self._free_pages.append(page)
                 self.page_table[slot, blk] = PAGE_NULL
-        self.owner[slot] = None
+                freed.append(page)
         self.lengths[slot] = 0
+        return freed
+
+    def release(self, slot: int):
+        """Recycle the slot and ALL its pages (release_pages + end the
+        lease and uncommit the budget)."""
+        self.release_pages(slot)
+        self.owner[slot] = None
         self.committed_pages -= int(self._commit[slot])
         self._commit[slot] = 0
         self._free_slots.append(slot)

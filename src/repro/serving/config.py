@@ -1,0 +1,101 @@
+"""`ServingConfig`: one validated construction record for the engine.
+
+`ServingEngine.__init__` grew a keyword per PR (paged geometry, kernel
+variant, mesh placement, dispatch pipelining, telemetry...).  This
+dataclass collapses the sprawl into a single value the engine — and
+`cache.make_arena` — consume, with validation at construction instead
+of failure inside the first step.  The old keywords still work through
+a deprecation shim (`ServingConfig.from_legacy`), so call sites can
+migrate incrementally; in-repo callers all pass a config.
+
+The `policy` field is the scheduling brain (serving/policy.py,
+DESIGN.md §Scheduling): None means `FCFSPolicy()`, today's behavior.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Any, Optional
+
+from repro.serving.scheduler import SchedulerConfig
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.serving.policy import SchedulingPolicy
+
+# ServingEngine keywords accepted before the config existed, in the
+# pre-config signature order (the from_legacy contract).
+LEGACY_KWARGS = (
+    "n_slots",
+    "max_len",
+    "scheduler",
+    "paged",
+    "page_size",
+    "n_pages",
+    "paged_kernel",
+    "mesh",
+    "kv_shard",
+    "dispatch_depth",
+    "telemetry",
+)
+
+
+@dataclasses.dataclass
+class ServingConfig:
+    """Everything ServingEngine needs besides the model + tables."""
+
+    # arena geometry
+    n_slots: int = 8
+    max_len: int = 256
+    # paged arena (DESIGN.md §Serving ¶Paged KV)
+    paged: bool = False
+    page_size: int = 16
+    n_pages: Optional[int] = None  # None: SlotArena-equivalent positions
+    # paged decode variant: None -> the fused kernel iff paged
+    paged_kernel: Optional[bool] = None
+    # multi-device placement (DESIGN.md §Serving ¶Multi-device)
+    mesh: Any = None
+    kv_shard: bool = False
+    dispatch_depth: int = 0  # 0 sync, 1 one-step pipeline
+    # scheduling: queue shape knobs + the policy that plans each step
+    scheduler: Optional[SchedulerConfig] = None
+    policy: Optional["SchedulingPolicy"] = None  # None -> FCFSPolicy()
+    # observability sink (DESIGN.md §Observability); None -> NULL
+    telemetry: Any = None
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {self.n_slots}")
+        if self.max_len < 1:
+            raise ValueError(f"max_len must be >= 1, got {self.max_len}")
+        if self.page_size < 1:
+            raise ValueError(
+                f"page_size must be >= 1, got {self.page_size}"
+            )
+        if self.n_pages is not None and self.n_pages < 1:
+            raise ValueError(
+                f"n_pages must be >= 1, got {self.n_pages}"
+            )
+        if self.dispatch_depth not in (0, 1):
+            raise ValueError(
+                "dispatch_depth must be 0 (synchronous) or 1 "
+                f"(one in-flight decode), got {self.dispatch_depth}"
+            )
+        if self.kv_shard and self.mesh is None:
+            raise ValueError(
+                "kv_shard=True needs a mesh "
+                "(launch.mesh.make_serving_mesh)"
+            )
+        if self.scheduler is None:
+            self.scheduler = SchedulerConfig()
+
+    @classmethod
+    def from_legacy(cls, **kwargs) -> "ServingConfig":
+        """Map the pre-config ServingEngine keywords onto a config
+        (the deprecation shim's translation table)."""
+        unknown = sorted(set(kwargs) - set(LEGACY_KWARGS))
+        if unknown:
+            raise TypeError(
+                f"unknown ServingEngine keyword(s): {unknown} "
+                f"(legacy keywords: {list(LEGACY_KWARGS)})"
+            )
+        return cls(**kwargs)

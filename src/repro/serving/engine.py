@@ -1,29 +1,44 @@
 """`ServingEngine`: continuous batching over the integer-only model.
 
-The engine owns a fixed-shape cache arena (cache.SlotArena, or
-cache.PagedArena when ``paged=True``) and drives the ID-representation
-`prefill` / `decode_step` of models/lm.py:
+The engine owns a fixed-shape cache arena (an `Arena` — cache.SlotArena
+or cache.PagedArena, built by cache.make_arena from the ServingConfig)
+and drives the ID-representation `prefill` / `decode_step` of
+models/lm.py.
 
-  submit()            enqueue a Request (FCFS)
-  step()              one scheduler iteration:
-                        1. admit pending requests while the arena
-                           accepts them (free slot; for the paged
-                           arena also a free page budget)
-                        2. one packed chunked-prefill dispatch: the
-                           next prefill_chunk tokens of every
-                           prefilling request, written straight into
-                           the arena at per-slot offsets through a
-                           COMPACT row view (power-of-two row bucket;
-                           compile-cache keyed on (rows, chunk));
-                           rows whose final chunk completed take their
-                           first token from that dispatch's per-row
-                           last-index logits
-                        3. one FUSED decode step over the whole arena
-                           with a per-slot position vector; per-slot
-                           done-masking is host-side (finished slots
-                           are released and their rows become
-                           don't-cares); paged arenas decode through
-                           the fused paged-attention kernel by default
+Policy/mechanism split (DESIGN.md §Scheduling): the engine is pure
+MECHANISM.  Every step it samples a read-only `EngineView` (queue,
+per-slot progress + SLO clocks, arena gauges), asks its
+`SchedulingPolicy` (serving/policy.py; FCFSPolicy by default) for a
+`StepPlan`, and executes the plan — it makes no admission, packing,
+eviction, or decode decision of its own:
+
+  submit()            enqueue a Request (queue order; the POLICY
+                        decides service order)
+  step()              execute one StepPlan:
+                        1. preempt the planned slots: reclaim their
+                           pages (arena.release/release_pages) and
+                           requeue the evicted requests with their
+                           decode progress parked host-side — integer
+                           determinism makes the later re-prefill
+                           resume bit-exactly (¶Preemption
+                           bit-exactness)
+                        2. admit the planned requests (lease a slot,
+                           commit the page budget)
+                        3. one packed chunked-prefill dispatch over
+                           the planned (req_id, n) rows, written
+                           straight into the arena at per-slot offsets
+                           through a COMPACT row view (power-of-two
+                           row bucket; compile-cache keyed on
+                           (rows, chunk)); rows whose final chunk
+                           completed take their first token from that
+                           dispatch's per-row last-index logits
+                        4. if the plan says so, one FUSED decode step
+                           over the whole arena with a per-slot
+                           position vector; per-slot done-masking is
+                           host-side (finished slots are released and
+                           their rows become don't-cares); paged
+                           arenas decode through the fused
+                           paged-attention kernel by default
                            (paged_kernel=False keeps the
                            write-then-gather oracle)
   run_until_drained() step until queue + prefills + slots are empty
@@ -93,7 +108,8 @@ import collections
 import contextlib
 import dataclasses
 import time
-from typing import Any, Callable, Deque, Dict, List, Optional
+import warnings
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -102,9 +118,18 @@ import numpy as np
 from repro.core.rep import Rep
 from repro.layers.attention import INACTIVE_POS
 from repro.serving.cache import (
-    PagedArena,
-    SlotArena,
+    Arena,
     assert_integer_caches,
+    make_arena,
+)
+from repro.serving.config import ServingConfig
+from repro.serving.policy import (
+    DecodeSnap,
+    EngineView,
+    FCFSPolicy,
+    PendingSnap,
+    PrefillSnap,
+    StepPlan,
 )
 from repro.serving.request import (
     FINISH_LENGTH,
@@ -114,8 +139,9 @@ from repro.serving.request import (
     PrefillState,
     Request,
     RequestState,
+    ResumeState,
 )
-from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.scheduler import Scheduler
 from repro.serving.telemetry import NULL as NULL_TELEMETRY
 
 
@@ -182,42 +208,51 @@ class ServingEngine:
         self,
         lm,
         tables,
+        config: Optional[ServingConfig] = None,
         *,
-        n_slots: int = 8,
-        max_len: int = 256,
-        scheduler: Optional[SchedulerConfig] = None,
         on_token: Optional[Callable[[int, int], None]] = None,
-        paged: bool = False,
-        page_size: int = 16,
-        n_pages: Optional[int] = None,
-        paged_kernel: Optional[bool] = None,
-        mesh=None,
-        kv_shard: bool = False,
-        dispatch_depth: int = 0,
-        telemetry=None,
+        **legacy,
     ):
+        if legacy:
+            # deprecation shim: the pre-config keyword signature
+            # (n_slots=..., paged=..., ...) still works, translated
+            # through ServingConfig.from_legacy
+            if config is not None:
+                raise TypeError(
+                    "pass either a ServingConfig or legacy keywords, "
+                    f"not both (got {sorted(legacy)})"
+                )
+            warnings.warn(
+                "ServingEngine(**kwargs) is deprecated; pass "
+                "ServingEngine(lm, tables, ServingConfig(...))",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            config = ServingConfig.from_legacy(**legacy)
+        cfg = self.config = config if config is not None else ServingConfig()
         if lm.cfg.input_mode != "tokens":
             raise ValueError(
                 "ServingEngine serves token LMs "
                 f"(input_mode={lm.cfg.input_mode!r})"
             )
-        if kv_shard and mesh is None:
-            raise ValueError(
-                "kv_shard=True needs a mesh "
-                "(launch.mesh.make_serving_mesh)"
-            )
+        mesh = cfg.mesh
         if mesh is not None and "model" not in mesh.axis_names:
             raise ValueError(
                 f'serving mesh needs a "model" axis, got {mesh.axis_names}'
             )
         self.lm = lm
         self.mesh = mesh
-        self.kv_shard = bool(kv_shard)
-        self.queue = DispatchQueue(dispatch_depth)
+        self.kv_shard = bool(cfg.kv_shard)
+        self.queue = DispatchQueue(cfg.dispatch_depth)
+        # the scheduling brain (DESIGN.md §Scheduling): every per-step
+        # decision flows through policy.plan(EngineView) -> StepPlan
+        self.policy = cfg.policy if cfg.policy is not None else FCFSPolicy()
         # observability sink (DESIGN.md §Observability): the shared
         # no-op singleton unless the caller hands in a Telemetry —
         # every hook below is bit-neutral (host state only)
-        self.tel = NULL_TELEMETRY if telemetry is None else telemetry
+        self.tel = (
+            NULL_TELEMETRY if cfg.telemetry is None else cfg.telemetry
+        )
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -230,36 +265,22 @@ class ServingEngine:
                 tables, jax.tree.map(lambda _: repl, tables)
             )
         self.tables = tables
-        if paged:
-            if n_pages is None:
-                # default: the same arena positions a contiguous
-                # SlotArena of this geometry would reserve
-                n_pages = -(-(n_slots * max_len) // page_size)
-            self.arena = PagedArena(
-                lm,
-                n_slots=n_slots,
-                max_len=max_len,
-                page_size=page_size,
-                n_pages=n_pages,
-                mesh=mesh,
-                kv_shard=kv_shard,
-            )
-        else:
-            self.arena = SlotArena(
-                lm, n_slots, max_len, mesh=mesh, kv_shard=kv_shard
-            )
+        self.arena: Arena = make_arena(lm, cfg)
         assert_integer_caches(
             self.arena.caches,
             allow_ssm_state=lm.cfg.family in ("ssm", "hybrid"),
         )
-        self.sched = Scheduler(scheduler or SchedulerConfig(), max_len)
+        self.sched = Scheduler(cfg.scheduler, cfg.max_len)
         self.on_token = on_token
 
         self.active: Dict[int, RequestState] = {}  # slot -> state
-        # slot -> chunked-prefill progress; insertion order IS the FCFS
-        # packing order the scheduler's plan_chunks consumes
+        # slot -> chunked-prefill progress; insertion order IS the
+        # admission order policies see in EngineView.prefilling
         self.prefilling: Dict[int, PrefillState] = {}
         self.completed: List[Completion] = []
+        # req_id -> decode progress parked by a preemption, waiting in
+        # the pending queue for re-admission (¶Preemption bit-exactness)
+        self._resume: Dict[int, ResumeState] = {}
         self._next_id = 0
 
         # paged decode path: the fused paged-attention kernel by
@@ -268,8 +289,8 @@ class ServingEngine:
         # write-then-gather jnp oracle when paged_kernel=False.  The
         # variant is pinned at trace time, so the single decode
         # compilation bakes the chosen path in.
-        self.paged_kernel = paged if paged_kernel is None else (
-            bool(paged_kernel) and paged
+        self.paged_kernel = cfg.paged if cfg.paged_kernel is None else (
+            bool(cfg.paged_kernel) and cfg.paged
         )
 
         def _decode_step(t, token, caches, pos):
@@ -283,7 +304,7 @@ class ServingEngine:
             return jnp.argmax(logits[:, 0, :], axis=-1), new_caches
 
         def _prefill_one(t, prompt, last_index):
-            caches = lm.init_caches(1, max_len, Rep.ID)
+            caches = lm.init_caches(1, cfg.max_len, Rep.ID)
             return lm.prefill(t, prompt, caches, last_index=last_index)
 
         def _prefill_chunk_step(t, toks, view, start, last):
@@ -350,7 +371,8 @@ class ServingEngine:
         self._occupancy_sum = 0.0
         self._n_generated = 0
         self._max_active = 0
-        self._n_admit_rejects = 0  # steps the FCFS head was blocked
+        self._n_admit_rejects = 0  # steps the policy reported a block
+        self._n_preempts = 0  # policy evictions executed
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
 
@@ -360,13 +382,15 @@ class ServingEngine:
         prompt,
         max_new_tokens: int = 16,
         stop_token: Optional[int] = None,
+        priority: int = 0,
     ) -> int:
         """Enqueue a request; returns its req_id.  `prompt` may be a
-        token array or an already-built Request."""
+        token array or an already-built Request.  `priority` is a
+        policy hint (serving/policy.py) — FCFS ignores it."""
         req = (
             prompt
             if isinstance(prompt, Request)
-            else Request(prompt, max_new_tokens, stop_token)
+            else Request(prompt, max_new_tokens, stop_token, priority)
         )
         self.arena.check_request(
             req.prompt_len, req.prompt_len + req.max_new_tokens
@@ -404,14 +428,20 @@ class ServingEngine:
         tel = self.tel
         tel.begin_step(self._steps)
         with tel.span("admission"):
-            progressed = self._admit_pending()
-        if self.prefilling:
-            rec = self._dispatch_prefill_chunk()
+            plan = self.policy.plan(self._view())
+            progressed = self._execute_preemptions(plan)
+            progressed |= self._execute_admissions(plan)
+        chunk_plan = []
+        if plan.chunks:
+            with tel.span("plan_chunks"):
+                chunk_plan = self._materialize_chunks(plan)
+        if chunk_plan:
+            rec = self._dispatch_prefill_chunk(chunk_plan)
             with tel.span("chunk_harvest"):
                 self._harvest_prefill_chunk(rec)
             progressed = True
         self._tick_stats()
-        if self.active:
+        if plan.decode and self.active:
             drec = self._dispatch_decode()
             with tel.span("harvest"):
                 self._harvest_decode(drec)
@@ -422,22 +452,42 @@ class ServingEngine:
 
     def _step_async(self) -> bool:
         """One-step-deep pipelined step (dispatch_depth=1): the host
-        work below the harvest line — admission, chunk packing, the
+        work below the harvest line — planning, admission, the
         chunk-dispatch enqueue — overlaps the decode dispatched by the
         PREVIOUS step, which is still executing on the device.  The
-        only forced sync is the (B,)-token harvest."""
+        only forced sync is the (B,)-token harvest.
+
+        Preemption is the exception: a plan that evicts slots first
+        drains the in-flight decode (the victim's token from step t is
+        real output and must be harvested into its resume record, and
+        an in-flight dispatch must not write through pages about to be
+        reclaimed), then executes sync-style.  FCFS never preempts, so
+        the overlap schedule below is byte-identical to the pre-policy
+        async engine on that path."""
         tel = self.tel
         tel.begin_step(self._steps)
         progressed = self.queue.pending > 0
         # (1) host scheduling + prefill enqueue: overlaps the in-flight
-        # decode.  Admission therefore sees slot releases one harvest
+        # decode.  Planning therefore sees slot releases one harvest
         # later than the sync engine — a timing shift only; per-request
         # tokens are pinned equal by the parity tests.
         with tel.span("admission"):
-            progressed |= self._admit_pending()
+            plan = self.policy.plan(self._view())
+            if plan.preempt and self.queue.pending:
+                # drain BEFORE evicting: harvest the victims' in-flight
+                # tokens, and let finished slots release normally (the
+                # preemption executor skips slots that emptied)
+                with tel.span("harvest"):
+                    self.queue.drain(self._harvest_decode)
+            progressed |= self._execute_preemptions(plan)
+            progressed |= self._execute_admissions(plan)
+        chunk_plan = []
+        if plan.chunks:
+            with tel.span("plan_chunks"):
+                chunk_plan = self._materialize_chunks(plan)
         chunk_rec = None
-        if self.prefilling:
-            chunk_rec = self._dispatch_prefill_chunk()
+        if chunk_plan:
+            chunk_rec = self._dispatch_prefill_chunk(chunk_plan)
             progressed = True
         # (2) token harvest: the pipeline's one blocking point — under
         # depth 1 a fat `harvest` span is overlapped DEVICE time (the
@@ -450,46 +500,196 @@ class ServingEngine:
                 self._harvest_prefill_chunk(chunk_rec)
         self._tick_stats()
         # (3) dispatch this step's decode; the next step harvests it
-        if self.active:
+        if plan.decode and self.active:
             self.queue.push(self._dispatch_decode())
             progressed = True
         self._t_last = time.perf_counter()
         self._end_step()
         return progressed
 
-    def _admit_pending(self) -> bool:
-        """FCFS admission up to max_prefills_per_step (host-side: the
-        arena predicates read host counters, so admission never waits
-        on the device)."""
-
-        def fits(req: Request) -> bool:
-            return self.arena.can_admit(
-                req.prompt_len, req.prompt_len + req.max_new_tokens
+    # -- plan construction + execution (mechanism only) -----------------
+    def _view(self) -> EngineView:
+        """Sample the read-only host-state snapshot the policy plans
+        from (DESIGN.md §Scheduling ¶Policy contract).  Host counters
+        only — building a view never waits on the device, which is what
+        lets planning overlap an in-flight decode."""
+        arena = self.arena
+        pending = []
+        for r in self.sched.pending:
+            resume = self._resume.get(r.req_id)
+            n_gen = len(resume.tokens) if resume is not None else 0
+            # resume re-prefills prompt + tokens[:-1] (source_len);
+            # the page commitment is the request's own worst case
+            # either way
+            source_len = r.prompt_len + max(n_gen - 1, 0)
+            pending.append(
+                PendingSnap(
+                    req=r,
+                    req_id=r.req_id,
+                    priority=r.priority,
+                    arrival_time=r.arrival_time,
+                    prompt_len=r.prompt_len,
+                    max_new_tokens=r.max_new_tokens,
+                    source_len=source_len,
+                    need_pages=arena.pages_needed(
+                        r.prompt_len + r.max_new_tokens
+                    ),
+                    n_generated=n_gen,
+                )
             )
+        prefilling = tuple(
+            PrefillSnap(
+                req_id=st.request.req_id,
+                slot=slot,
+                priority=st.request.priority,
+                arrival_time=st.request.arrival_time,
+                admit_time=st.admit_time,
+                offset=st.offset,
+                total=st.source_len,
+                is_resume=st.resume is not None,
+                pages_committed=arena.committed_for(slot),
+            )
+            for slot, st in self.prefilling.items()
+        )
+        active = tuple(
+            DecodeSnap(
+                req_id=st.request.req_id,
+                slot=slot,
+                priority=st.request.priority,
+                arrival_time=st.request.arrival_time,
+                admit_time=st.admit_time,
+                first_token_time=st.first_token_time,
+                n_generated=len(st.tokens),
+                budget_left=st.request.max_new_tokens - len(st.tokens),
+                pages_committed=arena.committed_for(slot),
+            )
+            for slot, st in self.active.items()
+        )
+        cfg = self.sched.cfg
+        return EngineView(
+            now=time.perf_counter(),
+            pending=tuple(pending),
+            prefilling=prefilling,
+            active=active,
+            free_slots=arena.n_free,
+            budget_left=arena.budget_left,
+            gauges=arena.gauges(),
+            prefill_mode=self._prefill_mode,
+            prefill_chunk=cfg.prefill_chunk,
+            max_chunks_per_step=cfg.max_chunks_per_step,
+            max_prefills_per_step=cfg.max_prefills_per_step,
+        )
 
+    def _execute_preemptions(self, plan: StepPlan) -> bool:
+        """Evict the planned slots (reversed, so appendleft-requeueing
+        leaves them at the queue head in plan order).  Slots that are
+        no longer leased — e.g. finished during the async drain that
+        preceded this — are skipped: plans are advisory against the
+        state the engine actually holds."""
+        did = False
+        for slot in reversed(plan.preempt):
+            did |= self._preempt_slot(slot)
+        return did
+
+    def _preempt_slot(self, slot: int) -> bool:
+        """The reclaim half of preemption (DESIGN.md §Scheduling):
+        release the slot's pages + lease, park decode progress in a
+        host-side ResumeState, and requeue the request at the queue
+        head.  Nothing device-side is touched beyond the release —
+        re-prefill rebuilds the KV image bit-exactly on resume."""
+        if slot in self.prefilling:
+            st = self.prefilling.pop(slot)
+            req, resume = st.request, st.resume
+            if resume is not None:
+                resume.n_preempts += 1
+        elif slot in self.active:
+            ast = self.active.pop(slot)
+            req = ast.request
+            resume = ResumeState(
+                tokens=list(ast.tokens),
+                first_token_time=ast.first_token_time,
+                admit_time=ast.admit_time,
+                emit_times=list(ast.emit_times),
+                n_preempts=ast.n_preempts + 1,
+            )
+        else:
+            return False  # already finished/released; nothing to evict
+        n_gen = len(resume.tokens) if resume is not None else 0
+        self._n_preempts += 1
+        if self.tel.enabled:
+            self.tel.event(
+                "preempt",
+                req_id=req.req_id,
+                slot=slot,
+                reason="policy",
+                n_generated=n_gen,
+            )
+        self.arena.release(slot)  # pages + lease back to the pool
+        if resume is not None:
+            self._resume[req.req_id] = resume
+        self.sched.requeue(req)
+        return True
+
+    def _execute_admissions(self, plan: StepPlan) -> bool:
+        """Lease slots to the planned requests, in plan order.  The
+        arena predicate is re-checked per admission (defense against a
+        policy over-promising); the policy's rejects are accounting
+        only and recorded as admit_reject events."""
         progressed = False
-        for _ in range(self.sched.cfg.max_prefills_per_step):
-            req = self.sched.pop_if(fits)
-            if req is None:
-                # head-of-line backpressure: the FCFS head (if any)
-                # did not fit — count it once per blocked step and
-                # name it in the trace (DESIGN.md §Observability)
-                head = self.sched.peek()
-                if head is not None:
-                    self._n_admit_rejects += 1
-                    if self.tel.enabled:
-                        self.tel.event(
-                            "admit_reject",
-                            req_id=head.req_id,
-                            reason=self.arena.reject_reason(
-                                head.prompt_len,
-                                head.prompt_len + head.max_new_tokens,
-                            ),
-                        )
+        for req in plan.admit:
+            if not self.sched.take(req):
+                continue  # not pending anymore; stale plan entry
+            if not self.arena.can_admit(
+                req.prompt_len, req.prompt_len + req.max_new_tokens
+            ):
+                # the plan over-committed: put the request back where
+                # the policy found it and count the block
+                self.sched.requeue(req)
+                plan.rejects.append(
+                    (
+                        req.req_id,
+                        self.arena.reject_reason(
+                            req.prompt_len,
+                            req.prompt_len + req.max_new_tokens,
+                        ),
+                    )
+                )
                 break
-            self._admit(req)  # consumes arena capacity `fits` re-reads
+            self._admit(req)
             progressed = True
+        self._n_admit_rejects += len(plan.rejects)
+        if self.tel.enabled:
+            for req_id, reason in plan.rejects:
+                self.tel.event(
+                    "admit_reject", req_id=req_id, reason=reason
+                )
         return progressed
+
+    def _materialize_chunks(
+        self, plan: StepPlan
+    ) -> List[Tuple[PrefillState, int, int]]:
+        """Resolve the plan's (req_id, n) chunk rows against live
+        prefill state: the engine owns offsets (mechanism), the policy
+        owns membership/order/row count.  n is clamped to the compiled
+        chunk width and the remaining source; empty or stale rows are
+        dropped."""
+        if not plan.chunks:
+            return []
+        by_id = {
+            st.request.req_id: st for st in self.prefilling.values()
+        }
+        C = self.sched.cfg.prefill_chunk
+        out: List[Tuple[PrefillState, int, int]] = []
+        seen = set()
+        for req_id, n in plan.chunks:
+            st = by_id.get(req_id)
+            if st is None or req_id in seen:
+                continue
+            seen.add(req_id)
+            n = min(int(n), C, st.source_len - st.offset)
+            if n > 0:
+                out.append((st, st.offset, n))
+        return out
 
     def _tick_stats(self):
         self._occupancy_sum += self.arena.n_leased / self.arena.n_slots
@@ -591,61 +791,100 @@ class ServingEngine:
         stack.enter_context(use_profile(self.mesh))
         return stack
 
+    def _resume_source(
+        self, req: Request, resume: Optional[ResumeState]
+    ) -> np.ndarray:
+        """What to prefill: the prompt, or prompt + tokens[:-1] for a
+        preempted request — whose last-index logits regenerate
+        tokens[-1] exactly (¶Preemption bit-exactness)."""
+        if resume is None:
+            return req.prompt
+        return np.concatenate(
+            [req.prompt, np.asarray(resume.tokens[:-1], np.int32)]
+        )
+
     def _admit(self, req: Request):
         """Lease a slot and start the request's prefill (mode-dependent:
         chunked admission only enqueues; whole-prompt prefills now).
-        The slot-lease stamp ends the request's `queued_s` window."""
+        The slot-lease stamp ends the request's `queued_s` window.  A
+        preempted request re-enters here: its parked ResumeState rides
+        the PrefillState and its original stamps survive."""
+        resume = self._resume.pop(req.req_id, None)
         if self._prefill_mode == "chunked":
+            source = self._resume_source(req, resume)
             slot = self.arena.alloc(
                 req.req_id,
-                req.prompt_len,
+                int(source.size),
                 req.prompt_len + req.max_new_tokens,
                 written=0,  # partial-prefill state: chunks arrive later
             )
             self.prefilling[slot] = PrefillState(
-                request=req, slot=slot, admit_time=time.perf_counter()
+                request=req,
+                slot=slot,
+                admit_time=(
+                    resume.admit_time
+                    if resume is not None
+                    else time.perf_counter()
+                ),
+                source=source,
+                resume=resume,
             )
             if self.tel.enabled:
                 self.tel.event("admit", req_id=req.req_id, slot=slot)
             return
-        self._admit_whole(req)
+        self._admit_whole(req, resume)
 
-    def _admit_whole(self, req: Request):
-        """Prefill `req` at batch 1 (bucketed or exact shape) and lease
-        a slot — the one-shot path (parity oracle; non-dense families)."""
+    def _admit_whole(
+        self, req: Request, resume: Optional[ResumeState] = None
+    ):
+        """Prefill at batch 1 (bucketed or exact shape) and lease a
+        slot — the one-shot path (parity oracle; non-dense families).
+        On resume the source is prompt + tokens[:-1] and the prefill's
+        last-index argmax must equal tokens[-1] (asserted)."""
+        source = self._resume_source(req, resume)
+        L = int(source.size)
         slot = self.arena.alloc(
             req.req_id,
-            req.prompt_len,
+            L,
             req.prompt_len + req.max_new_tokens,
         )
-        admit_t = time.perf_counter()
+        admit_t = (
+            resume.admit_time if resume is not None
+            else time.perf_counter()
+        )
         if self.tel.enabled:
             self.tel.event("admit", req_id=req.req_id, slot=slot)
-        P = req.prompt_len
-        Pb = self.sched.bucket_len(P) if self._bucketed_prefill else P
+        Pb = self.sched.bucket_len(L) if self._bucketed_prefill else L
         padded = np.zeros((1, Pb), np.int32)
-        padded[0, :P] = req.prompt
+        padded[0, :L] = source
         self.tel.dispatch("prefill", (Pb,))
-        # first token: greedy on the TRUE last prompt position (padded
+        # first token: greedy on the TRUE last source position (padded
         # positions after it are causally invisible to it)
         with self._dispatch_ctx(), self.tel.annotate(
             "repro.serving/prefill"
         ):
             logits, single = self._prefill(
-                self.tables, jnp.asarray(padded), jnp.int32(P - 1)
+                self.tables, jnp.asarray(padded), jnp.int32(L - 1)
             )
         first = int(jnp.argmax(logits[0, 0]))
         self.arena.write_slot(slot, single)
         now = time.perf_counter()
-        self._start_decoding(req, slot, first, now, admit_t)
+        if resume is not None:
+            self._resume_decoding(req, slot, first, now, resume)
+        else:
+            self._start_decoding(req, slot, first, now, admit_t)
 
-    def _dispatch_prefill_chunk(self) -> _InFlightChunk:
+    def _dispatch_prefill_chunk(
+        self, plan: List[Tuple[PrefillState, int, int]]
+    ) -> _InFlightChunk:
         """One packed chunked-prefill dispatch: write the next chunk of
-        up to max_chunks_per_step prefilling requests into the arena at
-        their per-slot offsets.  Harvesting (graduating rows whose
-        final chunk completed, with the first token from the dispatch's
-        per-row last-index logits) is split off so the async path can
-        enqueue this behind an in-flight decode without syncing.
+        the planned (state, offset, n) rows into the arena at their
+        per-slot offsets — membership/order/row count were the
+        policy's call (_materialize_chunks resolved them).  Harvesting
+        (graduating rows whose final chunk completed, with the first
+        token from the dispatch's per-row last-index logits) is split
+        off so the async path can enqueue this behind an in-flight
+        decode without syncing.
 
         The dispatch is COMPACT: only the participating slots' cache
         rows ride along (arena.prefill_view), its row count bucketed to
@@ -655,8 +894,6 @@ class ServingEngine:
         at INACTIVE_POS they write nothing and round-trip unchanged —
         which is why borrowing even a live slot's row is safe."""
         tel = self.tel
-        with tel.span("plan_chunks"):
-            plan = self.sched.plan_chunks(self.prefilling.values())
         with tel.span("chunk_dispatch"):
             C = self.sched.cfg.prefill_chunk
             n_rows = len(plan)
@@ -678,7 +915,7 @@ class ServingEngine:
             start = np.full((rows,), INACTIVE_POS, np.int32)  # pad rows
             last = np.zeros((rows,), np.int32)
             for r, (st, off, n) in enumerate(plan):
-                toks[r, :n] = st.request.prompt[off:off + n]
+                toks[r, :n] = st.source[off:off + n]
                 start[r] = off
                 last[r] = n - 1
                 # paged arena: allocate pages covering the chunk before
@@ -713,18 +950,25 @@ class ServingEngine:
 
     def _harvest_prefill_chunk(self, rec: _InFlightChunk):
         """Advance chunk cursors; graduate rows whose final chunk just
-        completed (their decode starts the same step, like sync)."""
+        completed (their decode starts the same step, like sync).  A
+        resuming row re-enters decode instead of emitting a first
+        token (¶Preemption bit-exactness)."""
         nxt = np.asarray(rec.tokens)
         now = time.perf_counter()
         for r, (st, off, n) in enumerate(rec.plan):
             self.arena.advance(st.slot, n)
-            if off + n < st.request.prompt_len:
+            if off + n < st.source_len:
                 st.offset = off + n  # carried into the next dispatch
                 continue
             del self.prefilling[st.slot]  # final chunk completed
-            self._start_decoding(
-                st.request, st.slot, int(nxt[r]), now, st.admit_time
-            )
+            if st.resume is not None:
+                self._resume_decoding(
+                    st.request, st.slot, int(nxt[r]), now, st.resume
+                )
+            else:
+                self._start_decoding(
+                    st.request, st.slot, int(nxt[r]), now, st.admit_time
+                )
 
     def _start_decoding(self, req: Request, slot: int, first: int,
                         now: float, admit_time: float):
@@ -747,6 +991,44 @@ class ServingEngine:
             )
         self._emit(req, first, slot)
         self._maybe_finish(st, now)
+
+    def _resume_decoding(self, req: Request, slot: int,
+                         predicted: int, now: float,
+                         resume: ResumeState):
+        """Re-enter decode after a preemption's re-prefill.  The
+        re-prefilled source was prompt + tokens[:-1], so its last-index
+        argmax must regenerate tokens[-1] — the integer path is
+        deterministic, making this THE runtime oracle for preemption
+        bit-exactness (DESIGN.md §Scheduling).  No token is emitted:
+        everything in `resume.tokens` was already emitted before the
+        eviction; decode continues from tokens[-1] at the exact
+        position the victim was stopped at (pos = P + len(tokens) - 1,
+        the next cache write position)."""
+        if predicted != resume.tokens[-1]:
+            raise RuntimeError(
+                "resume parity violated: re-prefill regenerated token "
+                f"{predicted} but the preempted request had emitted "
+                f"{resume.tokens[-1]} (req {req.req_id})"
+            )
+        st = RequestState(
+            request=req,
+            slot=slot,
+            tokens=list(resume.tokens),
+            last_token=resume.tokens[-1],
+            pos=req.prompt_len + len(resume.tokens) - 1,
+            first_token_time=resume.first_token_time,
+            admit_time=resume.admit_time,
+            emit_times=list(resume.emit_times),
+            n_preempts=resume.n_preempts,
+        )
+        self.active[slot] = st
+        if self.tel.enabled:
+            self.tel.event(
+                "resume",
+                req_id=req.req_id,
+                slot=slot,
+                n_preempts=resume.n_preempts,
+            )
 
     def _emit(self, req: Request, tok: int, slot: int):
         self._n_generated += 1
@@ -777,6 +1059,7 @@ class ServingEngine:
                 finish_time=now,
                 admit_time=st.admit_time,
                 emit_times=list(st.emit_times),
+                n_preempts=st.n_preempts,
             )
         )
         if self.tel.enabled:
@@ -853,6 +1136,7 @@ class ServingEngine:
         self._n_generated = 0
         self._max_active = 0
         self._n_admit_rejects = 0
+        self._n_preempts = 0
         self._t_first = None
         self._t_last = None
         self.arena.reset_peaks()
@@ -893,6 +1177,10 @@ class ServingEngine:
             "mean_prefill_s": float(np.mean(prefills)) if prefills else 0.0,
             "mean_decode_s": float(np.mean(decodes)) if decodes else 0.0,
             "admit_rejects": self._n_admit_rejects,
+            # policy evictions executed (DESIGN.md §Scheduling); FCFS
+            # never preempts, so this is 0 under the default policy
+            "n_preempts": self._n_preempts,
+            "policy": getattr(self.policy, "name", "?"),
             "mean_occupancy": (
                 self._occupancy_sum / self._steps if self._steps else 0.0
             ),

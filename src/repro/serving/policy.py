@@ -1,0 +1,374 @@
+"""Scheduling policies for the serving engine (DESIGN.md §Scheduling).
+
+The engine/policy split: `ServingEngine.step()` is pure mechanism — it
+builds a read-only `EngineView` snapshot of this step's host state,
+asks its `SchedulingPolicy` for a `StepPlan`, and executes the plan
+(preempt -> admit -> chunk dispatch -> decode).  Every *decision* —
+who is admitted and in what order, who gets a prefill chunk row, who
+is evicted under pressure, whether decode runs — lives here.  A policy
+reads host counters only (never a device value), so planning overlaps
+an in-flight decode under async dispatch exactly like the old inline
+scheduler did.
+
+Two policies ship:
+
+  `FCFSPolicy` — bit-exact with the pre-split engine: head-of-line
+  FCFS admission up to `max_prefills_per_step` gated by the arena's
+  capacity predicate (simulated, not consumed — the engine's alloc is
+  the one mutation site), FIFO chunk packing capped at
+  `max_chunks_per_step`, decode every step.  Never preempts.  The
+  parity tests pin it token-for-token against recorded pre-refactor
+  behavior on both arenas, sync and async.
+
+  `PrioritySLOPolicy` — priority classes + paged preemption: pending
+  requests are served highest `Request.priority` first (FCFS within a
+  class); when a request does not fit, strictly-lower-priority victims
+  are evicted (lowest class first, most recently admitted first — the
+  cheapest work to throw away) until it does.  Integer determinism
+  makes eviction exactly recoverable: the victim re-prefills
+  `prompt + tokens[:-1]` and resumes bit-identically (DESIGN.md
+  §Scheduling ¶Preemption bit-exactness).  An optional `slo_ttft_s`
+  bounds starvation: pending requests older than the target jump the
+  priority order (FCFS among the aged), though preemption eligibility
+  still uses base priorities, so aging cannot trigger eviction storms.
+
+Capacity math: policies plan several admissions per step, but the
+arena state they read is the pre-step snapshot — `AdmissionSim` is the
+tiny (slots, page-budget) ledger that mirrors what each planned
+admission/eviction will do to `can_admit`, so a plan never promises
+capacity the engine cannot deliver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Protocol, Tuple, runtime_checkable
+
+from repro.serving.request import Request
+
+# StepPlan.chunks entry: (req_id, n_tokens) — one prefill-chunk row.
+# The engine owns the offset (chunk progress is mechanism state); the
+# policy owns membership, order, and row count.
+ChunkItem = Tuple[int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class PendingSnap:
+    """One queued request, as a policy sees it."""
+
+    req: Request  # identity handle — goes back into StepPlan.admit
+    req_id: int
+    priority: int
+    arrival_time: float
+    prompt_len: int
+    max_new_tokens: int
+    source_len: int  # prefill length (prompt, + generated on resume)
+    need_pages: int  # worst-case page commitment (0: unpaged arena)
+    n_generated: int  # > 0: a preempted request awaiting resume
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillSnap:
+    """One slot mid-chunked-prefill."""
+
+    req_id: int
+    slot: int
+    priority: int
+    arrival_time: float
+    admit_time: float
+    offset: int  # source tokens already written
+    total: int  # source length (prompt, + generated on resume)
+    is_resume: bool
+    pages_committed: int  # handed back to the budget if evicted
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeSnap:
+    """One actively decoding slot."""
+
+    req_id: int
+    slot: int
+    priority: int
+    arrival_time: float
+    admit_time: float
+    first_token_time: float
+    n_generated: int
+    budget_left: int  # max_new_tokens - n_generated
+    pages_committed: int  # handed back to the budget if evicted
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineView:
+    """Read-only per-step snapshot the engine hands to its policy.
+
+    Everything is host state sampled at the top of the step: the
+    pending queue (FCFS order), per-slot prefill/decode progress with
+    SLO clocks (arrival/admit/first-token stamps vs `now`), and the
+    arena's capacity gauges.  `budget_left` is None for the unpaged
+    arena — slots are then the only admission gate.
+    """
+
+    now: float
+    pending: Tuple[PendingSnap, ...]  # queue order (FCFS)
+    prefilling: Tuple[PrefillSnap, ...]  # admission order
+    active: Tuple[DecodeSnap, ...]  # slot order
+    free_slots: int
+    budget_left: Optional[int]  # uncommitted pages (None: unpaged)
+    gauges: dict  # the arena's instantaneous gauges
+    # scheduler shape knobs (SchedulerConfig) + the engine's prefill
+    # dispatch decision — "chunked" | "bucketed" | "exact"
+    prefill_mode: str
+    prefill_chunk: int
+    max_chunks_per_step: Optional[int]
+    max_prefills_per_step: int
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """What the engine executes this step, in this order:
+
+    1. `preempt`   — evict these slots (pages reclaimed via
+                     `release_pages`, request requeued with its decode
+                     progress parked for bit-exact resume)
+    2. `admit`     — lease slots to these queued requests, in order
+    3. `chunks`    — rows of the packed chunked-prefill dispatch:
+                     (req_id, n_tokens); n is clamped to the remaining
+                     source and the compiled chunk width
+    4. `decode`    — whether the fused decode step runs
+
+    `rejects` is accounting, not action: (req_id, reason) for requests
+    the policy wanted to admit but could not fit — the engine counts
+    them and emits `admit_reject` trace events.
+    """
+
+    preempt: List[int] = dataclasses.field(default_factory=list)
+    admit: List[Request] = dataclasses.field(default_factory=list)
+    chunks: List[ChunkItem] = dataclasses.field(default_factory=list)
+    decode: bool = True
+    rejects: List[Tuple[int, str]] = dataclasses.field(
+        default_factory=list
+    )
+
+
+@runtime_checkable
+class SchedulingPolicy(Protocol):
+    """The policy contract: one StepPlan per engine step, computed
+    from host state only (DESIGN.md §Scheduling ¶Policy contract)."""
+
+    name: str
+
+    def plan(self, view: EngineView) -> StepPlan: ...
+
+
+class AdmissionSim:
+    """Mirror of the arena's admission ledger for multi-admission
+    planning: tracks (free slots, uncommitted page budget) through the
+    plan's hypothetical allocs/evictions, exactly as `Arena.can_admit`
+    will see them once the engine executes.  `budget` None means the
+    unpaged arena (slots are the only gate)."""
+
+    def __init__(self, view: EngineView):
+        self.free_slots = view.free_slots
+        self.budget = view.budget_left
+
+    def fits(self, snap: PendingSnap) -> bool:
+        if self.free_slots < 1:
+            return False
+        return self.budget is None or snap.need_pages <= self.budget
+
+    def admit(self, snap: PendingSnap) -> bool:
+        """Consume capacity for one admission if it fits."""
+        if not self.fits(snap):
+            return False
+        self.free_slots -= 1
+        if self.budget is not None:
+            self.budget -= snap.need_pages
+        return True
+
+    def evict(self, victim):
+        """Return a PrefillSnap/DecodeSnap's capacity to the ledger."""
+        self.free_slots += 1
+        if self.budget is not None:
+            self.budget += victim.pages_committed
+
+    def reject_reason(self, snap: PendingSnap) -> str:
+        """Arena-convention reason for a failed fit, computed against
+        the simulated ledger (matches `Arena.reject_reason` read after
+        the plan's earlier admissions have consumed real capacity)."""
+        return "no_slot" if self.free_slots < 1 else "no_pages"
+
+
+def _pack_chunks(
+    rows: List[Tuple[int, int, int]],
+    chunk: int,
+    cap: Optional[int],
+) -> List[ChunkItem]:
+    """FIFO chunk packing over (req_id, offset, total) rows: the next
+    `chunk`-token chunk of each, capped at `cap` rows per dispatch
+    (the fairness knob — fewer rows = less prefill compute stalling
+    the decode that follows)."""
+    plan: List[ChunkItem] = []
+    for req_id, offset, total in rows:
+        if cap is not None and len(plan) >= cap:
+            break
+        n = min(chunk, total - offset)
+        if n > 0:
+            plan.append((req_id, n))
+    return plan
+
+
+class FCFSPolicy:
+    """Today's behavior, extracted: FCFS head-of-line admission, FIFO
+    chunk packing, decode every step, no preemption.  Pinned
+    token-for-token against the pre-split engine by the parity tests
+    (both arenas × sync/async)."""
+
+    name = "fcfs"
+
+    def plan(self, view: EngineView) -> StepPlan:
+        plan = StepPlan()
+        sim = AdmissionSim(view)
+        queue = list(view.pending)
+        for _ in range(view.max_prefills_per_step):
+            if not queue:
+                break
+            head = queue[0]
+            if not sim.admit(head):
+                # head-of-line backpressure: when the oldest request
+                # does not fit, nothing younger overtakes it — count
+                # it once per blocked step, like the inline scheduler
+                plan.rejects.append(
+                    (head.req_id, sim.reject_reason(head))
+                )
+                break
+            plan.admit.append(queue.pop(0).req)
+        if view.prefill_mode == "chunked":
+            rows = [
+                (s.req_id, s.offset, s.total) for s in view.prefilling
+            ]
+            admitted = {r.req_id for r in plan.admit}
+            rows += [
+                (p.req_id, 0, p.source_len)
+                for p in view.pending
+                if p.req_id in admitted
+            ]
+            plan.chunks = _pack_chunks(
+                rows, view.prefill_chunk, view.max_chunks_per_step
+            )
+        return plan
+
+
+class PrioritySLOPolicy:
+    """Priority classes + paged preemption (DESIGN.md §Scheduling).
+
+    Admission order: highest `Request.priority` first, FCFS within a
+    class.  When a candidate does not fit and `preempt` is on, the
+    policy evicts strictly-lower-priority victims — lowest class
+    first, most recently admitted first (LIFO: the least sunk work) —
+    until the candidate fits; if no victim set suffices, the eviction
+    is rolled back and the candidate waits (counted as a reject).
+
+    `slo_ttft_s`: pending requests older than the TTFT target jump to
+    the front of the admission order (FCFS among the aged) so low
+    classes cannot starve.  Aging affects ORDER only — eviction
+    eligibility keeps base priorities, so an aged class-0 request
+    never preempts class-1 work.
+    """
+
+    name = "priority"
+
+    def __init__(
+        self,
+        *,
+        preempt: bool = True,
+        slo_ttft_s: Optional[float] = None,
+    ):
+        self.preempt = bool(preempt)
+        self.slo_ttft_s = slo_ttft_s
+
+    def _order(self, view: EngineView) -> List[PendingSnap]:
+        def key(p: PendingSnap):
+            aged = (
+                self.slo_ttft_s is not None
+                and (view.now - p.arrival_time) >= self.slo_ttft_s
+            )
+            return (0 if aged else 1, -p.priority, p.arrival_time)
+
+        return sorted(view.pending, key=key)
+
+    def plan(self, view: EngineView) -> StepPlan:
+        plan = StepPlan()
+        sim = AdmissionSim(view)
+        # victim pool: cheapest eviction first — lowest class, then
+        # most recently admitted (LIFO minimizes thrown-away work and
+        # keeps the oldest tenants stable)
+        victims = sorted(
+            list(view.prefilling) + list(view.active),
+            key=lambda v: (v.priority, -v.admit_time),
+        )
+        evicted: set = set()
+        for cand in self._order(view):
+            if len(plan.admit) >= view.max_prefills_per_step:
+                break
+            if sim.admit(cand):
+                plan.admit.append(cand.req)
+                continue
+            if not self.preempt:
+                plan.rejects.append(
+                    (cand.req_id, sim.reject_reason(cand))
+                )
+                continue
+            chosen = []
+            saved = (sim.free_slots, sim.budget)
+            for v in victims:
+                if v.slot in evicted or v.priority >= cand.priority:
+                    continue
+                chosen.append(v)
+                sim.evict(v)
+                if sim.fits(cand):
+                    break
+            if sim.admit(cand):
+                evicted.update(v.slot for v in chosen)
+                plan.preempt.extend(v.slot for v in chosen)
+                plan.admit.append(cand.req)
+            else:
+                # no strictly-lower-priority victim set frees enough;
+                # roll the hypothetical evictions back and move on
+                sim.free_slots, sim.budget = saved
+                plan.rejects.append(
+                    (cand.req_id, sim.reject_reason(cand))
+                )
+        if view.prefill_mode == "chunked":
+            live = sorted(
+                (s for s in view.prefilling if s.slot not in evicted),
+                key=lambda s: (-s.priority, s.admit_time),
+            )
+            rows = [(s.req_id, s.offset, s.total) for s in live]
+            admitted = {r.req_id for r in plan.admit}
+            rows += [
+                (p.req_id, 0, p.source_len)
+                for p in self._order(view)
+                if p.req_id in admitted
+            ]
+            plan.chunks = _pack_chunks(
+                rows, view.prefill_chunk, view.max_chunks_per_step
+            )
+        return plan
+
+
+# CLI registry (launch/serve.py --policy)
+POLICIES = {
+    "fcfs": FCFSPolicy,
+    "priority": PrioritySLOPolicy,
+}
+
+
+def make_policy(name: str, **kwargs) -> SchedulingPolicy:
+    """Build a policy by registry name (the CLI construction site)."""
+    try:
+        cls = POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r} (have: {sorted(POLICIES)})"
+        ) from None
+    return cls(**kwargs)

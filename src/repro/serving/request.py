@@ -31,11 +31,18 @@ FINISH_MAX_LEN = "max_len"  # hit the arena's sequence capacity (defensive)
 
 @dataclasses.dataclass
 class Request:
-    """One generation request (prompt tokens + budget)."""
+    """One generation request (prompt tokens + budget).
+
+    `priority` is a scheduling-class hint consumed by SLO-aware
+    policies (serving/policy.py): larger means more urgent.  The
+    default FCFS policy ignores it entirely, so existing call sites
+    are unchanged.
+    """
 
     prompt: np.ndarray  # (P,) int32 token ids
     max_new_tokens: int
     stop_token: Optional[int] = None
+    priority: int = 0  # policy hint; FCFS ignores it
     req_id: int = -1  # stamped by ServingEngine.submit()
     arrival_time: float = 0.0  # stamped by ServingEngine.submit()
 
@@ -52,20 +59,57 @@ class Request:
 
 
 @dataclasses.dataclass
+class ResumeState:
+    """Decode progress carried across a preemption (DESIGN.md
+    §Scheduling ¶Preemption bit-exactness).
+
+    When a policy evicts a decoding request, the engine releases its
+    slot/pages but keeps this host-side record: the generated tokens so
+    far plus the original timing stamps.  On re-admission the request
+    re-prefills `prompt + tokens[:-1]` through the normal prefill path
+    (integer determinism reconstructs a bit-identical KV image), then
+    decode resumes from `tokens[-1]` — no token is re-emitted, and the
+    emit-time series spans the preemption gap, so the ITL record shows
+    the stall the preemption actually caused.
+    """
+
+    tokens: List[int]  # generated so far (tokens[-1] = decode input)
+    first_token_time: float
+    admit_time: float  # original slot-lease stamp (queued_s keeps it)
+    emit_times: List[float] = dataclasses.field(default_factory=list)
+    n_preempts: int = 1  # times this request has been evicted
+
+
+@dataclasses.dataclass
 class PrefillState:
     """Engine-internal chunked-prefill progress for a leased slot.
 
-    `offset` is the number of prompt tokens already written into the
+    `offset` is the number of source tokens already written into the
     arena: the next chunk covers [offset, offset + chunk).  The state
     graduates to a RequestState (decode) the step its final chunk
     completes — the first generated token comes from that dispatch's
     logits.
+
+    `source` is what streams into the arena: the prompt, or — when
+    re-prefilling a preempted request (`resume` is not None) —
+    `prompt + resume.tokens[:-1]`, whose last-index logits regenerate
+    `resume.tokens[-1]` exactly (the resume-parity oracle).
     """
 
     request: Request
     slot: int
     offset: int = 0
     admit_time: float = 0.0  # slot-lease stamp (queued_s ends here)
+    source: Optional[np.ndarray] = None  # None -> request.prompt
+    resume: Optional[ResumeState] = None
+
+    def __post_init__(self):
+        if self.source is None:
+            self.source = self.request.prompt
+
+    @property
+    def source_len(self) -> int:
+        return int(self.source.size)
 
 
 @dataclasses.dataclass
@@ -87,6 +131,7 @@ class RequestState:
     # host-visibility stamp of every generated token (first token at
     # graduation, then one per decode harvest) — the ITL series' source
     emit_times: List[float] = dataclasses.field(default_factory=list)
+    n_preempts: int = 0  # evictions survived (resume carries it over)
 
 
 @dataclasses.dataclass
@@ -102,6 +147,7 @@ class Completion:
     finish_time: float
     admit_time: float = 0.0  # slot lease (0.0 in pre-telemetry records)
     emit_times: List[float] = dataclasses.field(default_factory=list)
+    n_preempts: int = 0  # evictions this request survived
 
     @property
     def n_generated(self) -> int:

@@ -1,22 +1,26 @@
-"""Admission / iteration scheduler for the continuous-batching engine.
+"""Admission queue + prefill shape bucketing (mechanism).
 
-Each engine step the scheduler decides two things (DESIGN.md §Serving):
+Since the policy/mechanism split (DESIGN.md §Scheduling) the
+*decisions* — admission order, capacity gating, chunk packing, who
+decodes — live in serving/policy.py; this module is the queue
+MECHANISM those policies read through the EngineView and the engine
+manipulates when executing a StepPlan: FIFO storage (`submit` /
+`requeue` / `take`), the per-step shape knobs (`SchedulerConfig`), and
+prompt-shape bucketing (`bucket_len`).
 
-  admission — which pending requests to prefill this step.  Policy:
-  FCFS by arrival, up to `max_prefills_per_step` (bounds per-step
-  prefill latency so active decodes are not starved — the unified
-  prefill+decode batch idea from the lmdeploy/turbomind decoder,
-  specialized to per-slot prefill + fused decode), gated by an
-  arena-capacity predicate.  The contiguous arena admits while a slot
-  is free; the paged arena admits while the request's worst-case page
-  budget fits (DESIGN.md §Serving ¶Paged KV).  Admission is
-  head-of-line blocking: when the oldest request does not fit, nothing
-  younger overtakes it — out-of-pages backpressure stays FCFS-fair and
-  preemption-free.
-
-  iteration — every leased slot advances one token through a single
-  fused decode step with a per-slot position vector; completed slots
-  are recycled the same step.
+The default FCFSPolicy reproduces the historical behavior exactly:
+FCFS by arrival up to `max_prefills_per_step` (bounds per-step prefill
+latency so active decodes are not starved — the unified prefill+decode
+batch idea from the lmdeploy/turbomind decoder, specialized to
+per-slot prefill + fused decode), gated by the arena-capacity
+predicate.  The contiguous arena admits while a slot is free; the
+paged arena admits while the request's worst-case page budget fits
+(DESIGN.md §Serving ¶Paged KV).  FCFS admission is head-of-line
+blocking: when the oldest request does not fit, nothing younger
+overtakes it — out-of-pages backpressure stays FCFS-fair and
+preemption-free.  Iteration: every leased slot advances one token
+through a single fused decode step with a per-slot position vector;
+completed slots are recycled the same step.
 
 Chunked prefill (`prefill_chunk` > 0, dense family): admission only
 leases a slot; the prompt then enters the arena `prefill_chunk` tokens
@@ -116,6 +120,28 @@ class Scheduler:
     def n_pending(self) -> int:
         return len(self.pending)
 
+    def requeue(self, req: Request):
+        """Put a request back at the queue HEAD — the preemption
+        requeue site (an evicted request was already served once; it
+        must not lose its place to younger arrivals).  Priority
+        policies re-sort the whole view anyway, so head placement is
+        only load-bearing for FCFS-style orderings."""
+        self.pending.appendleft(req)
+
+    def take(self, req: Request) -> bool:
+        """Remove a specific request from the queue (the engine's plan
+        executor pops exactly what the policy admitted, wherever it
+        sits).  Returns False when the request is not pending — a
+        stale plan entry, skipped.  Matched by IDENTITY, not `==`:
+        plans carry the very Request objects the view snapshotted, and
+        dataclass equality over the numpy prompt raises on ambiguous
+        truth for any non-identical pair it scans past."""
+        for i, queued in enumerate(self.pending):
+            if queued is req:
+                del self.pending[i]
+                return True
+        return False
+
     def peek(self) -> Optional[Request]:
         """The FCFS queue head without popping it (None when empty).
         The engine's backpressure accounting reads this: when the head
@@ -124,36 +150,38 @@ class Scheduler:
         `admit_reject` event names it (DESIGN.md §Observability)."""
         return self.pending[0] if self.pending else None
 
-    # -- admission ------------------------------------------------------
+    # -- admission (legacy reference) -----------------------------------
     def pop_if(self, fits: Callable[[Request], bool]) -> Optional[Request]:
         """Pop the FCFS queue head if the arena predicate accepts it
         (head-of-line blocking — a too-big head request is
-        backpressure, not a skip).  The engine calls this once per
-        admission, re-evaluating `fits` against the arena state the
-        previous admission just consumed, up to
-        `max_prefills_per_step` times per step."""
+        backpressure, not a skip).  LEGACY: the engine no longer calls
+        this — FCFSPolicy (serving/policy.py) simulates the same loop
+        over the EngineView; kept as the reference semantics and for
+        external callers."""
         if self.pending and fits(self.pending[0]):
             return self.pending.popleft()
         return None
 
-    # -- chunk packing --------------------------------------------------
+    # -- chunk packing (legacy reference) -------------------------------
     def plan_chunks(
         self, prefilling: Iterable[PrefillState]
     ) -> List[Tuple[PrefillState, int, int]]:
-        """Packing policy for one chunked-prefill dispatch: (state,
+        """FIFO packing for one chunked-prefill dispatch: (state,
         offset, n_tokens) triples — the next `prefill_chunk`-token
         chunk of each prefilling request, FIFO by admission order,
         capped at `max_chunks_per_step` rows (the fairness knob).  The
-        final chunk of a prompt may be partial (n_tokens < chunk); the
+        final chunk of a source may be partial (n_tokens < chunk); the
         dispatch pads it and the engine reads logits only when
-        offset + n_tokens reaches the prompt length."""
+        offset + n_tokens reaches the source length.  LEGACY: the
+        packing decision now lives in the policy (FCFSPolicy emits the
+        same rows); kept as the reference semantics."""
         chunk = self.cfg.prefill_chunk
         cap = self.cfg.max_chunks_per_step
         plan: List[Tuple[PrefillState, int, int]] = []
         for st in prefilling:
             if cap is not None and len(plan) >= cap:
                 break
-            n = min(chunk, st.request.prompt_len - st.offset)
+            n = min(chunk, st.source_len - st.offset)
             plan.append((st, st.offset, n))
         return plan
 

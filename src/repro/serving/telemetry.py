@@ -4,7 +4,8 @@ Three layers of observability for the continuous-batching engine, all
 OFF by default and all **bit-neutral** by construction:
 
   request-lifecycle trace — typed events (`submit`, `admit`,
-  `admit_reject`, `prefill_chunk`, `first_token`, `emit`, `finish`)
+  `admit_reject`, `prefill_chunk`, `first_token`, `emit`, `preempt`,
+  `resume`, `finish`)
   carrying monotonic host timestamps and request/slot/page context,
   buffered in-process as plain dicts and exported as JSONL
   (DESIGN.md §Observability ¶Event schema).  The integer engine's
@@ -56,6 +57,13 @@ EVENT_FIELDS: Dict[str, frozenset] = {
     "prefill_chunk": frozenset({"req_id", "slot", "start", "end", "pages"}),
     "first_token": frozenset({"req_id", "slot", "token"}),
     "emit": frozenset({"req_id", "slot", "token"}),
+    # preemption lifecycle (DESIGN.md §Scheduling): a policy evicted
+    # the request (its pages reclaimed, its decode progress parked
+    # host-side), and it later re-entered decode after re-prefilling.
+    # `resume` carries no token — nothing is re-emitted, which is what
+    # keeps emit count == n_generated across preemptions.
+    "preempt": frozenset({"req_id", "slot", "reason", "n_generated"}),
+    "resume": frozenset({"req_id", "slot", "n_preempts"}),
     "finish": frozenset({"req_id", "slot", "reason", "n_generated"}),
 }
 

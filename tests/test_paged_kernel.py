@@ -18,7 +18,17 @@ from repro.kernels.paged_attention import paged_attention_decode_pallas
 from repro.launch import variants
 from repro.launch.serve import deploy_model, serve_batch
 from repro.layers.attention import INACTIVE_POS, PAGE_NULL, _paged_kv_view
-from repro.serving import SchedulerConfig, ServingEngine
+from repro.serving import SchedulerConfig, ServingConfig, ServingEngine
+
+
+def make_engine(lm, tables, **kw):
+    """Every test engine goes through the typed ServingConfig surface
+    (the legacy kwarg shim has its own dedicated tests in
+    tests/test_policy.py)."""
+    on_token = kw.pop("on_token", None)
+    return ServingEngine(
+        lm, tables, ServingConfig(**kw), on_token=on_token)
+
 
 MAX_LEN = 40
 
@@ -158,7 +168,7 @@ def test_kernel_traced_scale_under_scan():
 # ---------------------------------------------------------------------
 def _run(lm, tables, specs, prompts, *, paged, paged_kernel=None,
          page_size=8, n_slots=3, max_len=MAX_LEN):
-    eng = ServingEngine(
+    eng = make_engine(
         lm, tables, n_slots=n_slots, max_len=max_len, paged=paged,
         page_size=page_size, paged_kernel=paged_kernel,
         scheduler=SchedulerConfig(
@@ -208,7 +218,7 @@ def test_engine_kernel_vs_lockstep_single_page(deployed):
     ref_toks = np.asarray(
         serve_batch(lm, tables, jnp.asarray(prompts, jnp.int32), G)
     )
-    eng = ServingEngine(
+    eng = make_engine(
         lm, tables, n_slots=B, max_len=P + G, paged=True, page_size=8,
         scheduler=SchedulerConfig(max_prefills_per_step=B,
                                   prefill_bucket=8),
@@ -236,7 +246,7 @@ def test_no_dense_gather_in_kernel_decode(deployed):
         return orig(pool, table)
 
     def serve_one(paged_kernel):
-        eng = ServingEngine(
+        eng = make_engine(
             lm, tables, n_slots=2, max_len=16, paged=True, page_size=8,
             paged_kernel=paged_kernel,
             scheduler=SchedulerConfig(prefill_bucket=8,

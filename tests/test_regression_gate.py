@@ -1,0 +1,107 @@
+"""Negative tests for benchmarks/check_serving_regression.py.
+
+The CI gate is itself load-bearing (a gate that silently passes
+regressions is worse than none), so the failure paths are pinned:
+a goodput drop beyond its margin fails, a within-margin wobble
+passes, a silently dropped metric fails, and the open-loop section's
+load-dependent latency tails are pruned from the TTFT/ITL gates
+(DESIGN.md §Scheduling ¶Open-loop harness).
+"""
+import copy
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+
+def _gatemod():
+    path = (pathlib.Path(__file__).resolve().parents[1]
+            / "benchmarks" / "check_serving_regression.py")
+    spec = importlib.util.spec_from_file_location("check_gate", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _tree():
+    """A minimal BENCH_serving.json shape touching every gated class:
+    throughput, TTFT, ITL, and the open-loop goodput section."""
+    return {
+        "lockstep_uniform": {"tok_s": 50.0},
+        "engine_uniform": {"tok_s": 100.0, "p95_itl_s": 0.010},
+        "mixed_ttft": {
+            "whole": {"tok_s": 90.0, "p50_ttft_s": 0.040,
+                      "p95_ttft_s": 0.080},
+        },
+        "goodput_under_slo": {
+            "capacity_qps": 4.0,
+            "best_goodput_qps": 2.0,
+            "max_sustained_qps": 3.0,
+            "levels": {
+                "2.0x": {"goodput_qps": 1.5, "p50_ttft_s": 9.0,
+                         "p99_itl_s": 0.5},
+            },
+        },
+    }
+
+
+def _run(tmp_path, monkeypatch, base, cand):
+    gate = _gatemod()
+    b = tmp_path / "base.json"
+    c = tmp_path / "cand.json"
+    b.write_text(json.dumps(base))
+    c.write_text(json.dumps(cand))
+    monkeypatch.setattr(
+        "sys.argv",
+        ["check", "--baseline", str(b), "--candidate", str(c)])
+    gate.main()
+
+
+def test_identical_passes(tmp_path, monkeypatch):
+    _run(tmp_path, monkeypatch, _tree(), _tree())
+
+
+def test_goodput_regression_fails(tmp_path, monkeypatch):
+    cand = _tree()
+    # margin is 0.30 * GOODPUT_MARGIN (1.5) = 45%; drop 60%
+    cand["goodput_under_slo"]["best_goodput_qps"] = 0.8
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_goodput_jitter_within_margin_passes(tmp_path, monkeypatch):
+    cand = _tree()
+    cand["goodput_under_slo"]["best_goodput_qps"] = 1.6  # -20%
+    _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_missing_goodput_fails(tmp_path, monkeypatch):
+    cand = _tree()
+    del cand["goodput_under_slo"]["best_goodput_qps"]
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_open_loop_latency_tails_not_gated(tmp_path, monkeypatch):
+    """At 2x capacity the open-loop p50 TTFT IS the queueing delay —
+    a 100x swing there must not trip the closed-loop TTFT gate."""
+    cand = copy.deepcopy(_tree())
+    lvl = cand["goodput_under_slo"]["levels"]["2.0x"]
+    lvl["p50_ttft_s"] = 900.0
+    lvl["p99_itl_s"] = 50.0
+    _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_throughput_regression_still_fails(tmp_path, monkeypatch):
+    cand = _tree()
+    cand["engine_uniform"]["tok_s"] = 50.0  # -50% normalized
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_closed_loop_ttft_still_gated(tmp_path, monkeypatch):
+    cand = _tree()
+    cand["mixed_ttft"]["whole"]["p95_ttft_s"] = 0.200  # +150%
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)

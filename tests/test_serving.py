@@ -18,11 +18,21 @@ import pytest
 from repro.core.rep import Rep
 from repro.launch.serve import deploy_model, serve_batch
 from repro.serving import (
-    PAGE_NULL, PagedArena, SchedulerConfig, ServingEngine, SlotArena,
+    PAGE_NULL, PagedArena, SchedulerConfig, ServingConfig,
+    ServingEngine, SlotArena,
     assert_integer_caches, float_cache_leaves,
 )
 
 MAX_LEN = 40
+
+
+def make_engine(lm, tables, **kw):
+    """Every test engine goes through the typed ServingConfig surface
+    (the legacy kwarg shim has its own dedicated tests in
+    tests/test_policy.py)."""
+    on_token = kw.pop("on_token", None)
+    return ServingEngine(
+        lm, tables, ServingConfig(**kw), on_token=on_token)
 
 
 @pytest.fixture(scope="module")
@@ -136,7 +146,7 @@ def test_parity_with_lockstep_serve_batch(deployed):
         prompts = rng.integers(0, lm.cfg.vocab, size=(B, P))
         ref = np.asarray(serve_batch(
             lm, tables, jnp.asarray(prompts, jnp.int32), G))
-        eng = ServingEngine(
+        eng = make_engine(
             lm, tables, n_slots=B, max_len=P + G,
             scheduler=SchedulerConfig(max_prefills_per_step=B,
                                       prefill_bucket=8))
@@ -160,7 +170,7 @@ def test_parity_ssm_family_exact_prefill(deployed_ssm, paged):
     prompts = rng.integers(0, lm.cfg.vocab, size=(B, P))
     ref = np.asarray(serve_batch(
         lm, tables, jnp.asarray(prompts, jnp.int32), G))
-    eng = ServingEngine(
+    eng = make_engine(
         lm, tables, n_slots=B, max_len=P + G, paged=paged, page_size=4,
         scheduler=SchedulerConfig(max_prefills_per_step=B,
                                   prefill_bucket=8))
@@ -178,7 +188,7 @@ def test_ragged_arrivals_drain(deployed):
     lm, tables = deployed
     rng = np.random.default_rng(2)
     streamed = {}
-    eng = ServingEngine(
+    eng = make_engine(
         lm, tables, n_slots=3, max_len=MAX_LEN,
         scheduler=SchedulerConfig(max_prefills_per_step=2,
                                   prefill_bucket=8),
@@ -212,13 +222,13 @@ def test_stop_token_finishes_early(deployed):
     lm, tables = deployed
     rng = np.random.default_rng(3)
     prompt = rng.integers(0, lm.cfg.vocab, size=(6,))
-    eng = ServingEngine(lm, tables, n_slots=1, max_len=24,
+    eng = make_engine(lm, tables, n_slots=1, max_len=24,
                         scheduler=SchedulerConfig(prefill_bucket=8))
     rid = eng.submit(prompt, max_new_tokens=10)
     (full,) = eng.run_until_drained()
     assert full.n_generated == 10
     stop = full.tokens[3]
-    eng2 = ServingEngine(lm, tables, n_slots=1, max_len=24,
+    eng2 = make_engine(lm, tables, n_slots=1, max_len=24,
                          scheduler=SchedulerConfig(prefill_bucket=8))
     eng2.submit(prompt, max_new_tokens=10, stop_token=stop)
     (early,) = eng2.run_until_drained()
@@ -230,7 +240,7 @@ def test_stop_token_finishes_early(deployed):
 
 def test_submit_validation(deployed):
     lm, tables = deployed
-    eng = ServingEngine(lm, tables, n_slots=1, max_len=16)
+    eng = make_engine(lm, tables, n_slots=1, max_len=16)
     with pytest.raises(ValueError):
         eng.submit(np.zeros(12, np.int32), max_new_tokens=8)  # 20 > 16
     with pytest.raises(ValueError):
@@ -317,7 +327,7 @@ def test_paged_parity_with_lockstep(deployed):
     prompts = rng.integers(0, lm.cfg.vocab, size=(B, P))
     ref = np.asarray(serve_batch(
         lm, tables, jnp.asarray(prompts, jnp.int32), G))
-    eng = ServingEngine(
+    eng = make_engine(
         lm, tables, n_slots=B, max_len=P + G, paged=True, page_size=4,
         scheduler=SchedulerConfig(max_prefills_per_step=B,
                                   prefill_bucket=8))
@@ -341,7 +351,7 @@ def test_paged_parity_with_slot_engine_ragged(deployed):
     prompts = [rng.integers(0, lm.cfg.vocab, size=(p,)) for p, _ in specs]
 
     def run(paged):
-        eng = ServingEngine(
+        eng = make_engine(
             lm, tables, n_slots=3, max_len=MAX_LEN, paged=paged,
             page_size=8,
             scheduler=SchedulerConfig(max_prefills_per_step=2,
@@ -372,7 +382,7 @@ def test_page_exhaustion_backpressure(deployed):
     backpressure, FCFS head-of-line)."""
     lm, tables = deployed
     rng = np.random.default_rng(5)
-    eng = ServingEngine(
+    eng = make_engine(
         lm, tables, n_slots=6, max_len=32, paged=True, page_size=8,
         n_pages=2,
         scheduler=SchedulerConfig(max_prefills_per_step=4,
@@ -409,7 +419,7 @@ def test_page_recycling_no_stale_leakage(deployed):
         (c,) = [c for c in eng.completed if c.req_id == rid]
         return c.tokens, pages - {PAGE_NULL}
 
-    eng = ServingEngine(
+    eng = make_engine(
         lm, tables, n_slots=1, max_len=24, paged=True, page_size=4,
         n_pages=6, scheduler=SchedulerConfig(prefill_bucket=8))
     tokens_a, pages_a = run_tracking_pages(eng, prompt_a, 8)
@@ -418,7 +428,7 @@ def test_page_recycling_no_stale_leakage(deployed):
     tokens_b, pages_b = run_tracking_pages(eng, prompt_b, 9)
     assert pages_a & pages_b                    # physical reuse happened
 
-    fresh = ServingEngine(
+    fresh = make_engine(
         lm, tables, n_slots=1, max_len=24, paged=True, page_size=4,
         n_pages=6, scheduler=SchedulerConfig(prefill_bucket=8))
     tokens_b_fresh, _ = run_tracking_pages(fresh, prompt_b, 9)
@@ -432,7 +442,7 @@ def test_page_recycling_no_stale_leakage(deployed):
 def _run_engine(lm, tables, specs, prompts, *, chunk, paged,
                 max_len=MAX_LEN, n_slots=3, stagger=True,
                 max_chunks=None):
-    eng = ServingEngine(
+    eng = make_engine(
         lm, tables, n_slots=n_slots, max_len=max_len, paged=paged,
         page_size=8,
         scheduler=SchedulerConfig(max_prefills_per_step=2,
@@ -475,7 +485,7 @@ def test_chunked_matches_whole_and_lockstep(deployed, paged):
                       for _ in range(B)])
     ref = np.asarray(serve_batch(
         lm, tables, jnp.asarray(batch, jnp.int32), G))
-    eng2 = ServingEngine(
+    eng2 = make_engine(
         lm, tables, n_slots=B, max_len=P + G, paged=paged, page_size=4,
         scheduler=SchedulerConfig(max_prefills_per_step=B,
                                   prefill_bucket=8, prefill_chunk=4))
@@ -510,7 +520,7 @@ def test_long_prompt_does_not_starve_decode(deployed):
     engine step throughout (the whole point of chunked prefill)."""
     lm, tables = deployed
     rng = np.random.default_rng(9)
-    eng = ServingEngine(
+    eng = make_engine(
         lm, tables, n_slots=3, max_len=MAX_LEN,
         scheduler=SchedulerConfig(max_prefills_per_step=2,
                                   prefill_bucket=8, prefill_chunk=4))
@@ -573,7 +583,7 @@ def test_paged_submit_validation(deployed):
     """A request whose own worst case exceeds the whole pool can never
     be admitted — reject at submit instead of deadlocking the queue."""
     lm, tables = deployed
-    eng = ServingEngine(lm, tables, n_slots=2, max_len=32, paged=True,
+    eng = make_engine(lm, tables, n_slots=2, max_len=32, paged=True,
                         page_size=8, n_pages=2)
     with pytest.raises(ValueError):
         eng.submit(np.zeros(12, np.int32), max_new_tokens=12)  # 3 pages

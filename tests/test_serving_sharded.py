@@ -22,10 +22,21 @@ from repro.launch.mesh import make_serving_mesh
 from repro.launch.serve import deploy_model
 from repro.models.lm import DecoderLM
 from repro.serving import (
-    DispatchQueue, PagedArena, SchedulerConfig, ServingEngine, SlotArena,
+    DispatchQueue, PagedArena, SchedulerConfig, ServingConfig,
+    ServingEngine, SlotArena,
     assert_integer_caches, float_cache_leaves,
 )
 from repro.sharding.rules import arena_leaf_spec, kv_head_axis
+
+
+def make_engine(lm, tables, **kw):
+    """Every test engine goes through the typed ServingConfig surface
+    (the legacy kwarg shim has its own dedicated tests in
+    tests/test_policy.py)."""
+    on_token = kw.pop("on_token", None)
+    return ServingEngine(
+        lm, tables, ServingConfig(**kw), on_token=on_token)
+
 
 pytestmark = pytest.mark.skipif(
     jax.device_count() < 8,
@@ -119,7 +130,7 @@ def test_indivisible_heads_degrade_to_replication(mesh):
 # ---------------------------------------------------------------------
 def _run(lm, tables, specs, prompts, *, paged, mesh=None, kv_shard=False,
          dispatch_depth=0, chunk=4):
-    eng = ServingEngine(
+    eng = make_engine(
         lm, tables, n_slots=3, max_len=MAX_LEN, paged=paged, page_size=8,
         mesh=mesh, kv_shard=kv_shard, dispatch_depth=dispatch_depth,
         scheduler=SchedulerConfig(max_prefills_per_step=2,
@@ -228,4 +239,4 @@ def test_async_plus_sharded_full_stack(deployed, mesh, workload_prompts):
 def test_kv_shard_requires_mesh(deployed):
     lm, tables = deployed
     with pytest.raises(ValueError, match="mesh"):
-        ServingEngine(lm, tables, n_slots=2, max_len=16, kv_shard=True)
+        make_engine(lm, tables, n_slots=2, max_len=16, kv_shard=True)

@@ -19,10 +19,21 @@ import pytest
 
 from repro.launch.serve import deploy_model
 from repro.serving import (
-    NULL, Request, SchedulerConfig, ServingEngine, Telemetry,
+    NULL, Request, SchedulerConfig, ServingConfig, ServingEngine,
+    Telemetry,
 )
 from repro.serving.request import Completion
 from repro.serving.telemetry import EVENT_FIELDS, PHASES
+
+
+def make_engine(lm, tables, **kw):
+    """Every test engine goes through the typed ServingConfig surface
+    (the legacy kwarg shim has its own dedicated tests in
+    tests/test_policy.py)."""
+    on_token = kw.pop("on_token", None)
+    return ServingEngine(
+        lm, tables, ServingConfig(**kw), on_token=on_token)
+
 
 MAX_LEN = 40
 
@@ -42,7 +53,7 @@ def _workload(vocab, rng=None):
 
 def _run(lm, tables, workload, *, telemetry=None, paged=False,
          dispatch_depth=0, n_slots=3, n_pages=None, warmup=False):
-    eng = ServingEngine(
+    eng = make_engine(
         lm, tables, n_slots=n_slots, max_len=MAX_LEN, paged=paged,
         page_size=8, n_pages=n_pages, dispatch_depth=dispatch_depth,
         telemetry=telemetry,

@@ -7,8 +7,11 @@ Reads the JSONL request-lifecycle trace that `--trace-out` produces
   (repro.serving.telemetry.EVENT_FIELDS): unknown kinds, missing
   required fields, non-numeric or non-monotonic timestamps, and broken
   lifecycles (a finish without a first_token, an emit count that
-  disagrees with the finish record's n_generated) are all malformed —
-  exit code 1.
+  disagrees with the finish record's n_generated, a preempt/resume
+  sequence that violates the eviction state machine — preempt only
+  while admitted, re-admission before any further progress, resume
+  only after a token-bearing preempt, no finish while evicted) are
+  all malformed — exit code 1.
 
   rolls the events up per request: TTFT (submit -> first_token), ITL
   percentiles from the emit-gap series, and the queued (submit ->
@@ -86,6 +89,52 @@ def validate(events: list):
         last_t = t
 
 
+def check_preemptions(rid, evs: list):
+    """Walk one request's events (trace order) through the eviction
+    state machine (DESIGN.md §Scheduling ¶Preemption bit-exactness):
+    queued -> admitted -> (evicted -> admitted)* -> finished.  A
+    preempt is only legal while admitted; nothing progresses while
+    evicted until a re-admit; a resume must follow a token-bearing
+    preempt and must carry the running preemption count."""
+    state = "queued"
+    n_pre = 0
+    had_tokens = False  # some preempt in the past carried tokens
+    for e in evs:
+        k = e["event"]
+        if k == "admit":
+            if state not in ("queued", "evicted"):
+                raise TraceError(f"req {rid}: admit while {state}")
+            state = "admitted"
+        elif k == "preempt":
+            if state != "admitted":
+                raise TraceError(f"req {rid}: preempt while {state}")
+            state = "evicted"
+            n_pre += 1
+            had_tokens |= e["n_generated"] > 0
+        elif k == "resume":
+            if state != "admitted":
+                raise TraceError(f"req {rid}: resume while {state}")
+            if not had_tokens:
+                raise TraceError(
+                    f"req {rid}: resume without a token-bearing preempt"
+                )
+            if e["n_preempts"] != n_pre:
+                raise TraceError(
+                    f"req {rid}: resume says n_preempts="
+                    f"{e['n_preempts']} but the trace has {n_pre}"
+                )
+        elif k in ("first_token", "emit"):
+            if state != "admitted":
+                raise TraceError(f"req {rid}: {k} while {state}")
+        elif k == "finish":
+            if state != "admitted":
+                raise TraceError(f"req {rid}: finish while {state}")
+            state = "finished"
+        elif state == "finished":
+            raise TraceError(f"req {rid}: {k} after finish")
+    return n_pre
+
+
 def lifecycles(events: list) -> dict:
     """Group events by req_id and derive per-request latencies,
     checking lifecycle invariants along the way."""
@@ -101,6 +150,7 @@ def lifecycles(events: list) -> dict:
         kinds = {}
         for e in evs:
             kinds.setdefault(e["event"], []).append(e)
+        n_preempts = check_preemptions(rid, evs)
         fin = kinds.get("finish")
         if not fin:
             continue  # still in flight when the trace was cut: fine
@@ -121,6 +171,7 @@ def lifecycles(events: list) -> dict:
             "finish_reason": fin[0]["reason"],
             "rejects": len(kinds.get("admit_reject", [])),
             "n_chunks": len(kinds.get("prefill_chunk", [])),
+            "preempts": n_preempts,
         }
         if sub:
             rec["ttft_s"] = first[0]["t"] - sub[0]["t"]
@@ -154,6 +205,13 @@ def summarize(events: list, reqs: dict) -> str:
             f"{k}={counts[k]}" for k in EVENT_FIELDS if k in counts
         ),
     ]
+    n_pre = sum(r["preempts"] for r in reqs.values())
+    if n_pre:
+        hit = sum(1 for r in reqs.values() if r["preempts"])
+        lines.append(
+            f"  preemptions: {n_pre} over {hit} requests "
+            "(resume parity held: every victim finished)"
+        )
     ttfts = [r["ttft_s"] for r in reqs.values() if "ttft_s" in r]
     itls = [d for r in reqs.values() for d in r["itl"]]
     if ttfts:
