@@ -5,12 +5,14 @@ percentile — mixed-workload TTFT (`p50_ttft_s` / `p95_ttft_s`) plus
 steady-state inter-token latency (`p95_itl_s`, the per-decode-step SLO
 from the telemetry work, DESIGN.md §Observability) — AND the open-loop
 `best_goodput_qps` (SLO-meeting completions/s from the Poisson sweep,
-DESIGN.md §Scheduling ¶Open-loop harness) in a candidate benchmark
-result against the committed baseline and fails (exit 1) when any
-regressed by more than --max-regression (default 30%; ITL metrics get
-ITL_MARGIN x that, goodput GOODPUT_MARGIN x — see the comments at
-their key lists): throughput/goodput regress by dropping, TTFT/ITL by
-rising.
+DESIGN.md §Scheduling ¶Open-loop harness) AND the prefix-cache
+`ttft_uplift` ratio (cold/shared mean TTFT within one run, DESIGN.md
+§Prefix-caching) in a candidate benchmark result against the
+committed baseline and fails (exit 1) when any regressed by more than
+--max-regression (default 30%; ITL metrics get ITL_MARGIN x that,
+goodput GOODPUT_MARGIN x, the uplift UPLIFT_MARGIN x — see the
+comments at their key lists): throughput/goodput/uplift regress by
+dropping, TTFT/ITL by rising.
 
 The committed baseline and the CI runner are different hardware, so
 absolute numbers are not comparable across them.  Metrics are
@@ -58,6 +60,18 @@ GOODPUT_KEYS = ("best_goodput_qps",)
 # identical code, so the margin sits between throughput's and ITL's —
 # a scheduler that stops sustaining its SLOs loses an integer factor
 GOODPUT_MARGIN = 1.5
+# the prefix-cache section: its cold/shared lanes ride the normalized
+# tok_s + TTFT gates like every engine lane; on top of that the
+# `ttft_uplift` scalar (cold mean TTFT / shared mean TTFT, same run,
+# dimensionless so it needs NO lockstep normalization) is gated as a
+# floor on the cache's reason to exist — losing the uplift entirely
+# (shared TTFT drifting up to and past cold) is a prefix-cache
+# regression even when both lanes' absolute numbers stay in margin
+UPLIFT_KEYS = ("ttft_uplift",)
+# mean-TTFT ratios at this window size swing with queueing noise the
+# way goodput swings with the Poisson draw, so it gets the same
+# widened margin
+UPLIFT_MARGIN = 1.5
 
 
 def flat_metrics(tree, keys, prefix=""):
@@ -180,6 +194,16 @@ def main():
             {p: v / c_ref for p, v in cand_gp.items()},
             cand_gp, args.max_regression * GOODPUT_MARGIN,
             higher_is_better=True, unit="req/s")
+
+    # prefix-cache TTFT uplift: cold/shared within ONE run, already
+    # hardware-neutral — gated raw (no lockstep normalization)
+    base_up = flat_metrics(base_tree, UPLIFT_KEYS)
+    cand_up = flat_metrics(cand_tree, UPLIFT_KEYS)
+    if base_up or cand_up:
+        failures += gate(
+            base_up, cand_up, cand_up,
+            args.max_regression * UPLIFT_MARGIN,
+            higher_is_better=True, unit="x")
 
     if failures:
         print("\nserving regression gate FAILED:")

@@ -16,6 +16,14 @@ dispatch overhead roughly cancels it (gain ~0.95 on the committed
 baseline's host, 1.24 on PR 3's slower one), so the gate tracks BOTH
 variants' lockstep-normalized trajectories rather than asserting
 chunked superiority,
+and (j) shared_prefix_vs_cold: the same system-prompt workload (one
+shared multi-page prefix, distinct suffixes) with the prefix cache off
+vs on at EQUAL arena geometry — token parity asserted (shared-prefix
+serving is exact, DESIGN.md §Prefix-caching ¶Exactness), `ttft_uplift`
+(cold p50 TTFT / shared p50 TTFT, dimensionless within one run) rides
+its own regression-gate lane, and `concurrency_uplift` records how far
+suffix-only admission pushes effective concurrency past the page pool
+a cold engine exhausts,
 and (f) a paged_kernel_vs_gather decode micro-benchmark: the fused
 paged-attention kernel vs the write-then-gather oracle on one
 decode-heavy workload (bit-exact paths, so the trajectory isolates the
@@ -159,6 +167,8 @@ def bench_engine(
     dispatch_depth=0,
     telemetry=None,
     policy=None,
+    prefix_cache=False,
+    cache_keep_pages=0,
 ):
     sched_kw = {"prefill_bucket": bucket,
                 "max_prefills_per_step": max_prefills}
@@ -170,6 +180,7 @@ def bench_engine(
         paged_kernel=paged_kernel,
         mesh=mesh, kv_shard=kv_shard, dispatch_depth=dispatch_depth,
         telemetry=telemetry, policy=policy,
+        prefix_cache=prefix_cache, cache_keep_pages=cache_keep_pages,
         scheduler=SchedulerConfig(**sched_kw)))
     # warm THIS engine's jit wrappers (every chunk row bucket + the
     # fused decode via engine.warmup, one whole-prompt prefill compile
@@ -194,6 +205,11 @@ def bench_engine(
         # long-lived jax-heavy process a gen-2 pause dwarfs any real
         # per-step cost difference being measured
         gc.collect()
+        # every repeat starts cache-cold: the warmup requests above
+        # (and earlier repeats) registered REAL prompt content, and a
+        # pre-warmed trie would hand the timed window free hits it
+        # never paid the prefill for
+        eng.arena.flush_cache()
         eng.reset_stats()
         ids = [
             eng.submit(prompt, max_new_tokens=gen) for prompt, gen in workload
@@ -231,6 +247,10 @@ def bench_engine(
         out["p99_itl_s"] = s["p99_itl_s"]
     if paged:
         out["max_pages_in_use"] = s["max_pages_in_use"]
+    if prefix_cache:
+        out["prefix_hits"] = s["prefix_hits"]
+        out["prefix_hit_pages"] = s["prefix_hit_pages"]
+        out["cow_splits"] = s["cow_splits"]
     return out
 
 
@@ -277,6 +297,67 @@ def bench_paged_vs_slot(lm, tables, rng, *, slots, max_len, page_size,
         "requests": n_requests, "prompt_len": p_len, "gen": gen,
         "slot": slot, "paged": paged,
         "concurrency_gain": paged["max_active"] / slot["max_active"],
+    }
+
+
+def bench_shared_prefix_vs_cold(lm, tables, rng, *, slots, max_len,
+                                page_size, bucket):
+    """System-prompt workload (one 2-page common prefix, distinct
+    suffixes) on EQUAL arena geometry, prefix cache off vs on.  The
+    page pool is sized so the COLD engine cannot hold every request
+    at once (each charged its full worst case), while suffix-only
+    admission charges the shared pages once — so the cached engine
+    admits more concurrently AND skips the shared prefill, which is
+    what `ttft_uplift` (cold MEAN TTFT / shared MEAN TTFT, same run,
+    dimensionless — the mean, not p50: at this window p50 quantizes
+    to a decode step and hides the queueing win the cache buys) and
+    `concurrency_uplift` record.  Exactness is asserted: both lanes
+    must produce identical tokens (DESIGN.md §Prefix-caching
+    ¶Exactness)."""
+    n_prefix = 2 * page_size                  # the shared system prompt
+    n_suffix = max(2, page_size // 2)
+    gen = page_size
+    total = n_prefix + n_suffix + gen
+    assert total <= max_len
+    pages_each = -(-(total - 1) // page_size)  # cold worst case
+    # pool holds 2 cold requests (+ slack below a 3rd) but `slots`
+    # suffix-only ones: shared pages are charged once
+    n_pages = 2 * pages_each + 2
+    prefix = rng.integers(0, lm.cfg.vocab, size=(n_prefix,))
+    workload = [
+        (
+            np.concatenate(
+                [prefix, rng.integers(0, lm.cfg.vocab, size=(n_suffix,))]
+            ),
+            gen,
+        )
+        for _ in range(3 * slots)
+    ]
+    cold_tokens, shared_tokens = [], []
+    kw = dict(
+        paged=True, page_size=page_size, n_pages=n_pages,
+        max_prefills=len(workload), ttft_percentiles=True, repeats=3,
+    )
+    cold = bench_engine(lm, tables, workload, slots, max_len, bucket,
+                        collect_tokens=cold_tokens, **kw)
+    shared = bench_engine(lm, tables, workload, slots, max_len, bucket,
+                          collect_tokens=shared_tokens,
+                          prefix_cache=True, cache_keep_pages=n_pages,
+                          **kw)
+    assert shared_tokens == cold_tokens, "shared/cold token divergence"
+    assert shared["prefix_hit_pages"] > 0, "workload never hit the cache"
+    return {
+        "requests": len(workload), "prefix_len": n_prefix,
+        "suffix_len": n_suffix, "gen": gen, "n_pages": n_pages,
+        "cold": cold, "shared": shared,
+        "ttft_uplift": (
+            cold["mean_ttft_s"] / shared["mean_ttft_s"]
+            if shared["mean_ttft_s"] else 0.0
+        ),
+        "concurrency_uplift": (
+            shared["max_active"] / cold["max_active"]
+            if cold["max_active"] else 0.0
+        ),
     }
 
 
@@ -671,6 +752,9 @@ def main():
             args.prefill_bucket, itl_percentiles=True, repeats=3,
             chunk=0),
         "paged_vs_slot": bench_paged_vs_slot(
+            lm, tables, rng, slots=args.slots, max_len=max_len,
+            page_size=args.page_size, bucket=args.prefill_bucket),
+        "shared_prefix_vs_cold": bench_shared_prefix_vs_cold(
             lm, tables, rng, slots=args.slots, max_len=max_len,
             page_size=args.page_size, bucket=args.prefill_bucket),
         "paged_kernel_vs_gather": bench_paged_kernel_vs_gather(

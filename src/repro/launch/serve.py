@@ -90,6 +90,7 @@ from repro.serving import (  # noqa: E402
     make_policy,
     poisson_arrivals,
     run_open_loop,
+    shared_prefix_workload,
 )
 
 
@@ -174,6 +175,30 @@ def main():
         type=int,
         default=0,
         help="page pool size (0: slots*max_len/page_size)",
+    )
+    ap.add_argument(
+        "--prefix-cache",
+        action="store_true",
+        help="refcounted prefix caching with copy-on-write page "
+        "sharing (DESIGN.md §Prefix-caching; needs --paged and "
+        "the chunked prefill path)",
+    )
+    ap.add_argument(
+        "--cache-keep-pages",
+        type=int,
+        default=0,
+        help="warm-page retention budget: registered pages kept "
+        "resident after their last reference drops, evicted LRU "
+        "under pressure (0: evict immediately; needs "
+        "--prefix-cache)",
+    )
+    ap.add_argument(
+        "--shared-prefix",
+        type=int,
+        default=0,
+        help="give every request the SAME random prefix of this "
+        "many tokens (a system-prompt workload — what "
+        "--prefix-cache shares; 0: fully independent prompts)",
     )
     ap.add_argument(
         "--paged-gather",
@@ -275,6 +300,8 @@ def main():
         paged_kernel=not args.paged_gather,
         mesh=mesh, kv_shard=args.kv_shard,
         dispatch_depth=args.dispatch_depth,
+        prefix_cache=args.prefix_cache,
+        cache_keep_pages=args.cache_keep_pages,
         telemetry=tel,
         policy=make_policy(
             args.policy,
@@ -287,24 +314,35 @@ def main():
             max_chunks_per_step=args.max_chunks_per_step or None)))
     engine.warmup()  # precompile decode + every chunk row bucket
     rng = np.random.default_rng(0)
-    requests = []
-    for i in range(args.requests):
-        if args.ragged:
-            # p <= max_len - 1 keeps >= 1 position for generation
-            hi = min(args.prompt_len, max_len - 1)
-            p = int(
-                rng.integers(max(1, min(args.prompt_len // 4, hi)), hi + 1)
-            )
-            g = int(rng.integers(1, min(args.gen, max_len - p) + 1))
-        else:
-            p, g = args.prompt_len, args.gen
-        requests.append(Request(
-            rng.integers(0, lm.cfg.vocab, size=(p,)),
-            max_new_tokens=g,
-            # under the priority policy, alternate classes so the
-            # class-aware admission/preemption is visible from the CLI
-            priority=i % 2 if args.policy == "priority" else 0,
-        ))
+    if args.shared_prefix:
+        if args.shared_prefix > args.prompt_len:
+            ap.error("--shared-prefix must be <= --prompt-len")
+        requests = shared_prefix_workload(
+            args.requests, lm.cfg.vocab, rng,
+            prefix_len=args.shared_prefix,
+            suffix_len=args.prompt_len - args.shared_prefix,
+            max_new_tokens=args.gen)
+    else:
+        requests = []
+        for i in range(args.requests):
+            if args.ragged:
+                # p <= max_len - 1 keeps >= 1 position for generation
+                hi = min(args.prompt_len, max_len - 1)
+                p = int(
+                    rng.integers(
+                        max(1, min(args.prompt_len // 4, hi)), hi + 1)
+                )
+                g = int(rng.integers(1, min(args.gen, max_len - p) + 1))
+            else:
+                p, g = args.prompt_len, args.gen
+            requests.append(Request(
+                rng.integers(0, lm.cfg.vocab, size=(p,)),
+                max_new_tokens=g,
+                # under the priority policy, alternate classes so the
+                # class-aware admission/preemption is visible from the
+                # CLI
+                priority=i % 2 if args.policy == "priority" else 0,
+            ))
     open_loop = None
     if args.arrival_rate > 0:
         open_loop = run_open_loop(
@@ -354,6 +392,16 @@ def main():
             f"  paged arena: peak {s['max_pages_in_use']}/{s['n_pages']} "
             f"pages of {s['page_size']} positions, "
             f"peak concurrency {s['max_active']}"
+        )
+    if s.get("prefix_cache"):
+        print(
+            f"  prefix cache: {s['prefix_hits']} hits / "
+            f"{s['prefix_misses']} misses, "
+            f"{s['prefix_hit_pages']} shared pages reused, "
+            f"{s['cow_splits']} cow splits, "
+            f"{s['warm_pages']} warm retained "
+            f"(keep {s['cache_keep_pages']}, "
+            f"{s['warm_evictions']} evicted)"
         )
     # SLO rollup (DESIGN.md §Observability): latency percentiles plus
     # the queued/prefill/decode breakdown of where wall time went

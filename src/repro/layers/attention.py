@@ -497,6 +497,15 @@ def _paged_column_write(pool, new, pos, table):
     partial chunk) and PAGE_NULL table entries both land on the shared
     trash page — write order among trash collisions is irrelevant
     because the trash page is never unmasked.
+
+    Prefix caching (DESIGN.md §Prefix-caching ¶Copy-on-write): this
+    write path stays copy-on-write-OBLIVIOUS by design.  The arena
+    resolves CoW host-side in `touch`/`touch_range` BEFORE any
+    dispatch view is built — a table row handed here never names a
+    page another row shares or the prefix trie has registered — so
+    the scatter needs no refcount checks on the device, and the
+    kv-head-sharded pools inherit sharing for free (page ids are
+    shard-invariant; only head columns split).
     """
     ps = pool.shape[2]
     B, _, S, _ = new.shape

@@ -22,6 +22,7 @@ from repro.serving.loadgen import (
     OpenLoopResult,
     poisson_arrivals,
     run_open_loop,
+    shared_prefix_workload,
     trace_arrivals,
 )
 from repro.serving.policy import (
@@ -82,5 +83,6 @@ __all__ = [
     "make_policy",
     "poisson_arrivals",
     "run_open_loop",
+    "shared_prefix_workload",
     "trace_arrivals",
 ]

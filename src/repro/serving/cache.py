@@ -35,6 +35,24 @@ the matching pytrees for the engine's explicitly-sharded dispatch jits,
 and the arenas' own scatter/gather jits pin the same shardings on
 their outputs so the layout survives every engine step.
 
+Prefix caching (DESIGN.md §Prefix-caching): with ``prefix_cache=True``
+the PagedArena grows per-page REFCOUNTS, a content-keyed prefix trie
+over immutable full pages, and copy-on-write on the first divergent
+write.  Admission (`admit_cost` / `can_admit(tokens=...)` /
+`alloc(tokens=...)`) charges a request only for its unshared suffix —
+shared pages are charged once, to the cache's own ledger — and
+`register_prefix` publishes a slot's completed full pages so later
+requests with the same token prefix skip their recompute entirely.
+Pages whose last reference drops retire WARM (still registered,
+refcount 0) under the ``keep_pages`` lazy-eviction budget, which is
+what makes a preemption resume re-prefill only its tail.  Everything
+is host-side bookkeeping over the existing page pool: the device
+layout is untouched, so the kv-head-sharded pools share pages exactly
+like the single-device ones.  Integer decode is deterministic
+(DESIGN.md §Serving ¶Integer-only invariant), so a cached page is
+byte-identical to the recompute it replaces — sharing is exact, not
+approximate.
+
 Prefill runs at batch 1 into a scratch cache of identical per-slot
 shape, then is scattered into the arena at the leased slot's batch row
 (SlotArena) or through the slot's page-table row (PagedArena).  The
@@ -190,6 +208,27 @@ def _out_shardings(shardings) -> dict:
     return {} if shardings is None else {"out_shardings": shardings}
 
 
+class _PrefixNode:
+    """One registered full page of prefix content (trie node).
+
+    Keyed in its parent's ``children`` dict by the raw bytes of the
+    page's int32 tokens: the CONTENT is the key, chained from the
+    root, so reaching a node at depth d certifies the whole token
+    prefix [0, (d+1)*page_size) byte-for-byte — no hash collisions to
+    reason about.  That chain is exactly the KV dependency structure:
+    the KV image at position p is a function of tokens[0..p], so a
+    page is reusable iff every token up to its end matches.
+    """
+
+    __slots__ = ("parent", "key", "page", "children")
+
+    def __init__(self, parent, key: bytes, page: int):
+        self.parent = parent
+        self.key = key
+        self.page = page
+        self.children: dict = {}
+
+
 @runtime_checkable
 class Arena(Protocol):
     """The engine-facing arena contract (DESIGN.md §Serving).
@@ -225,12 +264,21 @@ class Arena(Protocol):
         """Uncommitted page budget (None: no page dimension)."""
         ...
 
-    def can_admit(self, prompt_len: int, total_len: int) -> bool: ...
+    def can_admit(
+        self, prompt_len: int, total_len: int, tokens=None
+    ) -> bool: ...
 
     def check_request(self, prompt_len: int, total_len: int): ...
 
     def pages_needed(self, total_len: int) -> int:
         """Worst-case page commitment for a request (0: unpaged)."""
+        ...
+
+    def admit_cost(self, total_len: int, tokens=None) -> int:
+        """Pages a request must bring of its own: `pages_needed` minus
+        whatever a registered prefix of `tokens` already holds (shared
+        pages are charged once — DESIGN.md §Prefix-caching ¶Suffix-only
+        admission; 0: unpaged)."""
         ...
 
     def committed_for(self, slot: int) -> int:
@@ -245,11 +293,22 @@ class Arena(Protocol):
         prompt_len: int,
         total_len: Optional[int] = None,
         written: Optional[int] = None,
+        tokens=None,
     ) -> int: ...
 
     def touch(self, slot: int, pos: int): ...
 
     def touch_range(self, slot: int, start: int, end: int): ...
+
+    def register_prefix(self, slot: int, tokens, upto: int):
+        """Publish `slot`'s immutable full pages over positions
+        [0, upto) to the prefix cache (no-op when disabled/unpaged)."""
+        ...
+
+    def flush_cache(self) -> int:
+        """Evict every warm (unreferenced, registered) page now;
+        returns how many were evicted (0: unpaged/disabled)."""
+        ...
 
     def release(self, slot: int): ...
 
@@ -306,6 +365,8 @@ def make_arena(lm, cfg: "ServingConfig") -> "Arena":
             n_pages=n_pages,
             mesh=cfg.mesh,
             kv_shard=cfg.kv_shard,
+            prefix_cache=cfg.prefix_cache,
+            keep_pages=cfg.cache_keep_pages,
         )
     return SlotArena(
         lm, cfg.n_slots, cfg.max_len, mesh=cfg.mesh, kv_shard=cfg.kv_shard
@@ -399,8 +460,11 @@ class SlotArena:
         """No page dimension: slots are the only admission gate."""
         return None
 
-    def can_admit(self, prompt_len: int, total_len: int) -> bool:
-        """A free slot always holds a worst-case request."""
+    def can_admit(
+        self, prompt_len: int, total_len: int, tokens=None
+    ) -> bool:
+        """A free slot always holds a worst-case request (`tokens` is
+        the prefix-cache hook; nothing to share here)."""
         return bool(self._free)
 
     def check_request(self, prompt_len: int, total_len: int):
@@ -410,8 +474,19 @@ class SlotArena:
         """Contiguous rows commit no pages."""
         return 0
 
+    def admit_cost(self, total_len: int, tokens=None) -> int:
+        """Contiguous rows commit no pages (and share none)."""
+        return 0
+
     def committed_for(self, slot: int) -> int:
         """Contiguous rows commit no pages."""
+        return 0
+
+    def register_prefix(self, slot: int, tokens, upto: int):
+        """No page granularity, nothing to share; no-op."""
+
+    def flush_cache(self) -> int:
+        """No prefix cache on the contiguous arena."""
         return 0
 
     def alloc(
@@ -420,6 +495,7 @@ class SlotArena:
         prompt_len: int,
         total_len: Optional[int] = None,
         written: Optional[int] = None,
+        tokens=None,
     ) -> int:
         """Lease a free slot to `req_id`; returns the slot index.
 
@@ -555,6 +631,18 @@ class PagedArena:
     decode advances and recycled wholesale on completion.  Short
     requests therefore stop reserving `max_len` worst-case rows, and
     the same arena bytes admit more concurrent requests.
+
+    ``prefix_cache=True`` adds refcounted page sharing (DESIGN.md
+    §Prefix-caching): a content-keyed trie maps immutable full-page
+    token prefixes to physical pages, admission installs the longest
+    registered match into the new slot's table row and charges only
+    the unshared suffix, `touch` copy-on-writes before the first
+    divergent write, and pages whose last reference drops stay WARM
+    (registered, refcount 0) under the ``keep_pages`` lazy-eviction
+    budget.  The running soundness invariant is
+    ``committed_pages + pinned_cache_pages <= n_pages`` — every future
+    on-demand pop is covered by free + warm pages, so decode still
+    never deadlocks on an empty pool.
     """
 
     def __init__(
@@ -567,6 +655,8 @@ class PagedArena:
         *,
         mesh=None,
         kv_shard: bool = False,
+        prefix_cache: bool = False,
+        keep_pages: int = 0,
     ):
         if max_len > lm.max_seq:
             raise ValueError(
@@ -696,6 +786,50 @@ class PagedArena:
         self.max_pages_in_use = 0
         self.max_committed = 0
 
+        # prefix cache (DESIGN.md §Prefix-caching) — all host-side:
+        # refcounts count table-row references per physical page;
+        # the trie maps full-page token content to pages; _warm holds
+        # registered refcount-0 pages in LRU (insertion) order.  The
+        # refcount array is maintained even with the cache off (it is
+        # cheap and lets the leak property test cover both modes).
+        self.prefix_cache = bool(prefix_cache)
+        self.keep_pages = int(keep_pages)
+        self.refcount = np.zeros(n_pages + 1, np.int32)
+        self._trie_root = _PrefixNode(None, b"", PAGE_NULL)
+        self._page_node: dict = {}  # physical page -> _PrefixNode
+        self._warm: dict = {}  # page -> None, LRU by insertion
+        self._slot_node: List[_PrefixNode] = [self._trie_root] * n_slots
+        self._slot_registered = np.zeros(n_slots, np.int32)
+        self.shared_at_admit = np.zeros(n_slots, np.int32)
+        self.on_cow = None  # engine hook: fn(slot, old_page, new_page)
+        self.prefix_hits = 0  # admissions that matched >= 1 page
+        self.prefix_misses = 0  # cache-eligible admissions, no match
+        self.prefix_hit_pages = 0  # pages served without recompute
+        self.cow_splits = 0
+        self.warm_evictions = 0
+
+        # CoW split: pool[dst] <- pool[src] on every paged leaf.
+        # src/dst traced (compiles once); shardings pinned like every
+        # other arena jit, and pages are kv-head-complete per shard,
+        # so the copy is shard-local on a mesh.
+        def _copy_page(arena_leaves, src, dst):
+            out = []
+            for x, b_ax, s_ax in zip(
+                arena_leaves, self._batch_axes, self._seq_axes
+            ):
+                if s_ax is None:
+                    out.append(x)
+                    continue
+                row = jax.lax.dynamic_index_in_dim(
+                    x, src, axis=b_ax, keepdims=False
+                )
+                out.append(x.at[(slice(None),) * b_ax + (dst,)].set(row))
+            return out
+
+        self._copy_page = jax.jit(
+            _copy_page, **_out_shardings(self._shardings)
+        )
+
     # -- page accounting ------------------------------------------------
     def _pages_for(self, total_len: int) -> int:
         """Worst-case pages for a request writing [0, total_len - 1):
@@ -719,31 +853,118 @@ class PagedArena:
         return len(self._free_pages)
 
     @property
+    def cache_pages(self) -> int:
+        """Pages the prefix cache owns (registered in the trie) —
+        charged to the cache ledger, not to any slot's commit."""
+        return len(self._page_node)
+
+    @property
+    def warm_pages(self) -> int:
+        """Registered pages with no referencing slot, kept allocated
+        under the keep budget; evictable on demand."""
+        return len(self._warm)
+
+    @property
+    def pinned_cache_pages(self) -> int:
+        """Cache-owned pages admission cannot reclaim: registered
+        pages some slot still references.  Warm pages are NOT pinned —
+        lazy eviction hands them back the moment a pop needs one."""
+        return len(self._page_node) - len(self._warm)
+
+    @property
     def budget_left(self) -> Optional[int]:
         """Uncommitted page budget — what admission (or a policy's
-        capacity simulation) may still hand out."""
-        return self.n_pages - self.committed_pages
+        capacity simulation) may still hand out.  Warm pages count as
+        available (evictable); pinned cache pages do not."""
+        return (
+            self.n_pages - self.committed_pages - self.pinned_cache_pages
+        )
 
     def pages_needed(self, total_len: int) -> int:
         """Worst-case commitment for a request (the protocol name for
         `_pages_for`)."""
         return self._pages_for(total_len)
 
+    def _match_node(self, tokens) -> Tuple[List[int], _PrefixNode]:
+        """Walk the trie over `tokens`' full pages: the physical pages
+        of the longest registered prefix, plus the deepest node (the
+        seed for this slot's own later registrations).  Every
+        registered page is resident by construction — in some table
+        row or warm — so a match never needs recompute."""
+        toks = np.asarray(tokens, np.int32)
+        node = self._trie_root
+        pages: List[int] = []
+        ps = self.page_size
+        for blk in range(toks.size // ps):
+            child = node.children.get(
+                toks[blk * ps : (blk + 1) * ps].tobytes()
+            )
+            if child is None:
+                break
+            pages.append(child.page)
+            node = child
+        return pages, node
+
+    def _discount(self, matched: int, prompt_len: int) -> int:
+        """Commit discount for `matched` shared pages of a
+        `prompt_len`-token source.  A matched page strictly below the
+        re-prefill tail is never written again — a full discount.
+        When the match covers the whole prompt the tail still
+        recomputes position P-1 (the engine needs its logits), which
+        lands INSIDE the last shared page and copy-on-writes into a
+        private replacement — so that one page stays in the request's
+        own budget."""
+        if matched == 0:
+            return 0
+        if matched * self.page_size < prompt_len:
+            return matched
+        return matched - 1
+
+    def admit_cost(self, total_len: int, tokens=None) -> int:
+        """Pages a request must bring of its OWN: the worst case minus
+        the shared-prefix discount (DESIGN.md §Prefix-caching
+        ¶Suffix-only admission — a shared page is charged once,
+        globally, to the cache ledger)."""
+        need = self._pages_for(total_len)
+        if tokens is None or not self.prefix_cache:
+            return need
+        matched, _ = self._match_node(tokens)
+        return need - self._discount(len(matched), len(tokens))
+
     def committed_for(self, slot: int) -> int:
         """Pages committed to `slot`'s lease — returned to the budget
-        if a policy preempts it."""
+        if a policy preempts it.  Shrinks as the slot's full pages are
+        registered (they transfer to the cache ledger)."""
         return int(self._commit[slot])
 
-    def can_admit(self, prompt_len: int, total_len: int) -> bool:
+    def can_admit(
+        self, prompt_len: int, total_len: int, tokens=None
+    ) -> bool:
         """Admission gate: a free decode row AND uncommitted budget for
         the request's own worst case.  Committing (not materializing)
         the worst case keeps the engine preemption-free: every
         on-demand `touch` is covered, so decode can never deadlock on
-        an empty pool."""
+        an empty pool.
+
+        With `tokens` and the prefix cache on, the request is charged
+        only its unshared suffix — but matched pages that are
+        currently WARM stop being evictable the moment they are
+        installed, so they re-enter the ledger here (`revive`).  The
+        preserved invariant is
+        committed_pages + pinned_cache_pages <= n_pages, which is
+        exactly "all future pops are covered by free + warm pages"."""
         if not self._free_slots:
             return False
         need = self._pages_for(total_len)
-        return self.committed_pages + need <= self.n_pages
+        revive = 0
+        if self.prefix_cache and tokens is not None:
+            matched, _ = self._match_node(tokens)
+            need -= self._discount(len(matched), len(tokens))
+            revive = sum(1 for p in matched if p in self._warm)
+        return (
+            self.committed_pages + self.pinned_cache_pages + revive + need
+            <= self.n_pages
+        )
 
     def check_request(self, prompt_len: int, total_len: int):
         need = self._pages_for(total_len)
@@ -754,47 +975,161 @@ class PagedArena:
             )
 
     # -- lifecycle ------------------------------------------------------
+    def _pop_page(self) -> int:
+        """A free physical page, lazily evicting the LRU warm page
+        when the free list is dry — warm pages are cache property
+        held only while the budget has no better use for them."""
+        if not self._free_pages:
+            if not self._warm:
+                raise RuntimeError(
+                    "page pool exhausted despite commitment accounting"
+                )
+            self._evict_warm(next(iter(self._warm)))
+        return self._free_pages.pop()
+
+    def _evict_warm(self, page: int):
+        """Unregister + free one warm page (lazy eviction).  Deeper
+        trie nodes under it become unreachable from the root — their
+        prefix content is gone, so they can no longer match — and age
+        out of the warm list on their own."""
+        del self._warm[page]
+        node = self._page_node.pop(page)
+        if node.parent is not None:
+            node.parent.children.pop(node.key, None)
+        self._free_pages.append(page)
+        self.warm_evictions += 1
+
+    def _retire(self, page: int):
+        """A registered page's last reference dropped: keep it warm
+        under the keep budget (LRU by retirement order), else evict
+        immediately."""
+        self._warm[page] = None
+        while len(self._warm) > self.keep_pages:
+            self._evict_warm(next(iter(self._warm)))
+
     def alloc(
         self,
         req_id: int,
         prompt_len: int,
         total_len: Optional[int] = None,
         written: Optional[int] = None,
+        tokens=None,
     ) -> int:
         """Lease a slot + commit the page budget; allocate pages for the
         positions materialized at admission — the whole prompt for the
         one-shot prefill path (`written` None), none for chunked
         prefill (`written` 0), whose pages arrive chunk by chunk via
-        touch_range (partial-prefill state)."""
+        touch_range (partial-prefill state).
+
+        `tokens` (prefix cache, chunked path only): the request's
+        source tokens.  The longest registered full-page prefix is
+        installed into the slot's table row — refcounted, charged to
+        the cache ledger, not this commit — and `lengths[slot]`
+        reports how many leading positions admission made valid; the
+        engine starts its chunk cursor there.  The skip is capped at
+        prompt_len - 1 so the tail always recomputes at least the
+        last prompt position (its logits seed decode)."""
         total_len = prompt_len if total_len is None else total_len
-        if not self.can_admit(prompt_len, total_len):
+        use = (
+            tokens
+            if self.prefix_cache and tokens is not None and written == 0
+            else None
+        )
+        if not self.can_admit(prompt_len, total_len, tokens=use):
             raise RuntimeError("out of slots or page budget")
         slot = self._free_slots.pop()
-        need = self._pages_for(total_len)
         self.owner[slot] = req_id
-        materialized = prompt_len if written is None else written
-        self.lengths[slot] = materialized
+        if use is not None:
+            shared, node = self._match_node(use)
+            need = self._pages_for(total_len) - self._discount(
+                len(shared), len(use)
+            )
+        else:
+            shared, node = [], self._trie_root
+            need = self._pages_for(total_len)
         self._commit[slot] = need
         self.committed_pages += need
         self.max_committed = max(self.max_committed, self.committed_pages)
-        for blk in range(-(-materialized // self.page_size)):
-            self.page_table[slot, blk] = self._free_pages.pop()
+        # install the shared prefix: cache-owned pages enter the table
+        # row refcounted; warm ones are revived (pinned again)
+        for blk, page in enumerate(shared):
+            self.page_table[slot, blk] = page
+            self.refcount[page] += 1
+            self._warm.pop(page, None)
+        if self.prefix_cache:
+            self._slot_node[slot] = node
+            self._slot_registered[slot] = len(shared)
+            self.shared_at_admit[slot] = len(shared)
+            if use is not None:
+                if shared:
+                    self.prefix_hits += 1
+                    self.prefix_hit_pages += len(shared)
+                else:
+                    self.prefix_misses += 1
+        if shared:
+            materialized = min(
+                len(shared) * self.page_size, int(prompt_len) - 1
+            )
+        else:
+            materialized = prompt_len if written is None else written
+        self.lengths[slot] = materialized
+        for blk in range(
+            len(shared), -(-materialized // self.page_size)
+        ):
+            page = self._pop_page()
+            self.page_table[slot, blk] = page
+            self.refcount[page] = 1
         self.max_pages_in_use = max(self.max_pages_in_use, self.pages_in_use)
         return slot
 
     def touch(self, slot: int, pos: int):
         """On-demand page allocation before the decode that writes at
         `pos`.  Covered by the admission-time commitment, so the free
-        list cannot be empty here."""
+        list (plus lazily evictable warm pages) cannot be empty here.
+
+        Copy-on-write (DESIGN.md §Prefix-caching ¶Copy-on-write): when
+        the covering page is shared (refcount > 1) or registered in
+        the trie, the slot must not write into it — pop a private
+        page, device-copy the contents, swap the table entry.  The
+        engine touches before building any dispatch view, so the
+        jit'd write paths (layers/attention paged writes) only ever
+        see exclusively-owned target pages and need no change."""
         blk = pos // self.page_size
-        if self.page_table[slot, blk] != PAGE_NULL:
+        page = int(self.page_table[slot, blk])
+        if page != PAGE_NULL:
+            if self.prefix_cache and (
+                self.refcount[page] > 1 or page in self._page_node
+            ):
+                self._cow(slot, blk, page)
             return
-        if not self._free_pages:
-            raise RuntimeError(
-                "page pool exhausted despite commitment accounting"
-            )
-        self.page_table[slot, blk] = self._free_pages.pop()
+        new = self._pop_page()
+        self.page_table[slot, blk] = new
+        self.refcount[new] = 1
         self.max_pages_in_use = max(self.max_pages_in_use, self.pages_in_use)
+
+    def _cow(self, slot: int, blk: int, old: int):
+        """Copy-on-write split of `slot`'s logical block `blk`.  The
+        pop is covered by the slot's commit: the only CoW site under
+        engine discipline is the re-prefill tail rewriting the last
+        position of a page-aligned exact match, whose replacement page
+        `_discount` deliberately left in the request's budget."""
+        new = self._pop_page()
+        leaves = self._copy_page(
+            jax.tree.leaves(self.caches), jnp.int32(old), jnp.int32(new)
+        )
+        self.caches = jax.tree.unflatten(self._treedef, leaves)
+        self.page_table[slot, blk] = new
+        self.refcount[new] = 1
+        self.refcount[old] -= 1
+        if self.refcount[old] == 0:
+            if old in self._page_node:
+                self._retire(old)
+            else:  # unshared + unregistered: plain free (defensive)
+                self._free_pages.append(old)
+        self.cow_splits += 1
+        self.max_pages_in_use = max(self.max_pages_in_use, self.pages_in_use)
+        if self.on_cow is not None:
+            self.on_cow(slot, old, new)
 
     def touch_range(self, slot: int, start: int, end: int):
         """Allocate every page covering positions [start, end) before a
@@ -820,11 +1155,25 @@ class PagedArena:
         freed = []
         for blk in range(self.pages_per_slot):
             page = int(self.page_table[slot, blk])
-            if page != PAGE_NULL:
-                self._free_pages.append(page)
-                self.page_table[slot, blk] = PAGE_NULL
-                freed.append(page)
+            if page == PAGE_NULL:
+                continue
+            self.page_table[slot, blk] = PAGE_NULL
+            self.refcount[page] -= 1
+            if self.refcount[page] > 0:
+                continue  # other table rows still share this page
+            if page in self._page_node:
+                # registered: retire warm under the keep budget
+                # (DESIGN.md §Prefix-caching ¶Warm pages) instead of
+                # freeing — a matching re-admission revives it
+                self._retire(page)
+                continue
+            self._free_pages.append(page)
+            freed.append(page)
         self.lengths[slot] = 0
+        if self.prefix_cache:
+            self._slot_node[slot] = self._trie_root
+            self._slot_registered[slot] = 0
+            self.shared_at_admit[slot] = 0
         return freed
 
     def release(self, slot: int):
@@ -835,6 +1184,61 @@ class PagedArena:
         self.committed_pages -= int(self._commit[slot])
         self._commit[slot] = 0
         self._free_slots.append(slot)
+
+    def register_prefix(self, slot: int, tokens, upto: int):
+        """Publish `slot`'s immutable FULL pages covering positions
+        [0, upto) to the prefix cache, transferring each newly
+        registered page from the slot's commit to the cache ledger
+        (charged once globally from here on — the slot's own release
+        or preemption no longer un-pays it while sharers remain).
+
+        Exactness: integer decode is deterministic, so the KV image
+        of the page holding positions [b*ps, (b+1)*ps) is a pure
+        function of tokens[0 : (b+1)*ps]; chaining page-content keys
+        from the root certifies exactly the bytes a matching request
+        would recompute (DESIGN.md §Prefix-caching ¶Exactness).
+
+        Idempotent per slot via a block cursor (re-registration of
+        the same blocks is free); when another slot already
+        registered identical content, the first registrant's pages
+        win and this slot's stay private.  No-op with the cache off,
+        and only ever called by the engine's chunked path — full
+        pages there are final, never rewritten."""
+        if not self.prefix_cache or self.owner[slot] is None:
+            return
+        nblk = min(int(upto) // self.page_size, self.pages_per_slot)
+        cur = int(self._slot_registered[slot])
+        if nblk <= cur:
+            return
+        toks = np.asarray(tokens, np.int32)
+        ps = self.page_size
+        node = self._slot_node[slot]
+        for blk in range(cur, nblk):
+            key = toks[blk * ps : (blk + 1) * ps].tobytes()
+            child = node.children.get(key)
+            if child is None:
+                page = int(self.page_table[slot, blk])
+                child = _PrefixNode(node, key, page)
+                node.children[key] = child
+                self._page_node[page] = child
+                # ownership transfer: slot-paid -> cache-paid
+                self._commit[slot] -= 1
+                self.committed_pages -= 1
+            node = child
+        self._slot_node[slot] = node
+        self._slot_registered[slot] = nblk
+
+    def flush_cache(self) -> int:
+        """Evict every warm page now (drop the retained-but-unused
+        cache state; registered pages still referenced by a slot are
+        untouched and will retire normally).  Returns the eviction
+        count — after a full drain + flush the pool is back to
+        pristine: zero pages in use, every refcount zero."""
+        n = 0
+        while self._warm:
+            self._evict_warm(next(iter(self._warm)))
+            n += 1
+        return n
 
     # -- shardings ------------------------------------------------------
     def cache_shardings(self):
@@ -935,6 +1339,11 @@ class PagedArena:
         into the measured window's report)."""
         self.max_pages_in_use = self.pages_in_use
         self.max_committed = self.committed_pages
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.prefix_hit_pages = 0
+        self.cow_splits = 0
+        self.warm_evictions = 0
 
     # -- telemetry ------------------------------------------------------
     def reject_reason(self, prompt_len: int, total_len: int) -> str:
@@ -962,7 +1371,7 @@ class PagedArena:
     def gauges(self) -> dict:
         """Instantaneous occupancy + page pressure sampled into each
         telemetry step record (DESIGN.md §Observability ¶Span model)."""
-        return {
+        out = {
             "n_leased": self.n_leased,
             "n_free": self.n_free,
             "occupancy": self.n_leased / self.n_slots,
@@ -971,9 +1380,13 @@ class PagedArena:
             "committed_pages": self.committed_pages,
             "max_pages_in_use": self.max_pages_in_use,
         }
+        if self.prefix_cache:
+            out["cache_pages"] = self.cache_pages
+            out["warm_pages"] = self.warm_pages
+        return out
 
     def stats(self) -> dict:
-        return {
+        out = {
             "arena": "paged",
             "arena_positions": self.n_pages * self.page_size,
             "page_size": self.page_size,
@@ -983,3 +1396,18 @@ class PagedArena:
             "max_pages_in_use": self.max_pages_in_use,
             "max_committed_pages": self.max_committed,
         }
+        if self.prefix_cache:
+            out.update(
+                {
+                    "prefix_cache": True,
+                    "cache_keep_pages": self.keep_pages,
+                    "cache_pages": self.cache_pages,
+                    "warm_pages": self.warm_pages,
+                    "prefix_hits": self.prefix_hits,
+                    "prefix_misses": self.prefix_misses,
+                    "prefix_hit_pages": self.prefix_hit_pages,
+                    "cow_splits": self.cow_splits,
+                    "warm_evictions": self.warm_evictions,
+                }
+            )
+        return out

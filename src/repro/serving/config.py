@@ -61,6 +61,15 @@ class ServingConfig:
     policy: Optional["SchedulingPolicy"] = None  # None -> FCFSPolicy()
     # observability sink (DESIGN.md §Observability); None -> NULL
     telemetry: Any = None
+    # prefix caching (DESIGN.md §Prefix-caching): refcounted page
+    # sharing across requests + warm pages for preemption resume.
+    # Requires the paged arena; sharing engages on the chunked path.
+    prefix_cache: bool = False
+    # warm-page budget: immutable full pages kept allocated (refcount
+    # 0, lazily evicted LRU) after their last holder releases, so a
+    # later shared-prefix admission or preemption resume can reuse
+    # them without recompute.  0 = evict eagerly on last release.
+    cache_keep_pages: int = 0
 
     def __post_init__(self):
         if self.n_slots < 1:
@@ -84,6 +93,21 @@ class ServingConfig:
             raise ValueError(
                 "kv_shard=True needs a mesh "
                 "(launch.mesh.make_serving_mesh)"
+            )
+        if self.prefix_cache and not self.paged:
+            raise ValueError(
+                "prefix_cache=True needs the paged arena (paged=True): "
+                "sharing is page-granular"
+            )
+        if self.cache_keep_pages < 0:
+            raise ValueError(
+                "cache_keep_pages must be >= 0, "
+                f"got {self.cache_keep_pages}"
+            )
+        if self.cache_keep_pages and not self.prefix_cache:
+            raise ValueError(
+                "cache_keep_pages needs prefix_cache=True "
+                "(warm pages are prefix-cache state)"
             )
         if self.scheduler is None:
             self.scheduler = SchedulerConfig()

@@ -366,6 +366,24 @@ class ServingEngine:
             self._prefill_mode = "bucketed"
         self._bucketed_prefill = self._prefill_mode == "bucketed"
 
+        # prefix caching (DESIGN.md §Prefix-caching): admission passes
+        # source tokens to the arena, chunk/decode harvests publish
+        # completed full pages, and the arena reports CoW splits back
+        # through the on_cow hook.  Sharing rides the chunked path —
+        # its per-chunk touch_range is what resolves CoW before every
+        # dispatch, and a skipped prefix is just a chunk cursor that
+        # starts late.
+        self._prefix_on = bool(cfg.prefix_cache)
+        if self._prefix_on and self._prefill_mode != "chunked":
+            raise ValueError(
+                "prefix_cache=True requires the chunked prefill path "
+                f"(prefill_chunk > 0, dense family); this engine is in "
+                f"{self._prefill_mode!r} mode"
+            )
+        if self._prefix_on:
+            self._page_size = cfg.page_size
+            self.arena.on_cow = self._on_cow
+
         # run statistics
         self._steps = 0
         self._occupancy_sum = 0.0
@@ -519,9 +537,18 @@ class ServingEngine:
             resume = self._resume.get(r.req_id)
             n_gen = len(resume.tokens) if resume is not None else 0
             # resume re-prefills prompt + tokens[:-1] (source_len);
-            # the page commitment is the request's own worst case
-            # either way
+            # the page commitment is the request's own worst case,
+            # minus whatever prefix the cache already holds
+            # (need_pages is the SUFFIX-ONLY charge when the prefix
+            # cache is on — DESIGN.md §Prefix-caching)
             source_len = r.prompt_len + max(n_gen - 1, 0)
+            if self._prefix_on:
+                need = arena.admit_cost(
+                    r.prompt_len + r.max_new_tokens,
+                    tokens=self._resume_source(r, resume),
+                )
+            else:
+                need = arena.pages_needed(r.prompt_len + r.max_new_tokens)
             pending.append(
                 PendingSnap(
                     req=r,
@@ -531,9 +558,7 @@ class ServingEngine:
                     prompt_len=r.prompt_len,
                     max_new_tokens=r.max_new_tokens,
                     source_len=source_len,
-                    need_pages=arena.pages_needed(
-                        r.prompt_len + r.max_new_tokens
-                    ),
+                    need_pages=need,
                     n_generated=n_gen,
                 )
             )
@@ -639,8 +664,15 @@ class ServingEngine:
         for req in plan.admit:
             if not self.sched.take(req):
                 continue  # not pending anymore; stale plan entry
+            tokens = (
+                self._resume_source(req, self._resume.get(req.req_id))
+                if self._prefix_on
+                else None
+            )
             if not self.arena.can_admit(
-                req.prompt_len, req.prompt_len + req.max_new_tokens
+                req.prompt_len,
+                req.prompt_len + req.max_new_tokens,
+                tokens=tokens,
             ):
                 # the plan over-committed: put the request back where
                 # the policy found it and count the block
@@ -755,6 +787,21 @@ class ServingEngine:
             st.pos += 1
             st.emit_times.append(now)  # the token's host-visible stamp
             self.arena.advance(slot)
+            if self._prefix_on and st.pos % self._page_size == 0:
+                # a page just filled (positions [0, pos) are written
+                # and final): publish it.  This is what keeps a later
+                # preemption victim's pages warm through its release —
+                # the resume re-prefills only the unregistered tail.
+                self.arena.register_prefix(
+                    slot,
+                    np.concatenate(
+                        [
+                            st.request.prompt,
+                            np.asarray(st.tokens, np.int32),
+                        ]
+                    ),
+                    st.pos,
+                )
             self._emit(st.request, tok, slot)
             self._maybe_finish(st, now)
 
@@ -817,10 +864,19 @@ class ServingEngine:
                 int(source.size),
                 req.prompt_len + req.max_new_tokens,
                 written=0,  # partial-prefill state: chunks arrive later
+                tokens=source if self._prefix_on else None,
             )
+            # shared-prefix skip: the arena reports how many leading
+            # positions admission installed from the cache — the chunk
+            # cursor starts there, so only the unshared tail prefills
+            # (a preempted victim whose pages stayed warm re-prefills
+            # at most one chunk — DESIGN.md §Prefix-caching ¶Warm
+            # pages)
+            off0 = int(self.arena.lengths[slot]) if self._prefix_on else 0
             self.prefilling[slot] = PrefillState(
                 request=req,
                 slot=slot,
+                offset=off0,
                 admit_time=(
                     resume.admit_time
                     if resume is not None
@@ -831,6 +887,20 @@ class ServingEngine:
             )
             if self.tel.enabled:
                 self.tel.event("admit", req_id=req.req_id, slot=slot)
+                if self._prefix_on:
+                    pages = int(self.arena.shared_at_admit[slot])
+                    if pages:
+                        self.tel.event(
+                            "prefix_hit",
+                            req_id=req.req_id,
+                            slot=slot,
+                            pages=pages,
+                            tokens=off0,
+                        )
+                    else:
+                        self.tel.event(
+                            "prefix_miss", req_id=req.req_id, slot=slot
+                        )
             return
         self._admit_whole(req, resume)
 
@@ -957,6 +1027,11 @@ class ServingEngine:
         now = time.perf_counter()
         for r, (st, off, n) in enumerate(rec.plan):
             self.arena.advance(st.slot, n)
+            if self._prefix_on:
+                # the chunk completed every position below off + n:
+                # its full pages are final — publish them so later
+                # requests (and this request's own resume) share them
+                self.arena.register_prefix(st.slot, st.source, off + n)
             if off + n < st.source_len:
                 st.offset = off + n  # carried into the next dispatch
                 continue
@@ -1029,6 +1104,23 @@ class ServingEngine:
                 slot=slot,
                 n_preempts=resume.n_preempts,
             )
+
+    def _on_cow(self, slot: int, old_page: int, new_page: int):
+        """Arena hook: a copy-on-write split happened while touching
+        `slot` (DESIGN.md §Prefix-caching ¶Copy-on-write).  Fires
+        inside the pre-dispatch touch loop, so the slot is always in
+        prefilling or active here."""
+        if not self.tel.enabled:
+            return
+        st = self.prefilling.get(slot) or self.active.get(slot)
+        req_id = st.request.req_id if st is not None else -1
+        self.tel.event(
+            "cow_split",
+            req_id=req_id,
+            slot=slot,
+            old_page=old_page,
+            new_page=new_page,
+        )
 
     def _emit(self, req: Request, tok: int, slot: int):
         self._n_generated += 1

@@ -47,6 +47,38 @@ def poisson_arrivals(
     return np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
 
 
+def shared_prefix_workload(
+    n: int,
+    vocab: int,
+    rng: np.random.Generator,
+    *,
+    prefix_len: int,
+    suffix_len: int,
+    max_new_tokens: int,
+) -> List[Request]:
+    """System-prompt workload (DESIGN.md §Prefix-caching): `n`
+    requests sharing ONE random `prefix_len`-token prefix, each with
+    its own random `suffix_len`-token tail.  With the prefix cache on,
+    the shared pages are prefilled once and charged once to the cache
+    ledger; a cold engine pays them per request — the shape behind
+    benchmarks/serve_bench.py's shared_prefix_vs_cold lane and
+    `repro.launch.serve --shared-prefix`."""
+    if n < 1:
+        raise ValueError(f"n must be >= 1, got {n}")
+    if prefix_len < 0 or suffix_len < 0:
+        raise ValueError("prefix_len and suffix_len must be >= 0")
+    prefix = rng.integers(0, vocab, size=(prefix_len,))
+    return [
+        Request(
+            np.concatenate(
+                [prefix, rng.integers(0, vocab, size=(suffix_len,))]
+            ).astype(np.int32),
+            max_new_tokens=max_new_tokens,
+        )
+        for _ in range(n)
+    ]
+
+
 def trace_arrivals(offsets: Sequence[float]) -> np.ndarray:
     """Validate an explicit arrival trace: non-negative offsets
     (seconds from run start), sorted ascending."""

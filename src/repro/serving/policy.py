@@ -63,7 +63,13 @@ class PendingSnap:
     prompt_len: int
     max_new_tokens: int
     source_len: int  # prefill length (prompt, + generated on resume)
-    need_pages: int  # worst-case page commitment (0: unpaged arena)
+    # worst-case page commitment (0: unpaged arena).  With the prefix
+    # cache on this is the SUFFIX-ONLY charge: pages a registered
+    # prefix already holds are charged once, to the cache ledger, not
+    # per sharer (DESIGN.md §Prefix-caching ¶Suffix-only admission) —
+    # so capacity simulation over these values counts shared pages
+    # exactly once, with no policy-side cache awareness needed.
+    need_pages: int
     n_generated: int  # > 0: a preempted request awaiting resume
 
 
@@ -113,7 +119,14 @@ class EngineView:
     prefilling: Tuple[PrefillSnap, ...]  # admission order
     active: Tuple[DecodeSnap, ...]  # slot order
     free_slots: int
-    budget_left: Optional[int]  # uncommitted pages (None: unpaged)
+    # uncommitted pages (None: unpaged).  Prefix cache: pages pinned
+    # by live sharers are excluded; warm pages count as available
+    # (lazily evictable).  Together with the suffix-only need_pages
+    # this keeps AdmissionSim's ledger consistent with the arena's —
+    # a warm page revived by an admission is re-pinned by the engine's
+    # per-admission can_admit re-check, the same advisory-plan safety
+    # net that covers every other intra-plan drift.
+    budget_left: Optional[int]
     gauges: dict  # the arena's instantaneous gauges
     # scheduler shape knobs (SchedulerConfig) + the engine's prefill
     # dispatch decision — "chunked" | "bucketed" | "exact"

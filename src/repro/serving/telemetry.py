@@ -64,6 +64,14 @@ EVENT_FIELDS: Dict[str, frozenset] = {
     # keeps emit count == n_generated across preemptions.
     "preempt": frozenset({"req_id", "slot", "reason", "n_generated"}),
     "resume": frozenset({"req_id", "slot", "n_preempts"}),
+    # prefix cache lifecycle (DESIGN.md §Prefix-caching): at admission
+    # the request either reused `pages` cached full pages covering its
+    # first `tokens` positions (prefill skipped them) or matched
+    # nothing; `cow_split` marks a copy-on-write — the slot was about
+    # to write inside a shared/registered page and got a private copy.
+    "prefix_hit": frozenset({"req_id", "slot", "pages", "tokens"}),
+    "prefix_miss": frozenset({"req_id", "slot"}),
+    "cow_split": frozenset({"req_id", "slot", "old_page", "new_page"}),
     "finish": frozenset({"req_id", "slot", "reason", "n_generated"}),
 }
 

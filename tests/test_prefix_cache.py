@@ -1,0 +1,416 @@
+"""Prefix caching tests (ISSUE 8, DESIGN.md §Prefix-caching).
+
+Acceptance pinned here:
+  - Shared-prefix serving is EXACT: with the prefix cache on, every
+    request finishes with token-for-token the output of a cold run —
+    sync and async dispatch, divergence at a page boundary and
+    mid-page, and on the mesh-sharded arena (refcounts are host-side
+    bookkeeping; the device layout never changes).
+  - Copy-on-write fires where the design says it must: an
+    aligned-exact twin (prompt == registered pages) re-prefills only
+    its final position, and that write lands in a private copy.
+  - Leak freedom as a property: over randomized workloads with
+    scripted preemptions, every drain leaves all refcounts at zero,
+    zero committed pages, and pages-in-use == warm retained pages;
+    flush_cache() returns the pool to pristine.
+  - Suffix-only admission (¶Suffix-only admission): a shared page is
+    charged once — admit_cost drops by the matched-page discount, a
+    prefix-sharing request admits where a cold one cannot, and
+    can_admit counts revived warm pages (matched warm pages stop
+    being evictable on install, so ignoring them would deadlock the
+    pool — the ledger soundness case).
+  - Preemption resume re-prefills at most ONE chunk when the victim's
+    pages stayed warm (¶Warm pages x §Scheduling ¶Preemption
+    bit-exactness).
+  - prefix_hit / prefix_miss / cow_split traces validate through
+    tools/trace_summary.py, and out-of-state sequences are rejected.
+"""
+import importlib.util
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.mesh import make_serving_mesh
+from repro.launch.serve import deploy_model
+from repro.serving import (
+    PagedArena,
+    SchedulerConfig,
+    ServingConfig,
+    ServingEngine,
+    Telemetry,
+)
+from test_policy import ScriptedPreemptions
+
+MAX_LEN = 40
+PS = 8
+
+
+@pytest.fixture(scope="module")
+def deployed():
+    return deploy_model("granite_3_2b", reduced=True, max_seq=MAX_LEN)
+
+
+def make_engine(lm, tables, **kw):
+    return ServingEngine(lm, tables, ServingConfig(**kw))
+
+
+def _sched(chunk=PS):
+    return SchedulerConfig(prefill_bucket=PS, prefill_chunk=chunk)
+
+
+def _serve(eng, prompts, gens):
+    for p, g in zip(prompts, gens):
+        eng.submit(p, max_new_tokens=g)
+    return {
+        c.req_id: list(map(int, c.tokens))
+        for c in eng.run_until_drained()
+    }
+
+
+def _assert_drained_clean(arena):
+    """Leak freedom after a drain: no slot holds a page reference,
+    nothing is committed, and the only resident pages are warm
+    (retained, evictable) ones within the keep budget."""
+    assert int((arena.refcount != 0).sum()) == 0
+    assert arena.committed_pages == 0
+    assert arena.pages_in_use == arena.warm_pages
+    assert arena.warm_pages <= arena.keep_pages
+
+
+def _trace_summary():
+    path = (pathlib.Path(__file__).resolve().parents[1]
+            / "tools" / "trace_summary.py")
+    spec = importlib.util.spec_from_file_location("trace_summary", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------
+# exactness: shared-prefix == cold, token for token (the tentpole)
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize("depth", [0, 1])
+@pytest.mark.parametrize("diverge", ["boundary", "midpage"])
+def test_shared_prefix_token_parity(deployed, depth, diverge):
+    """Three requests sharing a 2-page prompt prefix (diverging at a
+    page boundary or mid-page) plus an aligned-exact twin of the
+    first: cache-on output equals cache-off output exactly, the twin
+    admission is a hit, and its 1-position re-prefill copy-on-writes
+    the last shared page instead of corrupting it."""
+    lm, tables = deployed
+    rng = np.random.default_rng(3)
+    cut = 16 if diverge == "boundary" else 20
+    pre = rng.integers(0, lm.cfg.vocab, size=(cut,))
+    prompts = [
+        np.concatenate([pre, rng.integers(0, lm.cfg.vocab, size=(5,))])
+        for _ in range(3)
+    ]
+    prompts.append(np.asarray(pre[:16]).copy())  # aligned-exact twin
+    gens = [6, 6, 6, 6]
+    kw = dict(
+        n_slots=2, max_len=MAX_LEN, paged=True, page_size=PS,
+        dispatch_depth=depth, scheduler=_sched(),
+    )
+    cold = _serve(make_engine(lm, tables, **kw), prompts, gens)
+    eng = make_engine(
+        lm, tables, prefix_cache=True, cache_keep_pages=12, **kw)
+    shared = _serve(eng, prompts, gens)
+    assert shared == cold
+    st = eng.stats()
+    assert st["prefix_hits"] >= 1
+    assert st["prefix_hit_pages"] >= 2  # the twin reuses both pages
+    assert st["cow_splits"] >= 1  # ... and split the one it writes in
+    _assert_drained_clean(eng.arena)
+
+
+@pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs the 8-device forced host platform (tests/conftest.py)",
+)
+def test_shared_prefix_parity_sharded(deployed):
+    """Same exactness contract on the mesh-sharded arena: refcount +
+    trie bookkeeping is host-side, page ids are shard-invariant, and
+    the CoW page copy runs under the pinned KV shardings — so sharing
+    changes no tokens on a (data=4, model=2) mesh either."""
+    lm, tables = deployed
+    mesh = make_serving_mesh(2, n_data=4)
+    rng = np.random.default_rng(4)
+    pre = rng.integers(0, lm.cfg.vocab, size=(16,))
+    prompts = [
+        np.concatenate([pre, rng.integers(0, lm.cfg.vocab, size=(4,))])
+        for _ in range(3)
+    ] + [np.asarray(pre).copy()]
+    gens = [5, 5, 5, 5]
+    kw = dict(
+        n_slots=2, max_len=MAX_LEN, paged=True, page_size=PS,
+        mesh=mesh, kv_shard=True, scheduler=_sched(),
+    )
+    cold = _serve(make_engine(lm, tables, **kw), prompts, gens)
+    eng = make_engine(
+        lm, tables, prefix_cache=True, cache_keep_pages=12, **kw)
+    shared = _serve(eng, prompts, gens)
+    assert shared == cold
+    st = eng.stats()
+    assert st["prefix_hit_pages"] >= 2 and st["cow_splits"] >= 1
+    _assert_drained_clean(eng.arena)
+
+
+# ---------------------------------------------------------------------
+# leak freedom as a property (randomized interleavings + preemption)
+# ---------------------------------------------------------------------
+def test_refcount_leak_freedom_random(deployed):
+    """Randomized rounds of mixed shared-prefix / cold prompts with
+    scripted preemptions, cache on and off: outputs match exactly
+    across the two (admission timing shifts, tokens never do), and
+    every cache-on drain leaves refcounts at zero with only warm
+    pages resident; flush_cache() then empties the pool."""
+    lm, tables = deployed
+    rng = np.random.default_rng(5)
+    pre = rng.integers(0, lm.cfg.vocab, size=(16,))
+    for _ in range(3):
+        n = int(rng.integers(3, 6))
+        prompts, gens = [], []
+        for _ in range(n):
+            if rng.random() < 0.6:
+                sfx = rng.integers(
+                    0, lm.cfg.vocab, size=(int(rng.integers(1, 8)),))
+                prompts.append(np.concatenate([pre, sfx]))
+            else:
+                prompts.append(rng.integers(
+                    0, lm.cfg.vocab, size=(int(rng.integers(5, 20)),)))
+            gens.append(
+                min(int(rng.integers(4, 10)), MAX_LEN - len(prompts[-1])))
+        script = {int(i): "active" for i in rng.integers(2, 25, size=3)}
+        outs = {}
+        for on in (False, True):
+            eng = make_engine(
+                lm, tables, n_slots=2, max_len=MAX_LEN, paged=True,
+                page_size=PS, scheduler=_sched(chunk=4),
+                policy=ScriptedPreemptions(script),
+                prefix_cache=on, cache_keep_pages=10 if on else 0,
+            )
+            outs[on] = _serve(eng, prompts, gens)
+            if on:
+                _assert_drained_clean(eng.arena)
+                evicted = eng.arena.flush_cache()
+                assert evicted == eng.arena.warm_pages or evicted >= 0
+                assert eng.arena.warm_pages == 0
+                assert eng.arena.pages_in_use == 0
+                assert eng.arena.free_pages == eng.arena.n_pages
+        assert outs[True] == outs[False]
+        assert len(outs[True]) == n  # nothing lost
+
+
+# ---------------------------------------------------------------------
+# suffix-only admission ledger (¶Suffix-only admission)
+# ---------------------------------------------------------------------
+def test_suffix_only_admission_ledger(deployed):
+    """Arena-level ledger arithmetic: registration transfers pages
+    from the slot's commit to the cache ledger, admit_cost discounts
+    exactly the matched pages, and a prefix-sharing request admits
+    where a cold one cannot."""
+    lm, _ = deployed
+    arena = PagedArena(
+        lm, n_slots=3, max_len=MAX_LEN, page_size=PS, n_pages=7,
+        prefix_cache=True, keep_pages=7)
+    rng = np.random.default_rng(11)
+    toks = rng.integers(0, lm.cfg.vocab, size=(24,)).astype(np.int32)
+    total = 30  # worst case: ceil(29/8) = 4 pages
+    need = arena.pages_needed(total)
+    assert need == 4
+    # nothing registered yet: no discount
+    assert arena.admit_cost(total, tokens=toks) == need
+
+    slot = arena.alloc(0, 24, total, written=0, tokens=toks)
+    assert arena.committed_pages == need
+    # chunked prefill materializes [0, 16) then registers those pages
+    arena.touch_range(slot, 0, 16)
+    arena.advance(slot, 16)
+    arena.register_prefix(slot, toks, 16)
+    # ownership transfer: 2 pages moved from the slot's commit to the
+    # cache ledger (charged once, globally)
+    assert arena.cache_pages == 2
+    assert arena.committed_pages == need - 2
+    assert arena.pinned_cache_pages == 2  # still referenced by slot 0
+
+    # a same-prefix request brings only its unshared suffix ...
+    assert arena.admit_cost(total, tokens=toks) == need - 2
+    assert arena.can_admit(24, total, tokens=toks)
+    # ... where the cold worst case no longer fits the 7-page pool:
+    # 2 committed + 2 pinned + 4 = 8 > 7
+    assert not arena.can_admit(24, total)
+
+    # donor release un-pays only its own suffix; shared pages go warm
+    arena.release(slot)
+    assert arena.committed_pages == 0
+    assert arena.warm_pages == 2 and arena.pinned_cache_pages == 0
+    assert int((arena.refcount != 0).sum()) == 0
+
+
+def test_can_admit_counts_revived_warm_pages(deployed):
+    """Ledger soundness: warm pages MATCHED by the incoming request
+    stop being evictable the moment they are installed, so can_admit
+    must charge them (`revive`) on top of the suffix need.  Ignoring
+    them admits a request whose future touches exceed free + evictable
+    warm — a pool deadlock.  A cold request the same size still
+    admits, because for IT the warm pages remain evictable."""
+    lm, _ = deployed
+    arena = PagedArena(
+        lm, n_slots=3, max_len=MAX_LEN, page_size=PS, n_pages=4,
+        prefix_cache=True, keep_pages=4)
+    rng = np.random.default_rng(13)
+    toks = rng.integers(0, lm.cfg.vocab, size=(17,)).astype(np.int32)
+    # donor: register 2 pages, then leave -> 2 warm, 2 free
+    s = arena.alloc(0, 17, 18, written=0, tokens=toks)
+    arena.touch_range(s, 0, 16)
+    arena.advance(s, 16)
+    arena.register_prefix(s, toks, 16)
+    arena.release(s)
+    assert arena.warm_pages == 2 and arena.free_pages == 2
+
+    # an active cold tenant commits the 2 remaining free pages
+    arena.alloc(1, 11, 12, written=0)  # ceil(11/8) = 2 pages
+    assert arena.committed_pages == 2
+
+    # shared request: need 1 own page but would pin the 2 warm pages
+    # -> 2 committed + 2 revived + 1 = 5 > 4: MUST reject (without
+    # the revive term this passes 2 + 1 <= 4 and later deadlocks)
+    shared = np.concatenate(
+        [toks[:16], rng.integers(0, lm.cfg.vocab, size=(1,))]
+    ).astype(np.int32)
+    assert arena.admit_cost(18, tokens=shared) == 1
+    assert not arena.can_admit(17, 18, tokens=shared)
+    # a COLD 2-page request admits: warm pages stay evictable for it
+    assert arena.can_admit(11, 12)
+
+
+# ---------------------------------------------------------------------
+# preemption resume rides the cache (¶Warm pages)
+# ---------------------------------------------------------------------
+def test_resume_refills_at_most_one_chunk(deployed):
+    """A preempted request whose pages stayed warm re-prefills at most
+    ONE chunk on resume (the unregistered partial-page tail); the
+    resumed admission is a prefix hit, and the tokens still match an
+    uninterrupted run exactly (the §Scheduling ¶Preemption
+    bit-exactness oracle keeps guarding the reconstruction)."""
+    lm, tables = deployed
+    rng = np.random.default_rng(9)
+    prompts = [
+        rng.integers(0, lm.cfg.vocab, size=(18,)),
+        rng.integers(0, lm.cfg.vocab, size=(10,)),
+    ]
+    gens = [10, 8]
+    kw = dict(
+        n_slots=2, max_len=MAX_LEN, paged=True, page_size=PS,
+        scheduler=_sched(),
+    )
+    cold = _serve(make_engine(lm, tables, **kw), prompts, gens)
+
+    tel = Telemetry()
+    pol = ScriptedPreemptions({6: "active"})
+    eng = make_engine(
+        lm, tables, prefix_cache=True, cache_keep_pages=16,
+        telemetry=tel, policy=pol, **kw)
+    outs = _serve(eng, prompts, gens)
+    assert outs == cold
+    assert pol.n_token_bearing >= 1
+
+    preempts = [e for e in tel.events if e["event"] == "preempt"]
+    assert preempts
+    rid, t0 = preempts[0]["req_id"], preempts[0]["t"]
+    refill_chunks = [
+        e for e in tel.events
+        if e["event"] == "prefill_chunk"
+        and e["req_id"] == rid and e["t"] > t0
+    ]
+    assert len(refill_chunks) <= 1
+    # the resume admission found the victim's own pages warm
+    assert any(
+        e["event"] == "prefix_hit" and e["req_id"] == rid
+        and e["t"] > t0 and e["pages"] >= 1
+        for e in tel.events
+    )
+    _assert_drained_clean(eng.arena)
+
+
+# ---------------------------------------------------------------------
+# trace validation (satellite: telemetry)
+# ---------------------------------------------------------------------
+def test_prefix_trace_validates(deployed, tmp_path):
+    """An exported trace with prefix_hit/prefix_miss/cow_split events
+    passes tools/trace_summary.py validation, the per-request rollup
+    carries shared-page savings, and the fleet summary prints them."""
+    lm, tables = deployed
+    rng = np.random.default_rng(21)
+    pre = rng.integers(0, lm.cfg.vocab, size=(16,))
+    prompts = [
+        np.concatenate([pre, rng.integers(0, lm.cfg.vocab, size=(3,))]),
+        np.asarray(pre).copy(),  # aligned-exact: forces a cow_split
+        np.concatenate([pre, rng.integers(0, lm.cfg.vocab, size=(5,))]),
+    ]
+    tel = Telemetry()
+    eng = make_engine(
+        lm, tables, n_slots=1, max_len=MAX_LEN, paged=True,
+        page_size=PS, scheduler=_sched(), telemetry=tel,
+        prefix_cache=True, cache_keep_pages=12,
+    )
+    _serve(eng, prompts, [5, 5, 5])
+    path = tmp_path / "trace.jsonl"
+    tel.export_trace(str(path))
+
+    ts = _trace_summary()
+    events = ts.load_trace(str(path))
+    ts.validate(events)
+    reqs = ts.lifecycles(events)
+    assert len(reqs) == 3
+    assert sum(r["prefix_pages"] for r in reqs.values()) >= 2
+    assert sum(r["cow_splits"] for r in reqs.values()) >= 1
+    out = ts.summarize(events, reqs)
+    assert "prefix cache:" in out and "cow splits" in out
+
+
+def test_prefix_trace_state_machine_rejects(deployed):
+    """Out-of-state prefix events are malformed: a cache outcome
+    before admission, a second outcome for one admission, an outcome
+    after the admission progressed, a cow_split while queued."""
+    ts = _trace_summary()
+
+    def ev(kind, **kw):
+        return {"event": kind, "t": 0.0, "req_id": 0, "slot": 0, **kw}
+
+    hit = dict(pages=1, tokens=8)
+    with pytest.raises(ts.TraceError, match="prefix_hit while queued"):
+        ts.check_preemptions(0, [ev("prefix_hit", **hit)])
+    with pytest.raises(ts.TraceError, match="duplicate cache outcome"):
+        ts.check_preemptions(
+            0, [ev("admit"), ev("prefix_miss"), ev("prefix_hit", **hit)])
+    with pytest.raises(ts.TraceError, match="progressed"):
+        ts.check_preemptions(
+            0,
+            [ev("admit"),
+             ev("prefill_chunk", start=0, end=8, pages=1),
+             ev("prefix_miss")])
+    with pytest.raises(ts.TraceError, match="cow_split while queued"):
+        ts.check_preemptions(0, [ev("cow_split", old_page=1, new_page=2)])
+
+
+# ---------------------------------------------------------------------
+# config surface
+# ---------------------------------------------------------------------
+def test_prefix_cache_config_validation(deployed):
+    """prefix_cache needs the paged arena; cache_keep_pages needs the
+    cache; the engine refuses the whole-prompt prefill path."""
+    with pytest.raises(ValueError):
+        ServingConfig(prefix_cache=True)  # sharing is page-granular
+    with pytest.raises(ValueError):
+        ServingConfig(cache_keep_pages=4)  # retention needs the cache
+    with pytest.raises(ValueError):
+        ServingConfig(paged=True, prefix_cache=True, cache_keep_pages=-1)
+    lm, tables = deployed
+    cfg = ServingConfig(
+        n_slots=1, max_len=16, paged=True, page_size=PS,
+        prefix_cache=True, scheduler=SchedulerConfig(prefill_chunk=0))
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServingEngine(lm, tables, cfg)

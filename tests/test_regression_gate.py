@@ -3,9 +3,11 @@
 The CI gate is itself load-bearing (a gate that silently passes
 regressions is worse than none), so the failure paths are pinned:
 a goodput drop beyond its margin fails, a within-margin wobble
-passes, a silently dropped metric fails, and the open-loop section's
+passes, a silently dropped metric fails, the open-loop section's
 load-dependent latency tails are pruned from the TTFT/ITL gates
-(DESIGN.md §Scheduling ¶Open-loop harness).
+(DESIGN.md §Scheduling ¶Open-loop harness), and the prefix-cache
+`ttft_uplift` floor (DESIGN.md §Prefix-caching) fails when the
+cold-vs-shared win evaporates past its margin.
 """
 import copy
 import importlib.util
@@ -42,6 +44,14 @@ def _tree():
                 "2.0x": {"goodput_qps": 1.5, "p50_ttft_s": 9.0,
                          "p99_itl_s": 0.5},
             },
+        },
+        "shared_prefix_vs_cold": {
+            "cold": {"tok_s": 80.0, "p50_ttft_s": 0.050,
+                     "p95_ttft_s": 0.090},
+            "shared": {"tok_s": 95.0, "p50_ttft_s": 0.040,
+                       "p95_ttft_s": 0.070},
+            "ttft_uplift": 1.3,
+            "concurrency_uplift": 2.0,
         },
     }
 
@@ -103,5 +113,28 @@ def test_throughput_regression_still_fails(tmp_path, monkeypatch):
 def test_closed_loop_ttft_still_gated(tmp_path, monkeypatch):
     cand = _tree()
     cand["mixed_ttft"]["whole"]["p95_ttft_s"] = 0.200  # +150%
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_ttft_uplift_floor_fails(tmp_path, monkeypatch):
+    """The prefix-cache win evaporating (shared TTFT back at cold) is
+    a regression even when both lanes stay within their own margins:
+    1.3 -> 0.6 is a 54% drop, past 0.30 * UPLIFT_MARGIN (1.5) = 45%."""
+    cand = _tree()
+    cand["shared_prefix_vs_cold"]["ttft_uplift"] = 0.6
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_ttft_uplift_jitter_within_margin_passes(tmp_path, monkeypatch):
+    cand = _tree()
+    cand["shared_prefix_vs_cold"]["ttft_uplift"] = 1.0  # -23%
+    _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_missing_uplift_fails(tmp_path, monkeypatch):
+    cand = _tree()
+    del cand["shared_prefix_vs_cold"]["ttft_uplift"]
     with pytest.raises(SystemExit):
         _run(tmp_path, monkeypatch, _tree(), cand)

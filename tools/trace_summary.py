@@ -11,12 +11,19 @@ Reads the JSONL request-lifecycle trace that `--trace-out` produces
   sequence that violates the eviction state machine — preempt only
   while admitted, re-admission before any further progress, resume
   only after a token-bearing preempt, no finish while evicted) are
-  all malformed — exit code 1.
+  all malformed — exit code 1.  Prefix-cache events ride the same
+  state machine (DESIGN.md §Prefix-caching): `prefix_hit` /
+  `prefix_miss` are admission outcomes — legal only while admitted,
+  exactly one per admit, before that admission's first progress —
+  and `cow_split` (a write landed on a shared/registered page and got
+  a private copy) is legal only while admitted.
 
   rolls the events up per request: TTFT (submit -> first_token), ITL
   percentiles from the emit-gap series, and the queued (submit ->
   admit) / prefill (admit -> first_token) / decode (first_token ->
-  finish) breakdown — then prints fleet-level p50/p95/p99.
+  finish) breakdown — then prints fleet-level p50/p95/p99, plus a
+  prefix-cache rollup (hit/miss counts, shared pages + prefill
+  tokens skipped, copy-on-write splits) when the trace has any.
 
   with --metrics metrics.json, also renders the per-step phase
   breakdown (admission / plan_chunks / chunk_dispatch / chunk_harvest /
@@ -95,16 +102,44 @@ def check_preemptions(rid, evs: list):
     queued -> admitted -> (evicted -> admitted)* -> finished.  A
     preempt is only legal while admitted; nothing progresses while
     evicted until a re-admit; a resume must follow a token-bearing
-    preempt and must carry the running preemption count."""
+    preempt and must carry the running preemption count.  Prefix-cache
+    events are pinned to the same states (DESIGN.md §Prefix-caching):
+    prefix_hit/prefix_miss record an admission's cache outcome —
+    exactly one per admit, before that admission makes any progress —
+    and cow_split is only legal while admitted."""
     state = "queued"
     n_pre = 0
     had_tokens = False  # some preempt in the past carried tokens
+    prefix_open = False  # admit seen, cache outcome not yet recorded
+    progressed = False  # chunks/tokens since the last admit
     for e in evs:
         k = e["event"]
         if k == "admit":
             if state not in ("queued", "evicted"):
                 raise TraceError(f"req {rid}: admit while {state}")
             state = "admitted"
+            prefix_open = True
+            progressed = False
+        elif k in ("prefix_hit", "prefix_miss"):
+            if state != "admitted":
+                raise TraceError(f"req {rid}: {k} while {state}")
+            if not prefix_open:
+                raise TraceError(
+                    f"req {rid}: {k} without a fresh admit "
+                    "(duplicate cache outcome for one admission)"
+                )
+            if progressed:
+                raise TraceError(
+                    f"req {rid}: {k} after this admission progressed"
+                )
+            prefix_open = False
+        elif k == "cow_split":
+            if state != "admitted":
+                raise TraceError(f"req {rid}: cow_split while {state}")
+        elif k == "prefill_chunk":
+            if state != "admitted":
+                raise TraceError(f"req {rid}: {k} while {state}")
+            progressed = True
         elif k == "preempt":
             if state != "admitted":
                 raise TraceError(f"req {rid}: preempt while {state}")
@@ -126,6 +161,7 @@ def check_preemptions(rid, evs: list):
         elif k in ("first_token", "emit"):
             if state != "admitted":
                 raise TraceError(f"req {rid}: {k} while {state}")
+            progressed = True
         elif k == "finish":
             if state != "admitted":
                 raise TraceError(f"req {rid}: finish while {state}")
@@ -172,6 +208,13 @@ def lifecycles(events: list) -> dict:
             "rejects": len(kinds.get("admit_reject", [])),
             "n_chunks": len(kinds.get("prefill_chunk", [])),
             "preempts": n_preempts,
+            "prefix_pages": sum(
+                e["pages"] for e in kinds.get("prefix_hit", [])
+            ),
+            "prefix_tokens": sum(
+                e["tokens"] for e in kinds.get("prefix_hit", [])
+            ),
+            "cow_splits": len(kinds.get("cow_split", [])),
         }
         if sub:
             rec["ttft_s"] = first[0]["t"] - sub[0]["t"]
@@ -211,6 +254,24 @@ def summarize(events: list, reqs: dict) -> str:
         lines.append(
             f"  preemptions: {n_pre} over {hit} requests "
             "(resume parity held: every victim finished)"
+        )
+    hits = counts.get("prefix_hit", 0)
+    misses = counts.get("prefix_miss", 0)
+    if hits or misses:
+        # shared-page savings: every hit page is a full page of
+        # prefill the engine did NOT recompute (exactness argument in
+        # DESIGN.md §Prefix-caching ¶Exactness makes the skip safe)
+        pages = sum(
+            e["pages"] for e in events if e["event"] == "prefix_hit"
+        )
+        toks = sum(
+            e["tokens"] for e in events if e["event"] == "prefix_hit"
+        )
+        lines.append(
+            f"  prefix cache: {hits} hits / {misses} misses, "
+            f"{pages} shared pages reused "
+            f"({toks} prefill tokens skipped), "
+            f"{counts.get('cow_split', 0)} cow splits"
         )
     ttfts = [r["ttft_s"] for r in reqs.values() if "ttft_s" in r]
     itls = [d for r in reqs.values() for d in r["itl"]]
