@@ -72,6 +72,22 @@ UPLIFT_KEYS = ("ttft_uplift",)
 # way goodput swings with the Poisson draw, so it gets the same
 # widened margin
 UPLIFT_MARGIN = 1.5
+# the kernel-vs-gather sections (`paged_kernel_vs_gather` decode-heavy,
+# `paged_prefill_kernel_vs_gather` prefill-heavy — DESIGN.md §Serving
+# ¶Unified attention kernel): their kernel/gather lanes ride the
+# normalized tok_s + TTFT/ITL gates like every engine lane; on top of
+# that each section's `kernel_to_gather` scalar (kernel tok/s / gather
+# tok/s, SAME run, dimensionless so it needs NO lockstep
+# normalization) is gated as a floor on the fused kernel's reason to
+# exist — the kernel drifting down to and past the write-then-gather
+# oracle is a kernel regression even when both lanes' absolute numbers
+# stay in margin (e.g. a dense gather sneaking back into the default
+# path slows kernel AND gather lanes alike on everything but this
+# ratio)
+KERNEL_RATIO_KEYS = ("kernel_to_gather",)
+# within-run throughput ratios at these sub-second windows carry the
+# same host jitter as the uplift ratio, so same widened margin
+KERNEL_RATIO_MARGIN = 1.5
 
 
 def flat_metrics(tree, keys, prefix=""):
@@ -203,6 +219,16 @@ def main():
         failures += gate(
             base_up, cand_up, cand_up,
             args.max_regression * UPLIFT_MARGIN,
+            higher_is_better=True, unit="x")
+
+    # kernel/gather throughput ratio: kernel vs oracle within ONE run,
+    # already hardware-neutral — gated raw (no lockstep normalization)
+    base_kr = flat_metrics(base_tree, KERNEL_RATIO_KEYS)
+    cand_kr = flat_metrics(cand_tree, KERNEL_RATIO_KEYS)
+    if base_kr or cand_kr:
+        failures += gate(
+            base_kr, cand_kr, cand_kr,
+            args.max_regression * KERNEL_RATIO_MARGIN,
             higher_is_better=True, unit="x")
 
     if failures:

@@ -419,6 +419,69 @@ def bench_paged_kernel_vs_gather(
     }
 
 
+def bench_paged_prefill_kernel_vs_gather(
+    lm, tables, rng, *, slots, max_len, page_size, bucket, chunk
+):
+    """Prefill micro-benchmark: the unified paged-attention kernel vs
+    the write-then-gather oracle on a prefill-heavy workload (long
+    prompts, short generations, chunked prefill — so the per-chunk
+    (B, C)-wide unified dispatch dominates the window, DESIGN.md
+    §Serving ¶Unified attention kernel).  Both paths quantize one
+    global probability image per row — no per-block requant — so they
+    are bit-exact by construction and tokens must agree; the gated
+    difference is the chunk dispatch's cost.  A dense logical-KV
+    gather sneaking back into the default chunk path moves kernel
+    tok/s (and TTFT) without moving gather tok/s."""
+    gen = max(1, max_len // 8)
+    p_len = max_len - gen - 1
+    workload = [
+        (rng.integers(0, lm.cfg.vocab, size=(p_len,)), gen)
+        for _ in range(2 * slots)
+    ]
+    kernel_tokens, gather_tokens = [], []
+    kernel = bench_engine(
+        lm,
+        tables,
+        workload,
+        slots,
+        max_len,
+        bucket,
+        paged=True,
+        page_size=page_size,
+        max_prefills=2 * slots,
+        chunk=chunk,
+        paged_kernel=True,
+        collect_tokens=kernel_tokens,
+        ttft_percentiles=True,
+        repeats=3,
+    )
+    gather = bench_engine(
+        lm,
+        tables,
+        workload,
+        slots,
+        max_len,
+        bucket,
+        paged=True,
+        page_size=page_size,
+        max_prefills=2 * slots,
+        chunk=chunk,
+        paged_kernel=False,
+        collect_tokens=gather_tokens,
+        ttft_percentiles=True,
+        repeats=3,
+    )
+    assert kernel_tokens == gather_tokens, "kernel/gather divergence"
+    return {
+        "requests": len(workload), "prompt_len": p_len, "gen": gen,
+        "chunk": chunk,
+        "kernel": kernel, "gather": gather,
+        "kernel_to_gather": (
+            kernel["tok_s"] / gather["tok_s"] if gather["tok_s"] else 0.0
+        ),
+    }
+
+
 def bench_kv_shard_vs_single(
     lm, tables, rng, *, slots, max_len, page_size, bucket
 ):
@@ -760,6 +823,10 @@ def main():
         "paged_kernel_vs_gather": bench_paged_kernel_vs_gather(
             lm, tables, rng, slots=args.slots, max_len=max_len,
             page_size=args.page_size, bucket=args.prefill_bucket),
+        "paged_prefill_kernel_vs_gather": bench_paged_prefill_kernel_vs_gather(
+            lm, tables, rng, slots=args.slots, max_len=max_len,
+            page_size=args.page_size, bucket=args.prefill_bucket,
+            chunk=args.prefill_chunk),
         "kv_shard_vs_single": bench_kv_shard_vs_single(
             lm, tables, rng, slots=args.slots, max_len=max_len,
             page_size=args.page_size, bucket=args.prefill_bucket),

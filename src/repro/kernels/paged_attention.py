@@ -1,42 +1,52 @@
-"""Fused paged-attention integer decode kernel (W8A8 serving).
+"""Fused paged-attention integer kernel (W8A8 serving, prefill+decode).
 
-Single-token decode directly over the paged KV arena: the kernel reads
-K/V page by page *through the page table* (dynamic `pl.ds` loads into
-VMEM), so the serving hot path never materializes the dense logical
-(B, K, T, hd) view that `layers/attention._paged_kv_view` gathers —
-that O(n_slots x max_len) transient copy per decode step was the
-ROADMAP's fused-kernel follow-up, and survives only on the flagged
-parity-oracle path (`variants paged_decode="gather"`).
+Multi-token (S, T) queries directly over the paged KV arena: the
+kernel reads K/V page by page *through the page table* (dynamic
+`pl.ds` loads into VMEM), so the serving hot path never materializes
+the dense logical (B, K, T, hd) view that
+`layers/attention._paged_kv_view` gathers — that O(n_slots x max_len)
+transient copy per chunk/step was the ROADMAP's fused-kernel
+follow-up, and survives only on the flagged parity-oracle path
+(`variants paged_decode="gather"`).  S = 1 is single-token decode;
+S = C is a chunked-prefill block; the serving engine issues ONE
+unified dispatch where decode rows and prefill-chunk rows share the
+same (B, H, S, hd) query batch (DESIGN.md §Serving ¶Unified attention
+kernel).
 
-Algorithm — the model's unfused ID decode attention, bit for bit:
+Algorithm — the model's unfused ID attention, bit for bit:
 
     per page j (physical id table[b, j]):
       s_j      = q_i8 . k_page_i8^T            int32, MXU int8 path
-      logits_j = s_j * score_scale + mask      staged into a VMEM row
-    == float island (one (1, T) row in VMEM) ==
+      logits_j = s_j * score_scale + mask      staged into VMEM rows
+    == float island (one (S, T) block in VMEM) ==
       probs    = softmax(logits)               max / exp / sum / divide
       qp       = round(127 * probs)            int8 image, eps_p = 1/127
     == island exit ==
       per page j:  acc += qp_j . v_page_i8     int32 accumulator
     out_i32 = acc                              (ctx_rqt applied outside)
 
-Decode has a single query row, so the full probability row fits in one
-VMEM scratch vector and the kernel can afford the model's *global*
+The full (S, T) probability block fits in VMEM scratch (S is a small
+chunk width), so the kernel can afford the model's *global*
 probability image instead of flash-attention's per-block online
-re-quantization (`kernels/quant_attention.py`).  That choice is what
-makes the kernel BIT-EXACT with the write-then-gather jnp path — and
-therefore with the contiguous SlotArena decode — rather than
-approximately close: every cross-element reduction is an integer dot,
-an order-free max, or the same-shaped (1, T) float sum XLA emits for
-the unfused softmax (per-page partial sums would NOT reproduce it; the
-logits row is staged so one full-row sum runs).  Engine tests pin
+re-quantization (`kernels/quant_attention.py`) — no per-page requant,
+ever.  That choice is what makes the kernel BIT-EXACT with the
+write-then-gather jnp path — and therefore with the contiguous
+SlotArena path — rather than approximately close: every cross-element
+reduction is an integer dot, an order-free max, or the same
+per-row (., T) float sum XLA emits for the unfused softmax (per-page
+partial sums would NOT reproduce it; the logits rows are staged so
+one full-row sum runs per query row).  Engine tests pin
 kernel == gather == SlotArena token-for-token on that basis.
 
 Masking contract (serving.cache.PagedArena layout):
 
-  * positions past `pos[b]` take the same -1e9 additive mask as
-    `layers/attention._mask` — stale pages of a recycled slot and the
-    padded tail of the last partial page surface nothing;
+  * query row s sits at logical position `pos[b] + s` (pos is the
+    position of the FIRST query row; for decode S = 1 it is the
+    familiar per-slot decode position).  Key positions past that take
+    the same -1e9 additive causal mask as `layers/attention._mask` —
+    stale pages of a recycled slot, the padded tail of the last
+    partial page, and the not-yet-written suffix of a mid-prefill
+    chunk surface nothing;
   * PAGE_NULL table entries point at physical page 0 (the trash page)
     and only ever cover fully-masked logical blocks of live rows;
   * rows parked at INACTIVE_POS keep every position (their tables are
@@ -48,7 +58,7 @@ GQA is folded into the page loads (kv head = h // group) — no
 head-expanded K/V copy exists anywhere.  `score_scale` may be a traced
 scalar (layer-stacked tables under lax.scan).
 
-`kernels/ref.py::paged_attention_decode_ref` is the pure-jnp mirror of
+`kernels/ref.py::paged_attention_ref` is the pure-jnp mirror of
 exactly this algorithm; tests pin kernel == mirror at tolerance 0.
 
 Memory scope: the pool in_specs cover the whole (n_pages + 1, K, ps,
@@ -85,11 +95,12 @@ def _kernel(
     ps: int,
     pps: int,
     group: int,
+    s_q: int,
 ):
     """One (slot b, head h) grid step; logits staged in VMEM scratch."""
     h = pl.program_id(1)
     kh = h // group
-    q = q_ref[0]  # (1, hd) int8
+    q = q_ref[0, 0]  # (S, hd) int8
     tab = table_ref[0]  # (pps,) int32
     pos_b = pos_ref[0]
     scale = scale_ref[0, 0]
@@ -105,35 +116,37 @@ def _kernel(
         s = jax.lax.dot_general(
             q, page_kv(k_ref, j), (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.int32,
-        )  # (1, ps)
+        )  # (S, ps)
         lg = s.astype(jnp.float32) * scale
-        k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
-        lg = lg + jnp.where(k_pos <= pos_b, 0.0, NEG_INF)
-        pl.store(logits_ref, (pl.ds(0, 1), pl.ds(j * ps, ps)), lg)
+        # query row s sits at position pos_b + s; causal mask per row
+        q_pos = pos_b + jax.lax.broadcasted_iota(jnp.int32, (s_q, ps), 0)
+        k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (s_q, ps), 1)
+        lg = lg + jnp.where(k_pos <= q_pos, 0.0, NEG_INF)
+        pl.store(logits_ref, (pl.ds(0, s_q), pl.ds(j * ps, ps)), lg)
         return carry
 
     jax.lax.fori_loop(0, pps, score_body, 0)
 
     # ---- float island: the model's global probability image ----
-    row = logits_ref[...]  # (1, T)
-    m = jnp.max(row, axis=-1, keepdims=True)
-    p = jnp.exp(row - m)
+    rows = logits_ref[...]  # (S, T)
+    m = jnp.max(rows, axis=-1, keepdims=True)
+    p = jnp.exp(rows - m)
     probs = p / jnp.sum(p, axis=-1, keepdims=True)
     qp = jnp.round(probs * 127.0).astype(jnp.int8)  # island exit
     # ---- island exit: integer P.V over pages ----
 
     def pv_body(j, acc):
-        qp_j = jax.lax.dynamic_slice(qp, (0, j * ps), (1, ps))
+        qp_j = jax.lax.dynamic_slice(qp, (0, j * ps), (s_q, ps))
         return acc + jax.lax.dot_general(
             qp_j, page_kv(v_ref, j), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32,
         )
 
-    acc0 = jnp.zeros((1, q_ref.shape[-1]), jnp.int32)
-    o_ref[0] = jax.lax.fori_loop(0, pps, pv_body, acc0)
+    acc0 = jnp.zeros((s_q, q_ref.shape[-1]), jnp.int32)
+    o_ref[0, 0] = jax.lax.fori_loop(0, pps, pv_body, acc0)
 
 
-def paged_attention_decode_pallas(
+def paged_attention_pallas(
     q,
     k_pool,
     v_pool,
@@ -144,32 +157,34 @@ def paged_attention_decode_pallas(
     group: int = 1,
     interpret: bool = True,
 ):
-    """q (B, H, hd) int8; k/v pools (n_pages + 1, K, ps, hd) int8;
-    table (B, pps) int32 physical page ids; pos (B,) int32 decode
-    positions (INACTIVE_POS for parked rows).  -> (B, H, hd) int32
-    P.V accumulator in eps_p * eps_v units (the caller owns the
-    `ctx_rqt` requantization, like every Linear in this codebase).
+    """q (B, H, S, hd) int8 — S query rows per slot, row s at logical
+    position pos[b] + s; k/v pools (n_pages + 1, K, ps, hd) int8;
+    table (B, pps) int32 physical page ids; pos (B,) int32 position of
+    the FIRST query row (INACTIVE_POS for parked rows).
+    -> (B, H, S, hd) int32 P.V accumulator in eps_p * eps_v units (the
+    caller owns the `ctx_rqt` requantization, like every Linear in
+    this codebase).
     """
-    B, H, hd = q.shape
+    B, H, S, hd = q.shape
     n_pool, K, ps, _ = k_pool.shape
     pps = table.shape[1]
     assert H == K * group, (H, K, group)
     scale = jnp.asarray(score_scale, jnp.float32).reshape(1, 1)
-    kern = functools.partial(_kernel, ps=ps, pps=pps, group=group)
+    kern = functools.partial(_kernel, ps=ps, pps=pps, group=group, s_q=S)
     call = pl.pallas_call(
         kern,
-        out_shape=jax.ShapeDtypeStruct((B, H, hd), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), jnp.int32),
         grid=(B, H),
         in_specs=[
-            pl.BlockSpec((1, 1, hd), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, S, hd), lambda b, h: (b, h, 0, 0)),
             pl.BlockSpec((n_pool, K, ps, hd), lambda b, h: (0, 0, 0, 0)),
             pl.BlockSpec((n_pool, K, ps, hd), lambda b, h: (0, 0, 0, 0)),
             pl.BlockSpec((1, pps), lambda b, h: (b, 0)),
             pl.BlockSpec((1,), lambda b, h: (b,)),
             pl.BlockSpec((1, 1), lambda b, h: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h: (b, h, 0)),
-        scratch_shapes=[pltpu.VMEM((1, pps * ps), jnp.float32)],
+        out_specs=pl.BlockSpec((1, 1, S, hd), lambda b, h: (b, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((S, pps * ps), jnp.float32)],
         interpret=interpret,
     )
     return call(
@@ -178,7 +193,7 @@ def paged_attention_decode_pallas(
     )
 
 
-def paged_attention_decode(
+def paged_attention(
     q,
     k_pool,
     v_pool,
@@ -190,8 +205,8 @@ def paged_attention_decode(
     mesh=None,
     interpret: bool = True,
 ):
-    """Mesh-aware dispatch for the fused paged decode (same contract as
-    `paged_attention_decode_pallas`, plus an optional serving mesh).
+    """Mesh-aware dispatch for the fused paged attention (same contract
+    as `paged_attention_pallas`, plus an optional serving mesh).
 
     With a mesh whose "model" axis divides the kv-head count, the
     kernel runs under shard_map with a per-shard head range: the pools
@@ -214,7 +229,7 @@ def paged_attention_decode(
     n = dict(mesh.shape).get("model", 1) if mesh is not None else 1
     K = k_pool.shape[1]
     if n <= 1 or K % n:
-        return paged_attention_decode_pallas(
+        return paged_attention_pallas(
             q, k_pool, v_pool, table, pos,
             score_scale=score_scale, group=group, interpret=interpret,
         )
@@ -222,7 +237,7 @@ def paged_attention_decode(
     from jax.sharding import PartitionSpec as P
 
     def local(q_, k_, v_, tab_, pos_, scale_):
-        return paged_attention_decode_pallas(
+        return paged_attention_pallas(
             q_, k_, v_, tab_, pos_,
             score_scale=scale_, group=group, interpret=interpret,
         )
@@ -231,17 +246,60 @@ def paged_attention_decode(
         local,
         mesh=mesh,
         in_specs=(
-            P(None, "model", None),
+            P(None, "model", None, None),
             P(None, "model", None, None),
             P(None, "model", None, None),
             P(),
             P(),
             P(),
         ),
-        out_specs=P(None, "model", None),
+        out_specs=P(None, "model", None, None),
         check_rep=False,
     )
     return sharded(
         q, k_pool, v_pool, table.astype(jnp.int32), pos.astype(jnp.int32),
         jnp.asarray(score_scale, jnp.float32),
     )
+
+
+def paged_attention_decode_pallas(
+    q,
+    k_pool,
+    v_pool,
+    table,
+    pos,
+    *,
+    score_scale,
+    group: int = 1,
+    interpret: bool = True,
+):
+    """Single-token wrapper: q (B, H, hd) int8 -> (B, H, hd) int32.
+    The S = 1 case of `paged_attention_pallas` (pos is the decode
+    position of the one query row)."""
+    out = paged_attention_pallas(
+        q[:, :, None, :], k_pool, v_pool, table, pos,
+        score_scale=score_scale, group=group, interpret=interpret,
+    )
+    return out[:, :, 0, :]
+
+
+def paged_attention_decode(
+    q,
+    k_pool,
+    v_pool,
+    table,
+    pos,
+    *,
+    score_scale,
+    group: int = 1,
+    mesh=None,
+    interpret: bool = True,
+):
+    """Single-token wrapper over the mesh-aware `paged_attention`:
+    q (B, H, hd) int8 -> (B, H, hd) int32."""
+    out = paged_attention(
+        q[:, :, None, :], k_pool, v_pool, table, pos,
+        score_scale=score_scale, group=group, mesh=mesh,
+        interpret=interpret,
+    )
+    return out[:, :, 0, :]

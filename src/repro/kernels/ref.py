@@ -92,28 +92,30 @@ def quant_flash_attention_ref(
     return jnp.stack(rows, axis=0)
 
 
-def paged_attention_decode_ref(
+def paged_attention_ref(
     q, k_pool, v_pool, table, pos, *, score_scale, group: int = 1
 ):
-    """Mirror of paged_attention.paged_attention_decode_pallas: the
-    model's unfused single-query ID attention walked page by page
-    through the table — per-page integer score dots staged into one
-    (1, T) logits row, ONE global softmax + int8 probability image
-    (eps_p = 1/127), per-page integer P.V accumulation.  The float
-    island runs on the same-shaped (1, T) row as the kernel, so the
-    mirror is bit-exact against it (tolerance 0 in tests).
+    """Mirror of paged_attention.paged_attention_pallas: the model's
+    unfused multi-query ID attention walked page by page through the
+    table — per-page integer score dots staged into one (S, T) logits
+    block (query row s causally masked at position pos[b] + s), ONE
+    global softmax + int8 probability image per row (eps_p = 1/127),
+    per-page integer P.V accumulation.  The float island runs on the
+    same-shaped per-row sums as the kernel, so the mirror is bit-exact
+    against it (tolerance 0 in tests).
 
-    q (B, H, hd) int8; pools (n_pages + 1, K, ps, hd) int8;
-    table (B, pps) int32; pos (B,) int32. -> (B, H, hd) int32
-    accumulator (eps_p * eps_v units; ctx_rqt applied by the caller).
+    q (B, H, S, hd) int8; pools (n_pages + 1, K, ps, hd) int8;
+    table (B, pps) int32; pos (B,) int32 position of query row 0.
+    -> (B, H, S, hd) int32 accumulator (eps_p * eps_v units; ctx_rqt
+    applied by the caller).
     """
-    B, H, hd = q.shape
+    B, H, S, hd = q.shape
     _, K, ps, _ = k_pool.shape
     pps = table.shape[1]
     assert H == K * group, (H, K, group)
 
     def one(b, h):
-        qr = q[b, h][None]                             # (1, hd) int8
+        qr = q[b, h]                                   # (S, hd) int8
         blocks = []
         for j in range(pps):
             page = table[b, j]
@@ -122,14 +124,15 @@ def paged_attention_decode_ref(
                 qr, k_page, (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.int32)
             lg = s.astype(jnp.float32) * jnp.float32(score_scale)
+            q_pos = pos[b] + jnp.arange(S)[:, None]
             k_pos = j * ps + jnp.arange(ps)[None, :]
-            blocks.append(lg + jnp.where(k_pos <= pos[b], 0.0, NEG_INF))
-        row = jnp.concatenate(blocks, axis=1)          # (1, T)
-        m = jnp.max(row, axis=-1, keepdims=True)
-        p = jnp.exp(row - m)
+            blocks.append(lg + jnp.where(k_pos <= q_pos, 0.0, NEG_INF))
+        rows = jnp.concatenate(blocks, axis=1)         # (S, T)
+        m = jnp.max(rows, axis=-1, keepdims=True)
+        p = jnp.exp(rows - m)
         probs = p / jnp.sum(p, axis=-1, keepdims=True)
         qp = jnp.round(probs * 127.0).astype(jnp.int8)
-        acc = jnp.zeros((1, hd), jnp.int32)
+        acc = jnp.zeros((S, hd), jnp.int32)
         for j in range(pps):
             page = table[b, j]
             v_page = v_pool[page, h // group]
@@ -137,11 +140,22 @@ def paged_attention_decode_ref(
                 qp[:, j * ps:(j + 1) * ps], v_page,
                 (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.int32)
-        return acc[0]
+        return acc
 
     return jnp.stack(
         [jnp.stack([one(b, h) for h in range(H)]) for b in range(B)]
     )
+
+
+def paged_attention_decode_ref(
+    q, k_pool, v_pool, table, pos, *, score_scale, group: int = 1
+):
+    """Single-query (S = 1) wrapper of `paged_attention_ref`:
+    q (B, H, hd) int8 -> (B, H, hd) int32."""
+    out = paged_attention_ref(
+        q[:, :, None, :], k_pool, v_pool, table, pos,
+        score_scale=score_scale, group=group)
+    return out[:, :, 0, :]
 
 
 def attention_unfused_ref(

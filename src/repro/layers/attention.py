@@ -42,16 +42,17 @@ chunk completed.
 
 Paged KV (serving.cache.PagedArena): a decode cache dict may carry a
 per-slot page "table" (B, pages_per_slot) next to its pooled "k"/"v"
-leaves (n_pages + 1, K, page_size, hd).  The new column is scattered
-into the page holding each row's `pos`; single-token ID decode then
-runs the fused paged-attention kernel straight over the pools
+leaves (n_pages + 1, K, page_size, hd).  The new column(s) are
+scattered into the pages holding each row's `pos`; ID attention —
+single-token decode AND multi-token chunked-prefill — then runs the
+fused paged-attention kernel straight over the pools
 (kernels/paged_attention.py — bit-exact with the unfused math, see
 its module doc) unless `variants paged_decode="gather"` selects the
 oracle path, which gathers the logical (B, K, T, hd) view back
-through the table.  Multi-token chunked prefill always gathers.
-Positions past `pos` (stale pages, the PAGE_NULL trash page) are
-hidden by the same per-slot causal masking either way, so paged
-decode is bit-exact with the contiguous path.
+through the table.  Positions past each query row's position (stale
+pages, the PAGE_NULL trash page, the unwritten suffix of a chunk)
+are hidden by the same per-slot causal masking either way, so the
+paged path is bit-exact with the contiguous one.
 
 Multi-device serving (DESIGN.md §Serving ¶Multi-device): under a mesh
 profile the serving engine shards the cache arena along kv heads on
@@ -282,14 +283,14 @@ class QAttention:
             if "table" in cache:
                 from repro.launch import variants
 
-                if (S == 1
-                        and variants.get("paged_decode") == "kernel"
+                if (variants.get("paged_decode") == "kernel"
                         and variants.get("attn_softmax") != "int"):
-                    # fused paged decode: no dense logical KV view —
+                    # fused paged attention (S == 1 decode, S > 1
+                    # chunked prefill): no dense logical KV view —
                     # the kernel streams K/V page by page through the
                     # table (the gather path below stays available as
                     # the parity oracle via paged_decode="gather")
-                    return self._paged_kernel_decode(
+                    return self._paged_kernel_attend(
                         t, q, k, v, cache, pos, subs
                     )
                 k_all, v_all, cache = _paged_cache_update(cache, k, v, pos)
@@ -402,30 +403,33 @@ class QAttention:
         acc_int = jnp.round(ctx * 127.0).astype(jnp.int32)
         return apply_rqt(acc_int, t["ctx_rqt"])
 
-    def _paged_kernel_decode(self, t, q, k, v, cache, pos, subs):
-        """Fused single-token paged ID decode: scatter the new column
-        through the page table, then run attention straight over the
-        page pools (kernels/paged_attention.py) — the dense logical
-        (B, K, T, hd) view is never materialized.  The kernel returns
-        the int32 P.V accumulator and the ctx requantization stays out
-        here, so the math is bit-exact with the gather path.  Under a
-        serving mesh profile the kernel runs with a per-shard head
-        range (shard_map over the "model" axis — see
-        paged_attention_decode); the math per (slot, head) is
-        unchanged, so sharding keeps bit-exactness.  q/k/v:
-        (B, ., 1, hd) int8 post-RoPE.  Returns (int32 wo-acc, cache)."""
-        from repro.kernels.paged_attention import paged_attention_decode
+    def _paged_kernel_attend(self, t, q, k, v, cache, pos, subs):
+        """Fused paged ID attention (decode and chunked prefill):
+        scatter the new column(s) through the page table, then run
+        attention straight over the page pools
+        (kernels/paged_attention.py) — the dense logical (B, K, T, hd)
+        view is never materialized.  Query row s of slot b sits at
+        position pos[b] + s (the kernel masks causally per row).  The
+        kernel returns the int32 P.V accumulator and the ctx
+        requantization stays out here, so the math is bit-exact with
+        the gather path.  Under a serving mesh profile the kernel runs
+        with a per-shard head range (shard_map over the "model" axis —
+        see paged_attention); the math per (slot, head) is unchanged,
+        so sharding keeps bit-exactness.  q/k/v: (B, ., S, hd) int8
+        post-RoPE.  Returns (int32 wo-acc, cache)."""
+        from repro.kernels.paged_attention import paged_attention
         from repro.sharding.hints import profile_mesh
 
         pos_v, cache = _paged_write(cache, k, v, pos)
         cache = _hint_kv_cache(cache)
-        acc = paged_attention_decode(
-            q[:, :, 0, :], cache["k"], cache["v"], cache["table"], pos_v,
+        acc = paged_attention(
+            q, cache["k"], cache["v"], cache["table"], pos_v,
             score_scale=t["score_scale"], group=self.group,
             mesh=profile_mesh())
-        s_ctx = apply_rqt(acc[:, :, None, :], t["ctx_rqt"])
-        B = q.shape[0]
-        s_ctx = s_ctx.reshape(B, 1, self.n_heads * self.head_dim)
+        s_ctx = apply_rqt(acc, t["ctx_rqt"])
+        B, _, S, _ = q.shape
+        s_ctx = s_ctx.transpose(0, 2, 1, 3)
+        s_ctx = s_ctx.reshape(B, S, self.n_heads * self.head_dim)
         return subs["wo"].apply_id(t["wo"], s_ctx), cache
 
     # ------------------------------------------------------------------

@@ -2,8 +2,11 @@
 
 Two arena strategies share one engine-facing protocol (``can_admit`` /
 ``alloc`` / ``touch`` / ``touch_range`` / ``write_slot`` /
-``decode_view`` / ``absorb`` / ``prefill_view`` / ``absorb_rows`` /
-``release``):
+``decode_view`` / ``absorb`` / ``release``).  ``decode_view`` /
+``absorb`` bracket EVERY device dispatch of the chunked engine — the
+unified step fuses decode rows and prefill chunks into one call over
+all slot rows (DESIGN.md §Serving ¶Unified attention kernel), so
+there is no separate compact prefill view to maintain:
 
 ``SlotArena`` — one fixed-shape cache pytree (`n_slots` batch rows x
 `max_len` positions) allocated ONCE at engine construction and never
@@ -244,9 +247,10 @@ class Arena(Protocol):
     Lifecycle: `can_admit` -> `alloc` (lease + commit worst case) ->
     `touch`/`touch_range` (materialize on demand) -> `release` (or
     `release_pages` + `release`, the preemption reclaim half).
-    Dispatch plumbing: `decode_view`/`absorb` for the fused decode,
-    `prefill_view`/`absorb_rows` for the packed chunk dispatch,
-    `write_slot` for the one-shot prefill scatter.
+    Dispatch plumbing: `decode_view`/`absorb` bracket every dispatch —
+    the fused decode of the non-chunked oracle modes and the unified
+    prefill+decode step of the chunked default alike — plus
+    `write_slot` for the one-shot whole-prompt prefill scatter.
     """
 
     n_slots: int
@@ -326,15 +330,9 @@ class Arena(Protocol):
 
     def absorb(self, new_caches): ...
 
-    def prefill_view(self, slots): ...
-
-    def absorb_rows(self, slots, row_caches): ...
-
     def cache_shardings(self): ...
 
     def decode_shardings(self): ...
-
-    def prefill_shardings(self): ...
 
     # -- observability --
     def reject_reason(self, prompt_len: int, total_len: int) -> str: ...
@@ -414,31 +412,6 @@ class SlotArena:
 
         self._scatter = jax.jit(
             _scatter, **_out_shardings(self.cache_shardings())
-        )
-
-        # chunked prefill: gather a compact row subset for the packed
-        # dispatch, scatter the written rows back.  Slot indices are
-        # traced, so each compiles once per subset SIZE (the engine
-        # buckets sizes to powers of two).
-        def _gather_rows(arena_leaves, idx):
-            return [
-                jnp.take(x, idx, axis=ax)
-                for x, ax in zip(arena_leaves, self._batch_axes)
-            ]
-
-        def _scatter_rows(arena_leaves, row_leaves, idx):
-            return [
-                x.at[(slice(None),) * ax + (idx,)].set(y.astype(x.dtype))
-                for x, y, ax in zip(
-                    arena_leaves, row_leaves, self._batch_axes
-                )
-            ]
-
-        self._gather_rows = jax.jit(
-            _gather_rows, **_out_shardings(self._shardings)
-        )
-        self._scatter_rows = jax.jit(
-            _scatter_rows, **_out_shardings(self._shardings)
         )
 
         # slot bookkeeping (host-side)
@@ -534,13 +507,8 @@ class SlotArena:
         return jax.tree.unflatten(self._treedef, self._shardings)
 
     def decode_shardings(self):
-        """Shardings of decode_view() — the arena tree itself."""
-        return self.cache_shardings()
-
-    def prefill_shardings(self):
-        """Shardings of prefill_view(slots): the row gather keeps every
-        axis and the batch axis is never sharded, so the arena leaf
-        specs apply verbatim at any row count."""
+        """Shardings of decode_view() — the arena tree itself (the
+        unified dispatch reuses it: same tree, same specs)."""
         return self.cache_shardings()
 
     # -- cache plumbing -------------------------------------------------
@@ -565,28 +533,6 @@ class SlotArena:
     def absorb(self, new_caches):
         """Store the cache pytree returned by the decode step."""
         self.caches = new_caches
-
-    def prefill_view(self, slots):
-        """Compact cache view for a packed chunked-prefill dispatch:
-        only the participating slots' batch rows (gathered), so rows
-        that are decoding or free cost the dispatch nothing."""
-        idx = jnp.asarray(slots, jnp.int32)
-        leaves = self._gather_rows(jax.tree.leaves(self.caches), idx)
-        return jax.tree.unflatten(self._treedef, leaves)
-
-    def absorb_rows(self, slots, row_caches):
-        """Scatter a prefill_view's (written) rows back into the arena.
-        `slots` must be duplicate-free; pad rows (parked at
-        INACTIVE_POS, so every write masked off) round-trip unchanged,
-        which keeps the scatter safe even when a pad row borrowed a
-        live slot."""
-        idx = jnp.asarray(slots, jnp.int32)
-        out = self._scatter_rows(
-            jax.tree.leaves(self.caches),
-            jax.tree.leaves(row_caches),
-            idx,
-        )
-        self.caches = jax.tree.unflatten(self._treedef, out)
 
     def advance(self, slot: int, n: int = 1):
         self.lengths[slot] += n
@@ -1260,11 +1206,6 @@ class PagedArena:
         repl = NamedSharding(self.mesh, P())
         return map_kv_dicts(tree, lambda d: {**d, "table": repl})
 
-    def prefill_shardings(self):
-        """Shardings of prefill_view(slots): same pools, same injected
-        tables — identical to the decode view at any row count."""
-        return self.decode_shardings()
-
     # -- cache plumbing -------------------------------------------------
     def write_slot(self, slot: int, single_caches):
         """Scatter a B=1 cache pytree (a finished prefill) through the
@@ -1305,30 +1246,6 @@ class PagedArena:
             new_caches,
             lambda d: {k: v for k, v in d.items() if k != "table"},
         )
-
-    def prefill_view(self, slots):
-        """Compact view for a packed chunked-prefill dispatch: the full
-        page pools with only the participating slots' page-table rows
-        attached.  Pages are global, so the dispatch's writes land in
-        the right pages with no row gather/scatter at all — paging
-        makes the compact prefill view free."""
-        if any(s is None for s in self._seq_axes):
-            raise NotImplementedError(
-                "chunked prefill over per-slot (recurrent) cache state"
-            )  # unreachable: the engine chunks the dense family only
-        tab = jnp.asarray(self.page_table[np.asarray(slots)])
-        axes = iter(self._kv_batch_axes)
-
-        def _attach(d):
-            lead = d["k"].shape[: next(axes)]
-            return {**d, "table": jnp.broadcast_to(tab, lead + tab.shape)}
-
-        return map_kv_dicts(self.caches, _attach)
-
-    def absorb_rows(self, slots, row_caches):
-        """Store the pools a chunk dispatch wrote through the page
-        tables (global pages: nothing per-row to scatter back)."""
-        self.absorb(row_caches)
 
     def advance(self, slot: int, n: int = 1):
         self.lengths[slot] += n

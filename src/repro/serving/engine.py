@@ -24,24 +24,25 @@ eviction, or decode decision of its own:
                            bit-exactness)
                         2. admit the planned requests (lease a slot,
                            commit the page budget)
-                        3. one packed chunked-prefill dispatch over
-                           the planned (req_id, n) rows, written
-                           straight into the arena at per-slot offsets
-                           through a COMPACT row view (power-of-two
-                           row bucket; compile-cache keyed on
-                           (rows, chunk)); rows whose final chunk
-                           completed take their first token from that
-                           dispatch's per-row last-index logits
-                        4. if the plan says so, one FUSED decode step
-                           over the whole arena with a per-slot
-                           position vector; per-slot done-masking is
-                           host-side (finished slots are released and
-                           their rows become don't-cares); paged
-                           arenas decode through the fused
-                           paged-attention kernel by default
+                        3. ONE unified dispatch over every arena row
+                           (DESIGN.md §Serving ¶Unified attention
+                           kernel): decode rows carry their last
+                           token at width 1 of the row, prefill rows
+                           carry the next chunk of C tokens at their
+                           per-slot offsets, free rows park at
+                           INACTIVE_POS.  Every row takes its next
+                           token from the dispatch's per-row
+                           last-index logits — graduation and decode
+                           are the same argmax.  Paged arenas run the
+                           fused paged-attention kernel by default
                            (paged_kernel=False keeps the
-                           write-then-gather oracle)
+                           write-then-gather oracle for the whole
+                           step)
   run_until_drained() step until queue + prefills + slots are empty
+
+Non-chunked modes (bucketed/exact, below) keep the separate
+whole-prompt prefill + fused decode dispatches — they are the parity
+oracles for the chunked path, not hot paths.
 
 The prefill dispatch decision is made in ONE place (_prefill_mode):
 "chunked" (dense family, prefill_chunk > 0 — the default), "bucketed"
@@ -68,17 +69,18 @@ path's accumulations are associative and the softmax island is
 per-(row, head), so partitioning cannot reorder anything observable.
 
 Async dispatch (`dispatch_depth=1`, the `DispatchQueue`): the engine
-runs a one-step-deep pipeline — while step t's fused decode executes
-on the device, the host already runs step t+1's admission,
-`plan_chunks` packing, and chunk-dispatch enqueue, and only blocks
-(`np.asarray` on a (B,)-token array, the only forced sync) at token
-harvest.  The pipeline is bounded at ONE in-flight step by the
-autoregressive feedback: decode t+1's input tokens are decode t's
-argmax.  Depth 1 produces token-for-token the same output as the
-synchronous engine for row-independent families (each request's greedy
-chain depends only on its own slot), which the parity tests pin;
-request *timing* may shift by a step (admission sees slot releases one
-harvest later).
+runs a one-step-deep pipeline — while step t's unified dispatch
+executes on the device, the host already runs step t+1's planning,
+preemption, and admission, and only blocks (`np.asarray` on a
+(B,)-token array, the only forced sync) at token harvest.  Chunk
+materialization and the next dispatch follow the harvest: the decode
+rows of dispatch t+1 need dispatch t's argmax, and chunk cursors
+advance at harvest — the autoregressive feedback that bounds the
+pipeline at ONE in-flight step.  Depth 1 produces token-for-token the
+same output as the synchronous engine for row-independent families
+(each request's greedy chain depends only on its own slot), which the
+parity tests pin; request *timing* may shift by a step (admission
+sees slot releases one harvest later).
 
 Decode rows of free slots compute garbage that is never read; for pure
 dense/ssm/hybrid families rows are independent so active slots are
@@ -90,8 +92,8 @@ the one-step admission shift).
 Telemetry (`telemetry=`, DESIGN.md §Observability): the engine threads
 an off-by-default, bit-neutral observability sink through every
 lifecycle transition (typed trace events), every step phase (spans:
-admission / plan_chunks / chunk_dispatch / chunk_harvest /
-decode_dispatch / harvest), and every jitted dispatch (compile-cache
+admission / plan_chunks / unified_dispatch / decode_dispatch /
+harvest), and every jitted dispatch (compile-cache
 hit/miss accounting + optional jax.profiler.TraceAnnotation).  All
 hooks read host state only — no device values, no extra dispatches —
 so enabling telemetry cannot change a single token (pinned by
@@ -147,35 +149,38 @@ from repro.serving.telemetry import NULL as NULL_TELEMETRY
 
 @dataclasses.dataclass
 class _InFlightDecode:
-    """One dispatched-but-unharvested fused decode step."""
+    """One dispatched-but-unharvested fused decode step (the
+    non-chunked modes' decode dispatch)."""
 
     tokens: Any  # device (n_slots,) int32 — the step's argmax
     slots: List[int]  # active slots at dispatch time
 
 
 @dataclasses.dataclass
-class _InFlightChunk:
-    """One dispatched-but-unharvested chunked-prefill step."""
+class _InFlightStep:
+    """One dispatched-but-unharvested UNIFIED step (chunked mode):
+    decode rows and prefill-chunk rows of the same dispatch."""
 
-    tokens: Any  # device (rows,) int32 — per-row last-index argmax
-    plan: List  # the (PrefillState, offset, n) triples dispatched
+    tokens: Any  # device (n_slots,) int32 — per-row last-index argmax
+    chunk_plan: List  # the (PrefillState, offset, n) triples dispatched
+    decode_slots: List[int]  # active slots decoded by this dispatch
 
 
 class DispatchQueue:
-    """Host/device pipeline for the engine's fused decode dispatches
+    """Host/device pipeline for the engine's fused step dispatches
     (DESIGN.md §Serving ¶Multi-device).
 
     depth 0 — synchronous: every dispatch is harvested in the same
     engine step (the pre-queue behavior, kept as the token-parity
     oracle for depth 1).
 
-    depth 1 — double-buffered: the engine leaves one decode in flight
-    and overlaps the NEXT step's host work (admission, chunk packing,
-    chunk-dispatch enqueue) with it, harvesting only when the next
-    decode needs the tokens.  Deeper pipelines are rejected: decode
-    t+1's input IS decode t's argmax, so a second in-flight decode
-    would have to speculate tokens — out of scope for a bit-exact
-    serving engine.
+    depth 1 — double-buffered: the engine leaves one step (unified, or
+    decode in the non-chunked modes) in flight and overlaps the NEXT
+    step's host work (planning, preemption, admission) with it,
+    harvesting only when the next dispatch needs the tokens.  Deeper
+    pipelines are rejected: step t+1's input IS step t's argmax, so a
+    second in-flight step would have to speculate tokens — out of
+    scope for a bit-exact serving engine.
     """
 
     def __init__(self, depth: int = 0):
@@ -183,21 +188,21 @@ class DispatchQueue:
             raise ValueError(
                 "dispatch_depth must be 0 (synchronous) or 1 (the "
                 "autoregressive token feedback bounds the pipeline at "
-                f"one in-flight decode), got {depth}"
+                f"one in-flight step), got {depth}"
             )
         self.depth = depth
-        self._inflight: Deque[_InFlightDecode] = collections.deque()
+        self._inflight: Deque[Any] = collections.deque()
 
     @property
     def pending(self) -> int:
         return len(self._inflight)
 
-    def push(self, rec: _InFlightDecode):
+    def push(self, rec):
         if len(self._inflight) >= max(self.depth, 1):
             raise RuntimeError("dispatch queue overfilled")
         self._inflight.append(rec)
 
-    def drain(self, harvest: Callable[[_InFlightDecode], None]):
+    def drain(self, harvest: Callable[[Any], None]):
         """Harvest every in-flight record (oldest first)."""
         while self._inflight:
             harvest(self._inflight.popleft())
@@ -283,12 +288,13 @@ class ServingEngine:
         self._resume: Dict[int, ResumeState] = {}
         self._next_id = 0
 
-        # paged decode path: the fused paged-attention kernel by
+        # paged attention path: the fused paged-attention kernel by
         # default (kernels/paged_attention.py — K/V stream page by page
         # through the table, no dense logical gather), or the
         # write-then-gather jnp oracle when paged_kernel=False.  The
-        # variant is pinned at trace time, so the single decode
-        # compilation bakes the chosen path in.
+        # variant is pinned at trace time, so each compiled dispatch
+        # bakes the chosen path in — for BOTH the decode and the
+        # unified (S-wide) dispatch.
         self.paged_kernel = cfg.paged if cfg.paged_kernel is None else (
             bool(cfg.paged_kernel) and cfg.paged
         )
@@ -307,18 +313,29 @@ class ServingEngine:
             caches = lm.init_caches(1, cfg.max_len, Rep.ID)
             return lm.prefill(t, prompt, caches, last_index=last_index)
 
-        def _prefill_chunk_step(t, toks, view, start, last):
-            logits, rows = lm.prefill_chunk(t, toks, view, start, last)
-            return jnp.argmax(logits[:, 0, :], axis=-1), rows
+        def _unified_step(t, toks, caches, start, last):
+            # THE chunked-mode dispatch (DESIGN.md §Serving ¶Unified
+            # attention kernel): lm.prefill_chunk over every arena row
+            # at once — decode rows are width-1 chunks (last_index 0),
+            # so one kernel call serves the mixed prefill+decode batch.
+            from repro.launch import variants
+
+            mode = "kernel" if self.paged_kernel else "gather"
+            with variants.use_variants(paged_decode=mode):
+                logits, new_caches = lm.prefill_chunk(
+                    t, toks, caches, start, last
+                )
+            return jnp.argmax(logits[:, 0, :], axis=-1), new_caches
 
         if mesh is None:
             self._decode = jax.jit(_decode_step)
             # compiles once per prompt-shape bucket (bucket_len)
             self._prefill = jax.jit(_prefill_one)
-            # the packed chunk dispatch: compile-cache keyed on its
-            # (row-bucket, prefill_chunk) shape — at most
-            # log2(n_slots)+1 compilations regardless of raggedness
-            self._prefill_chunk = jax.jit(_prefill_chunk_step)
+            # the unified dispatch: compile-cache keyed on its
+            # (n_slots, width) shape — exactly two widths exist, the
+            # chunk width C (mixed/prefill steps) and 1 (decode-only
+            # steps), both warmed by warmup()
+            self._unified = jax.jit(_unified_step)
         else:
             # explicit in/out shardings (DESIGN.md §Serving
             # ¶Multi-device): replicated tables/tokens/positions are
@@ -327,7 +344,6 @@ class ServingEngine:
             # keeps the arena's layout fixed across steps instead of
             # drifting with GSPMD propagation
             dv_sh = self.arena.decode_shardings()
-            pv_sh = self.arena.prefill_shardings()
             self._decode = jax.jit(
                 _decode_step,
                 in_shardings=(repl, repl, dv_sh, repl),
@@ -338,10 +354,10 @@ class ServingEngine:
                 in_shardings=(repl, repl, repl),
                 out_shardings=(repl, repl),
             )
-            self._prefill_chunk = jax.jit(
-                _prefill_chunk_step,
-                in_shardings=(repl, repl, pv_sh, repl, repl),
-                out_shardings=(repl, pv_sh),
+            self._unified = jax.jit(
+                _unified_step,
+                in_shardings=(repl, repl, dv_sh, repl, repl),
+                out_shardings=(repl, dv_sh),
             )
         # THE prefill dispatch decision (single place; see module doc):
         #   chunked  — dense, prefill_chunk > 0: packed fixed-shape
@@ -442,53 +458,73 @@ class ServingEngine:
         device dispatch is harvested before the step returns; the
         token-parity oracle for the async path.  Telemetry spans time
         each phase (DESIGN.md §Observability ¶Span model); with the
-        Null sink each span is a shared no-op context."""
+        Null sink each span is a shared no-op context.
+
+        Chunked mode issues ONE unified dispatch per step (decode rows
+        + prefill-chunk rows in the same kernel call — DESIGN.md
+        §Serving ¶Unified attention kernel); the non-chunked modes
+        keep the separate fused decode."""
         tel = self.tel
         tel.begin_step(self._steps)
         with tel.span("admission"):
             plan = self.policy.plan(self._view())
             progressed = self._execute_preemptions(plan)
             progressed |= self._execute_admissions(plan)
-        chunk_plan = []
-        if plan.chunks:
-            with tel.span("plan_chunks"):
-                chunk_plan = self._materialize_chunks(plan)
-        if chunk_plan:
-            rec = self._dispatch_prefill_chunk(chunk_plan)
-            with tel.span("chunk_harvest"):
-                self._harvest_prefill_chunk(rec)
-            progressed = True
-        self._tick_stats()
-        if plan.decode and self.active:
-            drec = self._dispatch_decode()
-            with tel.span("harvest"):
-                self._harvest_decode(drec)
-            progressed = True
+        if self._prefill_mode == "chunked":
+            chunk_plan = []
+            if plan.chunks:
+                with tel.span("plan_chunks"):
+                    chunk_plan = self._materialize_chunks(plan)
+            do_decode = bool(plan.decode and self.active)
+            if chunk_plan or do_decode:
+                rec = self._dispatch_unified(chunk_plan, do_decode)
+                self._tick_stats()
+                with tel.span("harvest"):
+                    self._harvest_unified(rec)
+                progressed = True
+            else:
+                self._tick_stats()
+        else:
+            self._tick_stats()
+            if plan.decode and self.active:
+                drec = self._dispatch_decode()
+                with tel.span("harvest"):
+                    self._harvest_decode(drec)
+                progressed = True
         self._t_last = time.perf_counter()
         self._end_step()
         return progressed
 
     def _step_async(self) -> bool:
         """One-step-deep pipelined step (dispatch_depth=1): the host
-        work below the harvest line — planning, admission, the
-        chunk-dispatch enqueue — overlaps the decode dispatched by the
-        PREVIOUS step, which is still executing on the device.  The
-        only forced sync is the (B,)-token harvest.
+        work above the harvest line — planning, preemption, admission —
+        overlaps the step dispatched by the PREVIOUS engine step, which
+        is still executing on the device.  The only forced sync is the
+        (B,)-token harvest.  In chunked mode the harvest precedes chunk
+        materialization and the next dispatch: the unified dispatch's
+        decode rows need the in-flight argmax, and chunk cursors
+        advance at harvest (the autoregressive feedback that bounds the
+        pipeline at depth 1).
 
         Preemption is the exception: a plan that evicts slots first
-        drains the in-flight decode (the victim's token from step t is
+        drains the in-flight step (the victim's token from step t is
         real output and must be harvested into its resume record, and
         an in-flight dispatch must not write through pages about to be
         reclaimed), then executes sync-style.  FCFS never preempts, so
-        the overlap schedule below is byte-identical to the pre-policy
-        async engine on that path."""
+        the overlap schedule below is the default async path."""
         tel = self.tel
         tel.begin_step(self._steps)
         progressed = self.queue.pending > 0
-        # (1) host scheduling + prefill enqueue: overlaps the in-flight
-        # decode.  Planning therefore sees slot releases one harvest
-        # later than the sync engine — a timing shift only; per-request
-        # tokens are pinned equal by the parity tests.
+        unified = self._prefill_mode == "chunked"
+        harvester = (
+            self._harvest_unified if unified else self._harvest_decode
+        )
+        # (1) host scheduling: overlaps the in-flight dispatch.
+        # Planning therefore sees slot releases (and chunk-cursor
+        # advances) one harvest later than the sync engine — a timing
+        # shift only; per-request tokens are pinned equal by the
+        # parity tests (_materialize_chunks re-resolves the plan's
+        # rows against live offsets after the harvest below).
         with tel.span("admission"):
             plan = self.policy.plan(self._view())
             if plan.preempt and self.queue.pending:
@@ -496,31 +532,33 @@ class ServingEngine:
                 # tokens, and let finished slots release normally (the
                 # preemption executor skips slots that emptied)
                 with tel.span("harvest"):
-                    self.queue.drain(self._harvest_decode)
+                    self.queue.drain(harvester)
             progressed |= self._execute_preemptions(plan)
             progressed |= self._execute_admissions(plan)
-        chunk_plan = []
-        if plan.chunks:
-            with tel.span("plan_chunks"):
-                chunk_plan = self._materialize_chunks(plan)
-        chunk_rec = None
-        if chunk_plan:
-            chunk_rec = self._dispatch_prefill_chunk(chunk_plan)
-            progressed = True
         # (2) token harvest: the pipeline's one blocking point — under
         # depth 1 a fat `harvest` span is overlapped DEVICE time (the
-        # previous step's decode finishing), not host work
+        # previous step's dispatch finishing), not host work
         with tel.span("harvest"):
-            self.queue.drain(self._harvest_decode)
-        if chunk_rec is not None:
-            # graduation feeds this step's decode, exactly like sync
-            with tel.span("chunk_harvest"):
-                self._harvest_prefill_chunk(chunk_rec)
-        self._tick_stats()
-        # (3) dispatch this step's decode; the next step harvests it
-        if plan.decode and self.active:
-            self.queue.push(self._dispatch_decode())
-            progressed = True
+            self.queue.drain(harvester)
+        if unified:
+            chunk_plan = []
+            if plan.chunks:
+                with tel.span("plan_chunks"):
+                    chunk_plan = self._materialize_chunks(plan)
+            self._tick_stats()
+            do_decode = bool(plan.decode and self.active)
+            # (3) dispatch this step's unified step; harvested next step
+            if chunk_plan or do_decode:
+                self.queue.push(
+                    self._dispatch_unified(chunk_plan, do_decode)
+                )
+                progressed = True
+        else:
+            self._tick_stats()
+            # (3) dispatch this step's decode; the next step harvests it
+            if plan.decode and self.active:
+                self.queue.push(self._dispatch_decode())
+                progressed = True
         self._t_last = time.perf_counter()
         self._end_step()
         return progressed
@@ -944,50 +982,54 @@ class ServingEngine:
         else:
             self._start_decoding(req, slot, first, now, admit_t)
 
-    def _dispatch_prefill_chunk(
-        self, plan: List[Tuple[PrefillState, int, int]]
-    ) -> _InFlightChunk:
-        """One packed chunked-prefill dispatch: write the next chunk of
-        the planned (state, offset, n) rows into the arena at their
-        per-slot offsets — membership/order/row count were the
-        policy's call (_materialize_chunks resolved them).  Harvesting
-        (graduating rows whose final chunk completed, with the first
-        token from the dispatch's per-row last-index logits) is split
-        off so the async path can enqueue this behind an in-flight
-        decode without syncing.
+    def _dispatch_unified(
+        self,
+        chunk_plan: List[Tuple[PrefillState, int, int]],
+        do_decode: bool,
+    ) -> _InFlightStep:
+        """THE chunked-mode dispatch (DESIGN.md §Serving ¶Unified
+        attention kernel): one fused call over every arena row — row
+        index IS the slot, no compaction.  Decode rows carry their
+        last token as a width-1 chunk at their decode position
+        (last_index 0: the same per-row last-index argmax graduates
+        prefills and advances decodes); prefill rows carry the next
+        chunk of their source at their per-slot offsets (last_index
+        n - 1); everything else — free slots, decode rows when the
+        plan pauses decode, the padded tail of a final partial chunk —
+        parks at INACTIVE_POS, where writes mask to no-ops and the
+        attention output is garbage the harvest never reads.
 
-        The dispatch is COMPACT: only the participating slots' cache
-        rows ride along (arena.prefill_view), its row count bucketed to
-        a power of two so the compile cache is keyed on (row-bucket,
-        chunk) shapes — at most log2(n_slots)+1 compilations.  Bucket
-        padding rows borrow spare slots (free ones preferred); parked
-        at INACTIVE_POS they write nothing and round-trip unchanged —
-        which is why borrowing even a live slot's row is safe."""
+        The dispatch width is the chunk width C when any prefill row
+        rides along and 1 on decode-only steps, so exactly TWO compile
+        shapes exist per engine ((n_slots, C) and (n_slots, 1) — both
+        warmed by warmup()).  Decode rows under width C write C - 1
+        garbage columns past their position — each lands either in
+        the slot's own current page (overwritten by a later real write
+        before any causally visible read) or on the PAGE_NULL trash
+        page, exactly like the padded tail of a partial chunk, so the
+        garbage is unobservable (the kernel masks every position past
+        the row's query position)."""
         tel = self.tel
-        with tel.span("chunk_dispatch"):
+        with tel.span("unified_dispatch"):
+            B = self.arena.n_slots
             C = self.sched.cfg.prefill_chunk
-            n_rows = len(plan)
-            rows = 1
-            while rows < n_rows:
-                rows *= 2
-            rows = min(rows, self.arena.n_slots)
-            slots = [st.slot for st, _, _ in plan]
-            if rows > n_rows:
-                taken = set(slots)
-                pad = [
-                    s for s in range(self.arena.n_slots) if s not in taken
-                ]
-                # stable sort: genuinely free slots pad first, live ones
-                # only when nothing else is left
-                pad.sort(key=lambda s: self.arena.owner[s] is not None)
-                slots += pad[: rows - n_rows]
-            toks = np.zeros((rows, C), np.int32)
-            start = np.full((rows,), INACTIVE_POS, np.int32)  # pad rows
-            last = np.zeros((rows,), np.int32)
-            for r, (st, off, n) in enumerate(plan):
-                toks[r, :n] = st.source[off:off + n]
-                start[r] = off
-                last[r] = n - 1
+            W = C if chunk_plan else 1
+            toks = np.zeros((B, W), np.int32)
+            start = np.full((B,), INACTIVE_POS, np.int32)
+            last = np.zeros((B,), np.int32)
+            decode_slots: List[int] = []
+            if do_decode:
+                for slot, st in self.active.items():
+                    toks[slot, 0] = st.last_token
+                    start[slot] = st.pos
+                    # paged arena: allocate the page holding `pos`
+                    # before the write there (no-op for SlotArena)
+                    self.arena.touch(slot, st.pos)
+                    decode_slots.append(slot)
+            for st, off, n in chunk_plan:
+                toks[st.slot, :n] = st.source[off:off + n]
+                start[st.slot] = off
+                last[st.slot] = n - 1
                 # paged arena: allocate pages covering the chunk before
                 # the dispatch writes there (no-op for SlotArena; the
                 # padded tail of a final partial chunk lands on the
@@ -1004,28 +1046,57 @@ class ServingEngine:
                         end=off + n,
                         pages=self.arena.span_pages(st.slot, off, off + n),
                     )
-            tel.dispatch("prefill_chunk", (rows, C))
+            tel.dispatch("unified", (B, W))
             with self._dispatch_ctx(), tel.annotate(
-                "repro.serving/prefill_chunk"
+                "repro.serving/unified"
             ):
-                nxt, new_rows = self._prefill_chunk(
+                nxt, new_caches = self._unified(
                     self.tables,
                     jnp.asarray(toks),
-                    self.arena.prefill_view(slots),
+                    self.arena.decode_view(),
                     jnp.asarray(start),
                     jnp.asarray(last),
                 )
-            self.arena.absorb_rows(slots, new_rows)
-        return _InFlightChunk(tokens=nxt, plan=plan)
+            self.arena.absorb(new_caches)
+        return _InFlightStep(
+            tokens=nxt, chunk_plan=chunk_plan, decode_slots=decode_slots
+        )
 
-    def _harvest_prefill_chunk(self, rec: _InFlightChunk):
-        """Advance chunk cursors; graduate rows whose final chunk just
-        completed (their decode starts the same step, like sync).  A
-        resuming row re-enters decode instead of emitting a first
-        token (¶Preemption bit-exactness)."""
-        nxt = np.asarray(rec.tokens)
+    def _harvest_unified(self, rec: _InFlightStep):
+        """Block on the step's token vector and advance host state for
+        both row kinds.  Decode slots in `rec.decode_slots` cannot have
+        been released in between (the only release site is a harvest);
+        chunk rows advance their cursors and graduate when their final
+        chunk just completed — a graduating row's first decode rides
+        the NEXT unified dispatch.  A resuming row re-enters decode
+        instead of emitting a first token (¶Preemption
+        bit-exactness)."""
+        nxt = np.asarray(rec.tokens)  # the pipeline's blocking point
         now = time.perf_counter()
-        for r, (st, off, n) in enumerate(rec.plan):
+        for slot in rec.decode_slots:
+            st = self.active[slot]
+            tok = int(nxt[slot])
+            st.tokens.append(tok)
+            st.last_token = tok
+            st.pos += 1
+            st.emit_times.append(now)
+            self.arena.advance(slot)
+            if self._prefix_on and st.pos % self._page_size == 0:
+                # a page just filled (positions [0, pos) are written
+                # and final): publish it — see _harvest_decode
+                self.arena.register_prefix(
+                    slot,
+                    np.concatenate(
+                        [
+                            st.request.prompt,
+                            np.asarray(st.tokens, np.int32),
+                        ]
+                    ),
+                    st.pos,
+                )
+            self._emit(st.request, tok, slot)
+            self._maybe_finish(st, now)
+        for st, off, n in rec.chunk_plan:
             self.arena.advance(st.slot, n)
             if self._prefix_on:
                 # the chunk completed every position below off + n:
@@ -1038,11 +1109,12 @@ class ServingEngine:
             del self.prefilling[st.slot]  # final chunk completed
             if st.resume is not None:
                 self._resume_decoding(
-                    st.request, st.slot, int(nxt[r]), now, st.resume
+                    st.request, st.slot, int(nxt[st.slot]), now, st.resume
                 )
             else:
                 self._start_decoding(
-                    st.request, st.slot, int(nxt[r]), now, st.admit_time
+                    st.request, st.slot, int(nxt[st.slot]), now,
+                    st.admit_time,
                 )
 
     def _start_decoding(self, req: Request, slot: int, first: int,
@@ -1167,52 +1239,50 @@ class ServingEngine:
 
     # -- warmup ---------------------------------------------------------
     def warmup(self):
-        """Precompile every dispatch shape this engine can emit — the
-        fused decode and each chunked-prefill row bucket (1, 2, 4, ...,
-        n_slots) — so no compile lands inside a serving window (a
-        mid-burst compile inflates the TTFT of everything queued behind
-        it).  All warmup rows are parked at INACTIVE_POS: writes mask
-        to no-ops and results are discarded, so arena state is
-        untouched.  Requires an idle engine.  Whole-prompt prefill
-        compiles per prompt-length bucket as requests arrive and is not
-        warmed here (lengths are workload-dependent)."""
+        """Precompile every dispatch shape this engine can emit — in
+        chunked mode the TWO unified widths ((n_slots, C) for
+        mixed/prefill steps and (n_slots, 1) for decode-only steps),
+        otherwise the fused decode — so no compile lands inside a
+        serving window (a mid-burst compile inflates the TTFT of
+        everything queued behind it).  All warmup rows are parked at
+        INACTIVE_POS: writes mask to no-ops and results are discarded,
+        so arena state is untouched.  Requires an idle engine.
+        Whole-prompt prefill compiles per prompt-length bucket as
+        requests arrive and is not warmed here (lengths are
+        workload-dependent)."""
         if (self.sched.n_pending or self.prefilling or self.active
                 or self.queue.pending):
             raise RuntimeError("warmup on a non-idle engine")
         B = self.arena.n_slots
         parked = np.full((B,), INACTIVE_POS, np.int32)
-        # register warmed shapes with the telemetry compile-cache
-        # accounting: post-warmup dispatches of these shapes are HITS
-        self.tel.dispatch("decode", (B,))
-        with self._dispatch_ctx():
-            jax.block_until_ready(self._decode(
-                self.tables,
-                jnp.zeros((B, 1), jnp.int32),
-                self.arena.decode_view(),
-                jnp.asarray(parked),
-            ))
         if self._prefill_mode != "chunked":
+            # register warmed shapes with the telemetry compile-cache
+            # accounting: post-warmup dispatches of these shapes are
+            # HITS
+            self.tel.dispatch("decode", (B,))
+            with self._dispatch_ctx():
+                jax.block_until_ready(self._decode(
+                    self.tables,
+                    jnp.zeros((B, 1), jnp.int32),
+                    self.arena.decode_view(),
+                    jnp.asarray(parked),
+                ))
             return
         C = self.sched.cfg.prefill_chunk
-        rows = 1
-        while True:
-            rows = min(rows, B)
-            slots = list(range(rows))
-            self.tel.dispatch("prefill_chunk", (rows, C))
+        for W in (1, C):
+            self.tel.dispatch("unified", (B, W))
             with self._dispatch_ctx():
-                _, row_caches = self._prefill_chunk(
+                nxt, caches = self._unified(
                     self.tables,
-                    jnp.zeros((rows, C), jnp.int32),
-                    self.arena.prefill_view(slots),
-                    jnp.asarray(parked[:rows]),
-                    jnp.zeros((rows,), jnp.int32),
+                    jnp.zeros((B, W), jnp.int32),
+                    self.arena.decode_view(),
+                    jnp.asarray(parked),
+                    jnp.zeros((B,), jnp.int32),
                 )
+            jax.block_until_ready(nxt)
             # identity round-trip (every write was masked): warms the
-            # scatter-back compile for this row bucket too
-            self.arena.absorb_rows(slots, row_caches)
-            if rows >= B:
-                break
-            rows *= 2
+            # absorb path too
+            self.arena.absorb(caches)
 
     # -- statistics -----------------------------------------------------
     def reset_stats(self):

@@ -14,8 +14,8 @@ OFF by default and all **bit-neutral** by construction:
   serving run, not a sample of one.
 
   step-phase spans — a context-manager span per engine-step phase
-  (`admission`, `plan_chunks`, `chunk_dispatch`, `chunk_harvest`,
-  `decode_dispatch`, `harvest`), aggregated into one per-step record
+  (`admission`, `plan_chunks`, `unified_dispatch`, `decode_dispatch`,
+  `harvest`), aggregated into one per-step record
   together with dispatch-queue depth, compile-cache hit/miss counters,
   and the arena's instantaneous gauges (slot occupancy, pages in use /
   high water, backpressure rejections) — DESIGN.md §Observability
@@ -76,15 +76,18 @@ EVENT_FIELDS: Dict[str, frozenset] = {
 }
 
 # The engine-step phases a span may time (DESIGN.md §Observability
-# ¶Span model).  Under async dispatch (depth 1) `harvest` covers the
-# drain of the PREVIOUS step's in-flight decode — the pipeline's one
-# blocking point — so a fat `harvest` there is device time the host
-# successfully overlapped, not host work.
+# ¶Span model).  `unified_dispatch` is the chunked-mode step's single
+# fused dispatch (decode + prefill rows in one kernel call — DESIGN.md
+# §Serving ¶Unified attention kernel); `decode_dispatch` survives on
+# the non-chunked (bucketed/exact) oracle paths.  Under async dispatch
+# (depth 1) `harvest` covers the drain of the PREVIOUS step's
+# in-flight dispatch — the pipeline's one blocking point — so a fat
+# `harvest` there is device time the host successfully overlapped,
+# not host work.
 PHASES: Tuple[str, ...] = (
     "admission",
     "plan_chunks",
-    "chunk_dispatch",
-    "chunk_harvest",
+    "unified_dispatch",
     "decode_dispatch",
     "harvest",
 )

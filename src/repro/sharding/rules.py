@@ -20,7 +20,13 @@ else replicated" — GQA-aware (it is the KV-head axis that shards, so a
 mesh wider than n_kv_heads degrades to replication rather than
 splitting a head) and layout-agnostic (contiguous slot rows and paged
 pools share one rule because both keep the head axis just before the
-sequence axis).
+sequence axis).  One rule set covers every chunked-engine dispatch:
+the unified prefill+decode step (DESIGN.md §Serving ¶Unified
+attention kernel) consumes the same arena tree under the same specs,
+and inside it the paged-attention kernel's shard_map splits queries
+(B, H, S, hd) along H on "model" against pools split along K — the
+query heads of a group ride with their kv head, so per-shard S-wide
+chunk rows need no cross-shard exchange.
 """
 from __future__ import annotations
 

@@ -1,11 +1,15 @@
-"""Fused paged-attention decode kernel (ISSUE 4).
+"""Fused paged-attention kernel: decode (ISSUE 4) and the unified
+multi-token generalization (ISSUE 9).
 
-Acceptance: paged ID decode runs through kernels/paged_attention.py
-without materializing the dense logical KV view, with
+Acceptance: paged ID decode AND chunked prefill run through
+kernels/paged_attention.py without materializing the dense logical KV
+view — engine-wide, a mixed prefill+decode step on the default paged
+path performs ZERO dense gathers — with
 kernel == gather-dense oracle == SlotArena pinned token-for-token, and
 page-table edge cases (single-page requests, decode landing exactly on
 a page boundary, last partial page, recycled slots with reassigned
-table rows) pinned bit-exact against the pure-jnp mirror and the
+table rows, multi-token query rows crossing page boundaries
+mid-chunk) pinned bit-exact against the pure-jnp mirror and the
 gather-dense math.
 """
 import jax
@@ -14,7 +18,10 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.paged_attention import paged_attention_decode_pallas
+from repro.kernels.paged_attention import (
+    paged_attention_decode_pallas,
+    paged_attention_pallas,
+)
 from repro.launch import variants
 from repro.launch.serve import deploy_model, serve_batch
 from repro.layers.attention import INACTIVE_POS, PAGE_NULL, _paged_kv_view
@@ -48,28 +55,39 @@ def _rand_pools(rng, n_pages, K, ps, hd):
     return kp, vp
 
 
-def _gather_dense_acc(q, k_pool, v_pool, table, pos, *, score_scale, group):
-    """The model's write-then-gather decode math (the flagged oracle
-    path of layers/attention.apply_id): dense logical view + global
-    softmax + one global int8 probability image -> int32 P.V acc."""
+def _gather_dense_acc_st(
+    q, k_pool, v_pool, table, pos, *, score_scale, group
+):
+    """The model's write-then-gather attention math for (S, T) query
+    rows (the flagged oracle path of layers/attention.apply_id): dense
+    logical view + global causal softmax + one global int8 probability
+    image -> int32 P.V acc.  `pos` is each row's START position; query
+    row i sits at pos + i."""
     kv = _paged_kv_view(k_pool, table)
     vv = _paged_kv_view(v_pool, table)
     kh = jnp.repeat(kv, group, axis=1)
     vh = jnp.repeat(vv, group, axis=1)
     scores = jnp.einsum(
-        "bhsd,bhtd->bhst", q[:, :, None, :], kh,
-        preferred_element_type=jnp.int32,
+        "bhsd,bhtd->bhst", q, kh, preferred_element_type=jnp.int32,
     )
-    T = kh.shape[2]
-    keep = jnp.arange(T)[None, None, None, :] <= pos[:, None, None, None]
+    S, T = q.shape[2], kh.shape[2]
+    q_pos = pos[:, None, None, None] + jnp.arange(S)[None, None, :, None]
+    keep = jnp.arange(T)[None, None, None, :] <= q_pos
     mask = jnp.where(keep, 0.0, -1e9).astype(jnp.float32)
     logits = scores.astype(jnp.float32) * jnp.float32(score_scale) + mask
     probs = jax.nn.softmax(logits, axis=-1)
     s_p = jnp.round(probs * 127.0).astype(jnp.int8)
-    acc = jnp.einsum(
+    return jnp.einsum(
         "bhst,bhtd->bhsd", s_p, vh, preferred_element_type=jnp.int32
     )
-    return acc[:, :, 0, :]
+
+
+def _gather_dense_acc(q, k_pool, v_pool, table, pos, *, score_scale, group):
+    """Single-token decode view of the oracle above."""
+    return _gather_dense_acc_st(
+        q[:, :, None, :], k_pool, v_pool, table, pos,
+        score_scale=score_scale, group=group,
+    )[:, :, 0, :]
 
 
 # ---------------------------------------------------------------------
@@ -161,6 +179,84 @@ def test_kernel_traced_scale_under_scan():
             q, kp, vp, table, pos, score_scale=float(sc), group=H // K
         )
         np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want))
+
+
+# ---------------------------------------------------------------------
+# unified (S, T) kernel primitive (ISSUE 9): multi-token query rows
+# ---------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "name,pps,ps,s_q,start",
+    [
+        # a whole chunk inside one page
+        ("chunk_in_page", 2, 8, 4, [0, 2, 4]),
+        # chunk straddling a page boundary mid-row-range
+        ("chunk_crosses_page", 3, 4, 6, [2, 0, 5]),
+        # chunk starting exactly on a page boundary
+        ("chunk_on_boundary", 3, 4, 4, [4, 8, 0]),
+        # S == page_size: rows tile pages exactly
+        ("chunk_is_page", 3, 4, 4, [0, 4, 4]),
+    ],
+)
+def test_kernel_exact_multi_token_rows(name, pps, ps, s_q, start):
+    """The unified kernel's (S, T) causal path: every query row i of
+    every slot attends to positions <= start + i, one global softmax
+    per row (no per-block requant), bit-exact vs the jnp mirror and
+    the dense gather oracle."""
+    rng = np.random.default_rng(31)
+    B, H, K, hd = 3, 4, 2, 8
+    n_pages = B * pps + 2
+    kp, vp = _rand_pools(rng, n_pages, K, ps, hd)
+    q = jnp.asarray(
+        rng.integers(-127, 128, size=(B, H, s_q, hd)), jnp.int8
+    )
+    perm = 1 + rng.permutation(n_pages)[: B * pps]
+    table = jnp.asarray(perm.reshape(B, pps), jnp.int32)
+    pos_v = jnp.asarray(start, jnp.int32)
+    kw = dict(score_scale=2e-4, group=H // K)
+    got = paged_attention_pallas(q, kp, vp, table, pos_v, **kw)
+    mirror = ref.paged_attention_ref(q, kp, vp, table, pos_v, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(mirror))
+    oracle = _gather_dense_acc_st(q, kp, vp, table, pos_v, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle))
+
+
+def test_kernel_exact_mixed_ragged_batch():
+    """The unified dispatch's ragged row mix in one (B, S) batch:
+    a chunk row mid-prompt, a decode-like row (only row 0
+    meaningful, starting at its last position), a fresh row at start
+    0, and a free row parked at INACTIVE_POS — every row bit-exact vs
+    mirror and oracle, garbage rows included (deterministic trash)."""
+    rng = np.random.default_rng(32)
+    B, H, K, hd, ps, pps, s_q = 4, 2, 2, 8, 4, 3, 4
+    n_pages = 6
+    kp, vp = _rand_pools(rng, n_pages, K, ps, hd)
+    table = jnp.asarray(
+        [
+            [3, 1, PAGE_NULL],
+            [2, 5, 4],
+            [6, PAGE_NULL, PAGE_NULL],
+            [PAGE_NULL, PAGE_NULL, PAGE_NULL],
+        ],
+        jnp.int32,
+    )
+    # slot 0: chunk at offset 4; slot 1: decode-like at position 7;
+    # slot 2: first chunk of a fresh prompt; slot 3: parked
+    pos = jnp.asarray([4, 7, 0, INACTIVE_POS], jnp.int32)
+    q = jnp.asarray(
+        rng.integers(-127, 128, size=(B, H, s_q, hd)), jnp.int8
+    )
+    kw = dict(score_scale=5e-4, group=H // K)
+    got = paged_attention_pallas(q, kp, vp, table, pos, **kw)
+    mirror = ref.paged_attention_ref(q, kp, vp, table, pos, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(mirror))
+    oracle = _gather_dense_acc_st(q, kp, vp, table, pos, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle))
+    # the S = 1 decode wrapper is literally the S-wide kernel's row 0
+    dec = paged_attention_decode_pallas(q[:, :, 0], kp, vp, table, pos,
+                                        **kw)
+    np.testing.assert_array_equal(
+        np.asarray(dec), np.asarray(got[:, :, 0])
+    )
 
 
 # ---------------------------------------------------------------------
@@ -266,3 +362,61 @@ def test_no_dense_gather_in_kernel_decode(deployed):
     )
     # the oracle engine DOES gather (the flag keeps the path alive)
     assert serve_one(False), "gather oracle path no longer gathers"
+
+
+def test_no_dense_gather_engine_wide_mixed(deployed):
+    """ISSUE 9 engine-wide invariant: with chunked prefill ON (the
+    default), a mixed prefill+decode step is ONE unified kernel
+    dispatch — no dense logical KV gather ANYWHERE on the default
+    paged path, prefill chunks included, sync and async alike.  The
+    staggered workload (4 requests on 2 slots, submit interleaved
+    with steps) forces steps where one slot decodes while the other
+    chunks its prompt.  The spy records every trace-time gather; the
+    flagged oracle engine must still gather, and must still agree
+    token for token."""
+    import repro.layers.attention as attn_mod
+
+    lm, tables = deployed
+    rng = np.random.default_rng(23)
+    specs = [(18, 6), (5, 9), (12, 4), (9, 7)]
+    prompts = [rng.integers(0, lm.cfg.vocab, size=(p,)) for p, _ in specs]
+    calls = []
+    orig = attn_mod._paged_kv_view
+
+    def spy(pool, table):
+        calls.append(pool.shape)
+        return orig(pool, table)
+
+    def serve(paged_kernel, depth):
+        eng = make_engine(
+            lm, tables, n_slots=2, max_len=MAX_LEN, paged=True,
+            page_size=8, paged_kernel=paged_kernel,
+            dispatch_depth=depth,
+            scheduler=SchedulerConfig(prefill_bucket=8, prefill_chunk=8,
+                                      max_prefills_per_step=2),
+        )
+        calls.clear()
+        attn_mod._paged_kv_view = spy
+        try:
+            ids = []
+            for (p, g), prompt in zip(specs, prompts):
+                ids.append(eng.submit(prompt, max_new_tokens=g))
+                eng.step()
+            done = {c.req_id: c.tokens for c in eng.run_until_drained()}
+        finally:
+            attn_mod._paged_kv_view = orig
+        return [done[r] for r in ids], list(calls)
+
+    kernel_toks, kernel_calls = serve(True, depth=0)
+    assert kernel_calls == [], (
+        "default paged path materialized the dense KV view in a mixed "
+        f"prefill+decode run: {kernel_calls}"
+    )
+    async_toks, async_calls = serve(True, depth=1)
+    assert async_calls == [], (
+        "async dispatch materialized the dense KV view"
+    )
+    gather_toks, gather_calls = serve(False, depth=0)
+    assert gather_calls, "gather oracle path no longer gathers"
+    assert kernel_toks == gather_toks
+    assert kernel_toks == async_toks

@@ -71,7 +71,8 @@ class ScriptedPreemptions:
     """FCFSPolicy plus scripted evictions — the deterministic harness
     for the preemption parity tests: at plan() call index k, evict one
     slot of the requested kind ("active": the most recently admitted
-    decode; "prefilling": a mid-prefill row, asserted to exist)."""
+    decode that cannot finish before the eviction executes;
+    "prefilling": a mid-prefill row, asserted to exist)."""
 
     name = "scripted"
 
@@ -89,12 +90,22 @@ class ScriptedPreemptions:
         plan = self.inner.plan(view)
         kind = self.script.get(self.calls)
         self.calls += 1
-        if kind == "active" and view.active:
-            v = max(view.active, key=lambda d: (d.admit_time, d.req_id))
-            assert v.n_generated >= 1
-            plan.preempt.append(v.slot)
-            self.n_scripted += 1
-            self.n_token_bearing += 1
+        if kind == "active":
+            # Under dispatch_depth=1 the engine drains the in-flight
+            # step BEFORE executing evictions, and rightly skips a
+            # victim that finished in that drain (its tokens are real
+            # output).  The drain harvests at most ONE token per slot,
+            # so a victim with budget_left >= 2 at plan time is
+            # guaranteed still leased when the eviction executes —
+            # script only those, keeping the executed == scripted
+            # accounting below exact at both dispatch depths.
+            live = [d for d in view.active if d.budget_left >= 2]
+            if live:
+                v = max(live, key=lambda d: (d.admit_time, d.req_id))
+                assert v.n_generated >= 1
+                plan.preempt.append(v.slot)
+                self.n_scripted += 1
+                self.n_token_bearing += 1
         elif kind == "prefilling":
             mid = [s for s in view.prefilling if 0 < s.offset < s.total]
             assert mid, "script expected a mid-prefill row"

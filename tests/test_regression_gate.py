@@ -5,9 +5,13 @@ regressions is worse than none), so the failure paths are pinned:
 a goodput drop beyond its margin fails, a within-margin wobble
 passes, a silently dropped metric fails, the open-loop section's
 load-dependent latency tails are pruned from the TTFT/ITL gates
-(DESIGN.md §Scheduling ¶Open-loop harness), and the prefix-cache
+(DESIGN.md §Scheduling ¶Open-loop harness), the prefix-cache
 `ttft_uplift` floor (DESIGN.md §Prefix-caching) fails when the
-cold-vs-shared win evaporates past its margin.
+cold-vs-shared win evaporates past its margin, and the
+`kernel_to_gather` floor (DESIGN.md §Serving ¶Unified attention
+kernel) fails when the fused kernel's win over the write-then-gather
+oracle evaporates past its margin — or when the prefill lane's
+metrics silently vanish from a candidate.
 """
 import copy
 import importlib.util
@@ -28,7 +32,8 @@ def _gatemod():
 
 def _tree():
     """A minimal BENCH_serving.json shape touching every gated class:
-    throughput, TTFT, ITL, and the open-loop goodput section."""
+    throughput, TTFT, ITL, the open-loop goodput section, and the
+    kernel-vs-gather ratio floor."""
     return {
         "lockstep_uniform": {"tok_s": 50.0},
         "engine_uniform": {"tok_s": 100.0, "p95_itl_s": 0.010},
@@ -44,6 +49,13 @@ def _tree():
                 "2.0x": {"goodput_qps": 1.5, "p50_ttft_s": 9.0,
                          "p99_itl_s": 0.5},
             },
+        },
+        "paged_prefill_kernel_vs_gather": {
+            "kernel": {"tok_s": 120.0, "p50_ttft_s": 0.030,
+                       "p95_ttft_s": 0.060},
+            "gather": {"tok_s": 100.0, "p50_ttft_s": 0.035,
+                       "p95_ttft_s": 0.070},
+            "kernel_to_gather": 1.2,
         },
         "shared_prefix_vs_cold": {
             "cold": {"tok_s": 80.0, "p50_ttft_s": 0.050,
@@ -136,5 +148,48 @@ def test_ttft_uplift_jitter_within_margin_passes(tmp_path, monkeypatch):
 def test_missing_uplift_fails(tmp_path, monkeypatch):
     cand = _tree()
     del cand["shared_prefix_vs_cold"]["ttft_uplift"]
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_prefill_kernel_lane_regression_fails(tmp_path, monkeypatch):
+    cand = _tree()
+    # kernel lane tok_s rides the normalized throughput gate like
+    # every engine lane: -50% normalized is past the 30% margin
+    cand["paged_prefill_kernel_vs_gather"]["kernel"]["tok_s"] = 60.0
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_missing_prefill_kernel_lane_fails(tmp_path, monkeypatch):
+    """A silently dropped prefill-kernel lane is a regression: the
+    bench that proves the unified kernel beats the gather oracle must
+    not be deletable without moving the baseline."""
+    cand = _tree()
+    del cand["paged_prefill_kernel_vs_gather"]["kernel"]
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_kernel_ratio_floor_fails(tmp_path, monkeypatch):
+    """The kernel's win over the gather oracle evaporating is a
+    regression even when both lanes stay within their own margins:
+    1.2 -> 0.55 is a 54% drop, past 0.30 * KERNEL_RATIO_MARGIN
+    (1.5) = 45%."""
+    cand = _tree()
+    cand["paged_prefill_kernel_vs_gather"]["kernel_to_gather"] = 0.55
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_kernel_ratio_jitter_within_margin_passes(tmp_path, monkeypatch):
+    cand = _tree()
+    cand["paged_prefill_kernel_vs_gather"]["kernel_to_gather"] = 0.9
+    _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_missing_kernel_ratio_fails(tmp_path, monkeypatch):
+    cand = _tree()
+    del cand["paged_prefill_kernel_vs_gather"]["kernel_to_gather"]
     with pytest.raises(SystemExit):
         _run(tmp_path, monkeypatch, _tree(), cand)

@@ -168,10 +168,11 @@ def test_step_records_phases_and_gauges(deployed):
                     "n_prefilling", "admit_rejects", "n_leased",
                     "occupancy", "pages_in_use", "free_pages"):
             assert key in s, key
-    # a drain of this workload exercises every phase of the sync loop
+    # a drain of this workload exercises every phase of the sync
+    # chunked loop (one unified dispatch per step — decode_dispatch
+    # only exists on the non-chunked oracle paths)
     assert seen_phases >= {"admission", "plan_chunks",
-                           "chunk_dispatch", "chunk_harvest",
-                           "decode_dispatch", "harvest"}
+                           "unified_dispatch", "harvest"}
     m = tel.metrics()
     assert m["n_steps"] == len(tel.steps)
     assert set(m["phase_mean_s"]) == seen_phases

@@ -26,9 +26,9 @@ Reads the JSONL request-lifecycle trace that `--trace-out` produces
   tokens skipped, copy-on-write splits) when the trace has any.
 
   with --metrics metrics.json, also renders the per-step phase
-  breakdown (admission / plan_chunks / chunk_dispatch / chunk_harvest /
-  decode_dispatch / harvest) and compile-cache hit/miss totals from the
-  aggregated step metrics export.
+  breakdown (admission / plan_chunks / unified_dispatch /
+  decode_dispatch / harvest) and compile-cache hit/miss totals from
+  the aggregated step metrics export.
 
 Usage:
   PYTHONPATH=src python tools/trace_summary.py trace.jsonl \
