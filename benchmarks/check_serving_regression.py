@@ -88,6 +88,27 @@ KERNEL_RATIO_KEYS = ("kernel_to_gather",)
 # within-run throughput ratios at these sub-second windows carry the
 # same host jitter as the uplift ratio, so same widened margin
 KERNEL_RATIO_MARGIN = 1.5
+# the int4-packed-KV section (`kv_int4_vs_int8`, DESIGN.md §Serving
+# ¶Sub-8-bit KV): its int8/int4 lanes ride the normalized tok_s gate
+# like every engine lane; on top of that two scalars are gated RAW
+# (both within ONE run, dimensionless, no lockstep normalization) and
+# additionally against ABSOLUTE floors — the sub-8-bit mode's whole
+# contract, so a baseline re-record can never quietly lower them:
+#   * `int4_concurrency_uplift` (int4 max_active / int8 max_active at
+#     EQUAL arena bytes) must stay >= INT4_MIN_UPLIFT — packed cells
+#     buy 2x the pages, losing the uplift means packing stopped
+#     paying for itself;
+#   * `int4_token_match` (mean positionwise greedy-token agreement
+#     with the int8-KV run) must stay >= INT4_MIN_MATCH — int4 KV is
+#     LOSSY, so the accuracy oracle is this calibrated-correlation
+#     floor, not bit-exactness; a packed-path bug (nibble order, a
+#     wrong requant image) drops agreement to chance (~0), an order
+#     of magnitude below the floor.
+KV4_UPLIFT_KEYS = ("int4_concurrency_uplift",)
+KV4_MATCH_KEYS = ("int4_token_match",)
+KV4_MARGIN = 1.5
+INT4_MIN_UPLIFT = 1.8
+INT4_MIN_MATCH = 0.10
 
 
 def flat_metrics(tree, keys, prefix=""):
@@ -230,6 +251,27 @@ def main():
             base_kr, cand_kr, cand_kr,
             args.max_regression * KERNEL_RATIO_MARGIN,
             higher_is_better=True, unit="x")
+
+    # int4-packed KV: concurrency uplift at equal arena bytes + token
+    # agreement with the int8-KV run — both within ONE run, hardware-
+    # neutral, gated raw against the baseline AND against absolute
+    # floors (see the comment at KV4_UPLIFT_KEYS)
+    for keys, floor, what in (
+        (KV4_UPLIFT_KEYS, INT4_MIN_UPLIFT, "concurrency uplift"),
+        (KV4_MATCH_KEYS, INT4_MIN_MATCH, "token match"),
+    ):
+        base_kv4 = flat_metrics(base_tree, keys)
+        cand_kv4 = flat_metrics(cand_tree, keys)
+        if base_kv4 or cand_kv4:
+            failures += gate(
+                base_kv4, cand_kv4, cand_kv4,
+                args.max_regression * KV4_MARGIN,
+                higher_is_better=True, unit="x")
+            for path, got in sorted(cand_kv4.items()):
+                if got < floor:
+                    failures.append(
+                        f"{path}: int4 {what} {got:.3f} below the "
+                        f"absolute floor {floor:.3f}")
 
     if failures:
         print("\nserving regression gate FAILED:")

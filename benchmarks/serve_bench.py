@@ -169,6 +169,7 @@ def bench_engine(
     policy=None,
     prefix_cache=False,
     cache_keep_pages=0,
+    kv_bits=8,
 ):
     sched_kw = {"prefill_bucket": bucket,
                 "max_prefills_per_step": max_prefills}
@@ -181,6 +182,7 @@ def bench_engine(
         mesh=mesh, kv_shard=kv_shard, dispatch_depth=dispatch_depth,
         telemetry=telemetry, policy=policy,
         prefix_cache=prefix_cache, cache_keep_pages=cache_keep_pages,
+        kv_bits=kv_bits,
         scheduler=SchedulerConfig(**sched_kw)))
     # warm THIS engine's jit wrappers (every chunk row bucket + the
     # fused decode via engine.warmup, one whole-prompt prefill compile
@@ -297,6 +299,56 @@ def bench_paged_vs_slot(lm, tables, rng, *, slots, max_len, page_size,
         "requests": n_requests, "prompt_len": p_len, "gen": gen,
         "slot": slot, "paged": paged,
         "concurrency_gain": paged["max_active"] / slot["max_active"],
+    }
+
+
+def bench_kv_int4_vs_int8(lm, tables, rng, *, slots, max_len, page_size,
+                          bucket, chunk):
+    """Short-request workload on EQUAL arena BYTES, int8 KV vs the
+    int4-packed pools (DESIGN.md §Serving ¶Sub-8-bit KV): a packed
+    page cell holds two nibbles, so the same byte budget buys the
+    int4 engine TWICE the pages — on a page-budget-bound workload its
+    concurrency should roughly double (`int4_concurrency_uplift`,
+    floor-gated in check_serving_regression.py).  int4 KV is LOSSY,
+    so there is no token-parity assert here; instead the lane records
+    `int4_token_match` (mean positionwise greedy-token agreement with
+    the int8-KV run, also floor-gated) — the calibrated-correlation
+    accuracy contract, not bit-exactness."""
+    total = max(4, max_len // 2)
+    p_len = max(1, total // 2)
+    gen = total - p_len
+    n_requests = 4 * slots
+    workload = [
+        (rng.integers(0, lm.cfg.vocab, size=(p_len,)), gen)
+        for _ in range(n_requests)
+    ]
+    arena_positions = slots * max_len
+    n_pages8 = arena_positions // page_size
+    n_pages4 = 2 * n_pages8       # packed cells: same bytes, 2x pages
+    slots8 = min(n_requests, max(1, (n_pages8 * page_size) // total))
+    slots4 = min(n_requests, max(1, (n_pages4 * page_size) // total))
+    tok8, tok4 = [], []
+    kw = dict(paged=True, page_size=page_size, max_prefills=n_requests,
+              chunk=chunk)
+    int8 = bench_engine(lm, tables, workload, slots8, max_len, bucket,
+                        n_pages=n_pages8, collect_tokens=tok8, **kw)
+    int4 = bench_engine(lm, tables, workload, slots4, max_len, bucket,
+                        n_pages=n_pages4, collect_tokens=tok4,
+                        kv_bits=4, **kw)
+    match = float(np.mean([
+        np.mean(np.asarray(a, np.int64) == np.asarray(b, np.int64))
+        if len(a) == len(b) and len(a) else 0.0
+        for a, b in zip(tok8, tok4)
+    ]))
+    return {
+        "requests": n_requests, "prompt_len": p_len, "gen": gen,
+        "n_pages_int8": n_pages8, "n_pages_int4": n_pages4,
+        "int8": int8, "int4": int4,
+        "int4_concurrency_uplift": (
+            int4["max_active"] / int8["max_active"]
+            if int8["max_active"] else 0.0
+        ),
+        "int4_token_match": match,
     }
 
 
@@ -820,6 +872,10 @@ def main():
         "shared_prefix_vs_cold": bench_shared_prefix_vs_cold(
             lm, tables, rng, slots=args.slots, max_len=max_len,
             page_size=args.page_size, bucket=args.prefill_bucket),
+        "kv_int4_vs_int8": bench_kv_int4_vs_int8(
+            lm, tables, rng, slots=args.slots, max_len=max_len,
+            page_size=args.page_size, bucket=args.prefill_bucket,
+            chunk=args.prefill_chunk),
         "paged_kernel_vs_gather": bench_paged_kernel_vs_gather(
             lm, tables, rng, slots=args.slots, max_len=max_len,
             page_size=args.page_size, bucket=args.prefill_bucket),

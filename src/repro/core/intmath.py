@@ -75,6 +75,36 @@ def apply_lut(stored, table, *, qmin: int = -128):
     return jnp.take(jnp.asarray(table), idx, axis=0)
 
 
+def pack_int4(x):
+    """Pack int4 values (stored in int8, range [-8, 7]) two per int8
+    cell along the LAST axis: element 2i -> low nibble, 2i+1 -> high
+    nibble of output cell i (DESIGN.md §Serving ¶Sub-8-bit KV).
+
+    The last axis must be even.  Both nibbles of a cell come from the
+    same position along every other axis, so a packed KV pool keeps
+    page/table geometry untouched — only head_dim halves.
+    """
+    if x.shape[-1] % 2:
+        raise ValueError(f"last axis must be even, got {x.shape[-1]}")
+    lo = x[..., 0::2].astype(jnp.int8)
+    hi = x[..., 1::2].astype(jnp.int8)
+    return (
+        jnp.left_shift(hi, 4) | (lo & jnp.int8(0x0F))
+    ).astype(jnp.int8)
+
+
+def unpack_int4(p):
+    """Inverse of pack_int4: int8 cells -> int4 values in [-8, 7]
+    (still stored as int8), last axis doubled.  Sign extension via
+    shift-left-then-arithmetic-shift-right — pure integer, so it runs
+    inside jitted ID code and inside the Pallas page loop alike."""
+    p = p.astype(jnp.int8)
+    lo = jnp.right_shift(jnp.left_shift(p, 4), 4)
+    hi = jnp.right_shift(p, 4)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(p.shape[:-1] + (2 * p.shape[-1],))
+
+
 def avgpool_requant_params(k_total: int, d: int = 15):
     """Eq. 25: 1/(K1*K2) ~= floor(2^d / (K1*K2)) >> d  (integer tables)."""
     m = int((1 << d) // k_total)

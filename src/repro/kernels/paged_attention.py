@@ -79,6 +79,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.intmath import unpack_int4
+
 NEG_INF = -1e9
 
 
@@ -89,15 +91,29 @@ def _kernel(
     table_ref,
     pos_ref,
     scale_ref,
-    o_ref,
-    logits_ref,
-    *,
+    *rest,
     ps: int,
     pps: int,
     group: int,
     s_q: int,
+    packed: bool = False,
 ):
-    """One (slot b, head h) grid step; logits staged in VMEM scratch."""
+    """One (slot b, head h) grid step; logits staged in VMEM scratch.
+
+    `packed` (DESIGN.md §Serving ¶Sub-8-bit KV): the pools store two
+    int4 nibbles per int8 cell along hd, and `rest` carries two (6, K)
+    int32 requant operands (rows m, s0, lo, hi, d, zp — one column per
+    kv head).  `page_kv` then unpacks and requantizes each page load
+    back into the int8 image space with the SAME multiply-shift
+    formula as `core.requant.apply_rqt`, so the dense dots below stay
+    int8 and the kernel stays bit-exact with the write-then-gather
+    path at fixed kv_bits.  No unpacked page copy ever leaves the
+    (ps, hd) register block.
+    """
+    if packed:
+        k_rq_ref, v_rq_ref, o_ref, logits_ref = rest
+    else:
+        o_ref, logits_ref = rest
     h = pl.program_id(1)
     kh = h // group
     q = q_ref[0, 0]  # (S, hd) int8
@@ -105,16 +121,24 @@ def _kernel(
     pos_b = pos_ref[0]
     scale = scale_ref[0, 0]
 
-    def page_kv(ref, j):
+    def page_kv(ref, j, rq_ref=None):
         page = jax.lax.dynamic_index_in_dim(tab, j, 0, keepdims=False)
         blk = pl.load(
             ref, (pl.ds(page, 1), pl.ds(kh, 1), slice(None), slice(None))
         )
-        return blk[0, 0]  # (ps, hd) int8
+        blk = blk[0, 0]  # (ps, hd) int8 — (ps, hd/2) when packed
+        if not packed:
+            return blk
+        rq = pl.load(rq_ref, (slice(None), pl.ds(kh, 1)))[:, 0]  # (6,)
+        x = jnp.clip(unpack_int4(blk).astype(jnp.int32), rq[2], rq[3])
+        staged = jnp.right_shift(x, rq[1]) * rq[0]
+        out = jnp.right_shift(staged, rq[4] - rq[1]) + rq[5]
+        return jnp.clip(out, -128, 127).astype(jnp.int8)
 
     def score_body(j, carry):
         s = jax.lax.dot_general(
-            q, page_kv(k_ref, j), (((1,), (1,)), ((), ())),
+            q, page_kv(k_ref, j, k_rq_ref if packed else None),
+            (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.int32,
         )  # (S, ps)
         lg = s.astype(jnp.float32) * scale
@@ -138,7 +162,8 @@ def _kernel(
     def pv_body(j, acc):
         qp_j = jax.lax.dynamic_slice(qp, (0, j * ps), (s_q, ps))
         return acc + jax.lax.dot_general(
-            qp_j, page_kv(v_ref, j), (((1,), (0,)), ((), ())),
+            qp_j, page_kv(v_ref, j, v_rq_ref if packed else None),
+            (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32,
         )
 
@@ -156,6 +181,8 @@ def paged_attention_pallas(
     score_scale,
     group: int = 1,
     interpret: bool = True,
+    k_rq=None,
+    v_rq=None,
 ):
     """q (B, H, S, hd) int8 — S query rows per slot, row s at logical
     position pos[b] + s; k/v pools (n_pages + 1, K, ps, hd) int8;
@@ -164,33 +191,60 @@ def paged_attention_pallas(
     -> (B, H, S, hd) int32 P.V accumulator in eps_p * eps_v units (the
     caller owns the `ctx_rqt` requantization, like every Linear in
     this codebase).
+
+    Int4-packed pools (DESIGN.md §Serving ¶Sub-8-bit KV) have a
+    (ps, hd/2) trailing block; pass the per-kv-head unpack images as
+    `k_rq`/`v_rq` (6, K) int32 operands and the kernel unpacks inside
+    the page loop.
     """
     B, H, S, hd = q.shape
-    n_pool, K, ps, _ = k_pool.shape
+    n_pool, K, ps, hd_store = k_pool.shape
     pps = table.shape[1]
     assert H == K * group, (H, K, group)
+    packed = hd_store != hd
+    if packed:
+        if 2 * hd_store != hd or k_rq is None or v_rq is None:
+            raise ValueError(
+                f"pool head_dim {hd_store} != query head_dim {hd}: "
+                "int4-packed pools need hd/2 cells plus k_rq/v_rq "
+                "(6, K) requant operands"
+            )
+    elif k_rq is not None or v_rq is not None:
+        raise ValueError("k_rq/v_rq given but the pools are not packed")
     scale = jnp.asarray(score_scale, jnp.float32).reshape(1, 1)
-    kern = functools.partial(_kernel, ps=ps, pps=pps, group=group, s_q=S)
+    kern = functools.partial(
+        _kernel, ps=ps, pps=pps, group=group, s_q=S, packed=packed
+    )
+    in_specs = [
+        pl.BlockSpec((1, 1, S, hd), lambda b, h: (b, h, 0, 0)),
+        pl.BlockSpec((n_pool, K, ps, hd_store), lambda b, h: (0, 0, 0, 0)),
+        pl.BlockSpec((n_pool, K, ps, hd_store), lambda b, h: (0, 0, 0, 0)),
+        pl.BlockSpec((1, pps), lambda b, h: (b, 0)),
+        pl.BlockSpec((1,), lambda b, h: (b,)),
+        pl.BlockSpec((1, 1), lambda b, h: (0, 0)),
+    ]
+    operands = [
+        q, k_pool, v_pool, table.astype(jnp.int32),
+        pos.astype(jnp.int32), scale,
+    ]
+    if packed:
+        in_specs += [
+            pl.BlockSpec((6, K), lambda b, h: (0, 0)),
+            pl.BlockSpec((6, K), lambda b, h: (0, 0)),
+        ]
+        operands += [
+            jnp.asarray(k_rq, jnp.int32), jnp.asarray(v_rq, jnp.int32),
+        ]
     call = pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct((B, H, S, hd), jnp.int32),
         grid=(B, H),
-        in_specs=[
-            pl.BlockSpec((1, 1, S, hd), lambda b, h: (b, h, 0, 0)),
-            pl.BlockSpec((n_pool, K, ps, hd), lambda b, h: (0, 0, 0, 0)),
-            pl.BlockSpec((n_pool, K, ps, hd), lambda b, h: (0, 0, 0, 0)),
-            pl.BlockSpec((1, pps), lambda b, h: (b, 0)),
-            pl.BlockSpec((1,), lambda b, h: (b,)),
-            pl.BlockSpec((1, 1), lambda b, h: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, S, hd), lambda b, h: (b, h, 0, 0)),
         scratch_shapes=[pltpu.VMEM((S, pps * ps), jnp.float32)],
         interpret=interpret,
     )
-    return call(
-        q, k_pool, v_pool, table.astype(jnp.int32), pos.astype(jnp.int32),
-        scale,
-    )
+    return call(*operands)
 
 
 def paged_attention(
@@ -204,6 +258,8 @@ def paged_attention(
     group: int = 1,
     mesh=None,
     interpret: bool = True,
+    k_rq=None,
+    v_rq=None,
 ):
     """Mesh-aware dispatch for the fused paged attention (same contract
     as `paged_attention_pallas`, plus an optional serving mesh).
@@ -232,34 +288,49 @@ def paged_attention(
         return paged_attention_pallas(
             q, k_pool, v_pool, table, pos,
             score_scale=score_scale, group=group, interpret=interpret,
+            k_rq=k_rq, v_rq=v_rq,
         )
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    def local(q_, k_, v_, tab_, pos_, scale_):
+    packed = k_rq is not None
+
+    def local(q_, k_, v_, tab_, pos_, scale_, *rq_):
+        kr, vr = rq_ if packed else (None, None)
         return paged_attention_pallas(
             q_, k_, v_, tab_, pos_,
             score_scale=scale_, group=group, interpret=interpret,
+            k_rq=kr, v_rq=vr,
         )
+
+    in_specs = [
+        P(None, "model", None, None),
+        P(None, "model", None, None),
+        P(None, "model", None, None),
+        P(),
+        P(),
+        P(),
+    ]
+    operands = [
+        q, k_pool, v_pool, table.astype(jnp.int32), pos.astype(jnp.int32),
+        jnp.asarray(score_scale, jnp.float32),
+    ]
+    if packed:
+        # the (6, K) requant operands split with the kv heads — each
+        # shard gets the columns of its own head range
+        in_specs += [P(None, "model"), P(None, "model")]
+        operands += [
+            jnp.asarray(k_rq, jnp.int32), jnp.asarray(v_rq, jnp.int32),
+        ]
 
     sharded = shard_map(
         local,
         mesh=mesh,
-        in_specs=(
-            P(None, "model", None, None),
-            P(None, "model", None, None),
-            P(None, "model", None, None),
-            P(),
-            P(),
-            P(),
-        ),
+        in_specs=tuple(in_specs),
         out_specs=P(None, "model", None, None),
         check_rep=False,
     )
-    return sharded(
-        q, k_pool, v_pool, table.astype(jnp.int32), pos.astype(jnp.int32),
-        jnp.asarray(score_scale, jnp.float32),
-    )
+    return sharded(*operands)
 
 
 def paged_attention_decode_pallas(
@@ -272,6 +343,8 @@ def paged_attention_decode_pallas(
     score_scale,
     group: int = 1,
     interpret: bool = True,
+    k_rq=None,
+    v_rq=None,
 ):
     """Single-token wrapper: q (B, H, hd) int8 -> (B, H, hd) int32.
     The S = 1 case of `paged_attention_pallas` (pos is the decode
@@ -279,6 +352,7 @@ def paged_attention_decode_pallas(
     out = paged_attention_pallas(
         q[:, :, None, :], k_pool, v_pool, table, pos,
         score_scale=score_scale, group=group, interpret=interpret,
+        k_rq=k_rq, v_rq=v_rq,
     )
     return out[:, :, 0, :]
 
@@ -294,12 +368,14 @@ def paged_attention_decode(
     group: int = 1,
     mesh=None,
     interpret: bool = True,
+    k_rq=None,
+    v_rq=None,
 ):
     """Single-token wrapper over the mesh-aware `paged_attention`:
     q (B, H, hd) int8 -> (B, H, hd) int32."""
     out = paged_attention(
         q[:, :, None, :], k_pool, v_pool, table, pos,
         score_scale=score_scale, group=group, mesh=mesh,
-        interpret=interpret,
+        interpret=interpret, k_rq=k_rq, v_rq=v_rq,
     )
     return out[:, :, 0, :]

@@ -12,7 +12,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.intmath import unpack_int4
+
 NEG_INF = -1e9
+
+
+def kv4_unpack_page_ref(blk, rq, kh):
+    """Unpack one int4-packed (ps, hd/2) page block back into the int8
+    image space with the per-kv-head requant column `rq[:, kh]` (rows
+    m, s0, lo, hi, d, zp) — the mirror of the in-kernel unpack in
+    `paged_attention._kernel.page_kv` (DESIGN.md §Serving ¶Sub-8-bit
+    KV).  Same multiply-shift formula as `core.requant.apply_rqt`."""
+    m, s0, lo, hi, d, zp = (rq[i, kh] for i in range(6))
+    x = jnp.clip(unpack_int4(blk).astype(jnp.int32), lo, hi)
+    staged = jnp.right_shift(x, s0) * m
+    out = jnp.right_shift(staged, d - s0) + zp
+    return jnp.clip(out, -128, 127).astype(jnp.int8)
 
 
 def int8_matmul_requant_ref(x, w, bias, mul, s0, *, d: int, zp: int = 0,
@@ -93,7 +108,8 @@ def quant_flash_attention_ref(
 
 
 def paged_attention_ref(
-    q, k_pool, v_pool, table, pos, *, score_scale, group: int = 1
+    q, k_pool, v_pool, table, pos, *, score_scale, group: int = 1,
+    k_rq=None, v_rq=None,
 ):
     """Mirror of paged_attention.paged_attention_pallas: the model's
     unfused multi-query ID attention walked page by page through the
@@ -108,6 +124,10 @@ def paged_attention_ref(
     table (B, pps) int32; pos (B,) int32 position of query row 0.
     -> (B, H, S, hd) int32 accumulator (eps_p * eps_v units; ctx_rqt
     applied by the caller).
+
+    With `k_rq`/`v_rq` (6, K) int32 the pools are int4-packed
+    (ps, hd/2) and every page read goes through `kv4_unpack_page_ref`
+    first — the (S, T) mirror of the packed kernel mode.
     """
     B, H, S, hd = q.shape
     _, K, ps, _ = k_pool.shape
@@ -120,6 +140,8 @@ def paged_attention_ref(
         for j in range(pps):
             page = table[b, j]
             k_page = k_pool[page, h // group]          # (ps, hd)
+            if k_rq is not None:
+                k_page = kv4_unpack_page_ref(k_page, k_rq, h // group)
             s = jax.lax.dot_general(
                 qr, k_page, (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.int32)
@@ -136,6 +158,8 @@ def paged_attention_ref(
         for j in range(pps):
             page = table[b, j]
             v_page = v_pool[page, h // group]
+            if v_rq is not None:
+                v_page = kv4_unpack_page_ref(v_page, v_rq, h // group)
             acc = acc + jax.lax.dot_general(
                 qp[:, j * ps:(j + 1) * ps], v_page,
                 (((1,), (0,)), ((), ())),

@@ -171,6 +171,16 @@ def main():
     )
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument(
+        "--kv-bits",
+        type=int,
+        default=8,
+        choices=(8, 4),
+        help="KV storage width (DESIGN.md §Serving ¶Sub-8-bit KV): "
+        "8 = bit-exact int8 KV images; 4 = two int4 nibbles per "
+        "pool cell — half the arena bytes, lossy vs int8 KV "
+        "(needs --paged and the chunked prefill path)",
+    )
+    ap.add_argument(
         "--pages",
         type=int,
         default=0,
@@ -297,6 +307,7 @@ def main():
         n_slots=args.slots, max_len=max_len,
         paged=args.paged, page_size=args.page_size,
         n_pages=args.pages or None,
+        kv_bits=args.kv_bits,
         paged_kernel=not args.paged_gather,
         mesh=mesh, kv_shard=args.kv_shard,
         dispatch_depth=args.dispatch_depth,

@@ -49,6 +49,9 @@ def _act(kind: ActKind, n):
 def _attn(c: ArchConfig, max_seq, d_in=None):
     d = d_in or c.d_model
     H, K, hd = c.n_heads, c.n_kv_heads, c.hd
+    # per-kv-head int4 pack/unpack images (DESIGN.md §Serving
+    # ¶Sub-8-bit KV); make_rqt squeezes (1,)-channel sites to scalars
+    kv4_rqt = _rqt(K if K > 1 else None)
     return {
         "wq": _lin(d, H * hd), "wk": _lin(d, K * hd), "wv": _lin(d, K * hd),
         "q_rqt": _rqt(H * hd), "k_rqt": _rqt(K * hd), "v_rqt": _rqt(K * hd),
@@ -57,6 +60,8 @@ def _attn(c: ArchConfig, max_seq, d_in=None):
                     "ln2_img": _s((), I32), "r_step": _s((), I32),
                     "exp_lut": _s((256,), I32)},
         "ctx_rqt": _rqt(),
+        "kv4": {"k_pack": kv4_rqt, "k_unpack": kv4_rqt,
+                "v_pack": kv4_rqt, "v_unpack": kv4_rqt},
         "wo": _lin(H * hd, c.d_model),
     }
 

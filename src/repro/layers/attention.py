@@ -74,7 +74,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.requant import apply_rqt
+from repro.core.intmath import pack_int4, unpack_int4
+from repro.core.requant import apply_rqt, make_rqt
 from repro.core.rep import Rep
 from repro.layers.act_quant import QAct
 from repro.layers.common import ActKind, DeployCtx
@@ -165,6 +166,14 @@ class QAttention:
         positions = _positions(S, pos)
         q = apply_rope_fp(q, cos, sin, positions, rot)
         k = apply_rope_fp(k, cos, sin, positions, rot)
+        if calib is not None:
+            # per-kv-head ranges for the int4-packed KV images
+            # (DESIGN.md §Serving ¶Sub-8-bit KV) — observed POST-RoPE,
+            # exactly what the KV cache stores, so the int4 grids need
+            # no rotation headroom
+            for h in range(K):
+                calib.observe(f"{scope}{self.name}.k.h{h}", k[:, h])
+                calib.observe(f"{scope}{self.name}.v.h{h}", v[:, h])
 
         if cache is not None:
             if "table" in cache:
@@ -250,9 +259,52 @@ class QAttention:
         )
         assert ctx_zp == 0
         t["ctx_rqt"] = ctx_t["rqt"]
+        # sub-8-bit KV (DESIGN.md §Serving ¶Sub-8-bit KV): per-kv-head
+        # pack/unpack requant images between the int8 KV image space
+        # and the int4 page-pool space; unused unless the serving
+        # arena is packed (kv_bits=4)
+        t["kv4"] = self._kv4_tables(ctx, scope, eps)
         ip, eps_acc_o = subs["wo"].deploy(p_np["wo"], ctx_eps, 0)
         t["wo"] = ip
         return t, eps_acc_o
+
+    def _kv4_tables(self, ctx: DeployCtx, scope: str, eps: dict) -> dict:
+        """Per-kv-head int4 requant images for the packed KV arena.
+
+        Calibrated the same way activations are: the per-head float
+        ranges observed by `apply_float` (names ``{k,v}.h{h}``, taken
+        POST-RoPE — exactly what the cache stores, so no rotation
+        headroom) set each head's int4 quantum ``eps4_h`` in
+        int8-IMAGE units — abs-max/7, floored at 1 so int4 never
+        claims precision the int8 image lacks.  ``*_pack`` maps the
+        int8 image into [-8, 7] (ratio 1/eps4); ``*_unpack`` maps
+        stored int4 back into the SAME int8 image space (ratio eps4)
+        — score_scale, the softmax island, and ctx_rqt are untouched
+        downstream.  Heads missing from calibration fall back to the
+        full image range."""
+        out = {}
+        for short in ("k", "v"):
+            eps8 = float(eps[short])
+            amax_img = np.empty(self.n_kv_heads, np.float64)
+            for h in range(self.n_kv_heads):
+                nm = f"{scope}{self.name}.{short}.h{h}"
+                if ctx.calib is not None and nm in getattr(
+                    ctx.calib, "hi", {}
+                ):
+                    lo, hi = ctx.calib.range(nm)
+                    amax_img[h] = (
+                        max(abs(float(lo)), abs(float(hi))) / eps8
+                    )
+                else:
+                    amax_img[h] = 127.0
+            eps4 = np.maximum(amax_img / 7.0, 1.0)
+            out[f"{short}_pack"] = make_rqt(
+                1.0 / eps4, 1.0, qmin=-8, qmax=7, acc_bound=127.0
+            )
+            out[f"{short}_unpack"] = make_rqt(
+                eps4, 1.0, acc_bound=8.0
+            )
+        return out
 
     # -- integer path -------------------------------------------------------
     BLOCKWISE_THRESHOLD = 4096  # S_q above this -> streaming attention
@@ -283,6 +335,11 @@ class QAttention:
             if "table" in cache:
                 from repro.launch import variants
 
+                # int4-packed pools (DESIGN.md §Serving ¶Sub-8-bit
+                # KV): a pool whose trailing axis is hd/2 stores two
+                # nibbles per cell — thread the per-head pack/unpack
+                # requant images through the write and the read
+                kv4 = t["kv4"] if cache["k"].shape[-1] != hd else None
                 if (variants.get("paged_decode") == "kernel"
                         and variants.get("attn_softmax") != "int"):
                     # fused paged attention (S == 1 decode, S > 1
@@ -291,9 +348,11 @@ class QAttention:
                     # table (the gather path below stays available as
                     # the parity oracle via paged_decode="gather")
                     return self._paged_kernel_attend(
-                        t, q, k, v, cache, pos, subs
+                        t, q, k, v, cache, pos, subs, kv4=kv4
                     )
-                k_all, v_all, cache = _paged_cache_update(cache, k, v, pos)
+                k_all, v_all, cache = _paged_cache_update(
+                    cache, k, v, pos, kv4=kv4
+                )
             else:
                 k_all = _cache_write(cache["k"], k, pos)
                 v_all = _cache_write(cache["v"], v, pos)
@@ -403,7 +462,8 @@ class QAttention:
         acc_int = jnp.round(ctx * 127.0).astype(jnp.int32)
         return apply_rqt(acc_int, t["ctx_rqt"])
 
-    def _paged_kernel_attend(self, t, q, k, v, cache, pos, subs):
+    def _paged_kernel_attend(self, t, q, k, v, cache, pos, subs,
+                             kv4=None):
         """Fused paged ID attention (decode and chunked prefill):
         scatter the new column(s) through the page table, then run
         attention straight over the page pools
@@ -420,12 +480,22 @@ class QAttention:
         from repro.kernels.paged_attention import paged_attention
         from repro.sharding.hints import profile_mesh
 
-        pos_v, cache = _paged_write(cache, k, v, pos)
+        pos_v, cache = _paged_write(cache, k, v, pos, kv4=kv4)
         cache = _hint_kv_cache(cache)
+        kw = {}
+        if kv4 is not None:
+            # per-head unpack images as (6, K) int32 kernel operands
+            # (rows m, s0, lo, hi, d, zp) — the kernel applies the
+            # SAME requant formula as apply_rqt, so kernel == gather
+            # stays bit-exact at kv_bits=4 too
+            kw = dict(
+                k_rq=_kv4_operand(kv4["k_unpack"], self.n_kv_heads),
+                v_rq=_kv4_operand(kv4["v_unpack"], self.n_kv_heads),
+            )
         acc = paged_attention(
             q, cache["k"], cache["v"], cache["table"], pos_v,
             score_scale=t["score_scale"], group=self.group,
-            mesh=profile_mesh())
+            mesh=profile_mesh(), **kw)
         s_ctx = apply_rqt(acc, t["ctx_rqt"])
         B, _, S, _ = q.shape
         s_ctx = s_ctx.transpose(0, 2, 1, 3)
@@ -526,34 +596,88 @@ def _paged_column_write(pool, new, pos, table):
         new_f.astype(pool.dtype))
 
 
-def _paged_write(cache, k, v, pos):
+def _kv4_operand(rqt, n_kv_heads: int):
+    """A kv4 requant tree as one (6, K) int32 kernel operand: rows
+    m, s0, lo, hi, d, zp, each broadcast per kv head (scalar entries
+    — a single-head site, or the shared d/zp — repeat across K)."""
+    rows = (rqt["m"], rqt["s0"], rqt["lo"], rqt["hi"],
+            rqt["d"], rqt["zp"])
+    return jnp.stack([
+        jnp.broadcast_to(
+            jnp.asarray(r, jnp.int32).reshape(-1), (n_kv_heads,)
+        )
+        for r in rows
+    ])
+
+
+def _kv4_pack_image(x, rqt):
+    """int8 KV image -> int4 image in [-8, 7], per-kv-head quanta
+    (channel axis 1), with ROUND-TO-NEAREST instead of apply_rqt's
+    floor shift: the pack site runs once per token outside any kernel,
+    so it can afford the half-quantum bias term — halving the stored
+    error of every int4 cell.  The UNPACK side stays the floor-shift
+    `apply_rqt` formula, which is what the fused kernel replays, so
+    read-path parity is untouched (both paths read the same bytes)."""
+    m, d = rqt["m"], rqt["d"]
+    lo, hi = rqt["lo"], rqt["hi"]
+    if m.ndim == 1 and m.shape[0] > 1 and x.ndim > 1:
+        shape = [1] * x.ndim
+        shape[1] = -1
+        m = m.reshape(shape)
+        lo = lo.reshape(shape)
+        hi = hi.reshape(shape)
+    q = jnp.clip(x.astype(jnp.int32), lo, hi)
+    # s0 == 0 by construction (acc_bound=127 at make_rqt time), so the
+    # staged shift collapses to one rounding shift by d
+    half = jnp.where(
+        d > 0, jnp.left_shift(jnp.int32(1), jnp.maximum(d - 1, 0)), 0
+    )
+    out = jnp.right_shift(q * m + half, d)
+    return jnp.clip(out, -8, 7).astype(jnp.int8)
+
+
+def _paged_write(cache, k, v, pos, kv4=None):
     """Scatter the new K/V column(s) through the page table — the
     write half shared by BOTH paged decode paths (fused kernel and
     write-then-gather oracle), so their parity cannot drift at the
-    write.  Returns (pos_v, new_cache)."""
+    write.  With `kv4` (int4-packed pools) the int8 columns are
+    requantized into [-8, 7] per kv head and nibble-packed along hd
+    first — both nibbles of a pool cell belong to one position, so
+    the positional scatter below is packing-oblivious.
+    Returns (pos_v, new_cache)."""
     pos_v = jnp.asarray(pos)
     if pos_v.ndim != 1:
         raise NotImplementedError(
             "paged KV caches need a per-slot position vector (B,)")
+    if kv4 is not None:
+        k = pack_int4(_kv4_pack_image(k, kv4["k_pack"]))
+        v = pack_int4(_kv4_pack_image(v, kv4["v_pack"]))
     table = cache["table"]
     k_pool = _paged_column_write(cache["k"], k, pos_v, table)
     v_pool = _paged_column_write(cache["v"], v, pos_v, table)
     return pos_v, {"k": k_pool, "v": v_pool, "table": table}
 
 
-def _paged_cache_update(cache, k, v, pos):
+def _paged_cache_update(cache, k, v, pos, kv4=None):
     """Paged cache step: write the new column(s) through the page
     table, then gather the logical dense view (write-then-gather keeps
     the contiguous-path semantics: the view includes the new tokens).
     Single-token oracle decode and multi-token chunked prefill share
-    this path.  Returns (k_view, v_view, new_cache)."""
-    _, new_cache = _paged_write(cache, k, v, pos)
+    this path.  With `kv4` the gathered packed view is unpacked back
+    into the int8 image space through the same per-head requant
+    images the fused kernel applies in its page loop, so the two
+    paths stay bit-exact at fixed kv_bits.
+    Returns (k_view, v_view, new_cache)."""
+    _, new_cache = _paged_write(cache, k, v, pos, kv4=kv4)
     table = new_cache["table"]
-    return (
-        _paged_kv_view(new_cache["k"], table),
-        _paged_kv_view(new_cache["v"], table),
-        new_cache,
-    )
+    k_view = _paged_kv_view(new_cache["k"], table)
+    v_view = _paged_kv_view(new_cache["v"], table)
+    if kv4 is not None:
+        k_view = apply_rqt(
+            unpack_int4(k_view), kv4["k_unpack"], channel_axis=1)
+        v_view = apply_rqt(
+            unpack_int4(v_view), kv4["v_unpack"], channel_axis=1)
+    return k_view, v_view, new_cache
 
 
 def _cache_write(cache, new, pos):

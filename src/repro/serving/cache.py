@@ -365,6 +365,7 @@ def make_arena(lm, cfg: "ServingConfig") -> "Arena":
             kv_shard=cfg.kv_shard,
             prefix_cache=cfg.prefix_cache,
             keep_pages=cfg.cache_keep_pages,
+            kv_bits=cfg.kv_bits,
         )
     return SlotArena(
         lm, cfg.n_slots, cfg.max_len, mesh=cfg.mesh, kv_shard=cfg.kv_shard
@@ -603,6 +604,7 @@ class PagedArena:
         kv_shard: bool = False,
         prefix_cache: bool = False,
         keep_pages: int = 0,
+        kv_bits: int = 8,
     ):
         if max_len > lm.max_seq:
             raise ValueError(
@@ -612,10 +614,13 @@ class PagedArena:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         if n_pages < 1:
             raise ValueError(f"n_pages must be >= 1, got {n_pages}")
+        if kv_bits not in (8, 4):
+            raise ValueError(f"kv_bits must be 8 or 4, got {kv_bits}")
         self.n_slots = n_slots
         self.max_len = max_len
         self.page_size = page_size
         self.n_pages = n_pages
+        self.kv_bits = kv_bits
         self.pages_per_slot = -(-max_len // page_size)
 
         (
@@ -627,6 +632,10 @@ class PagedArena:
 
         # Pool: paged leaves swap (B, max_len) for (n_pages + 1,
         # page_size); per-slot leaves (no sequence axis) keep B=n_slots.
+        # kv_bits=4 (DESIGN.md §Serving ¶Sub-8-bit KV) additionally
+        # halves each KV leaf's trailing head_dim — two int4 nibbles
+        # per int8 cell, packed along hd so every page cell stays
+        # position-complete and the page/table math is untouched.
         leaves = []
         for leaf, b_ax, s_ax in zip(
             template, self._batch_axes, self._seq_axes
@@ -637,6 +646,19 @@ class PagedArena:
             else:
                 shape[b_ax] = n_pages + 1  # + the PAGE_NULL trash page
                 shape[s_ax] = page_size
+                if kv_bits == 4:
+                    last = len(shape) - 1
+                    if s_ax == last or b_ax == last:
+                        raise ValueError(
+                            "kv_bits=4 needs a trailing head_dim axis "
+                            f"to pack, got KV leaf shape {leaf.shape}"
+                        )
+                    if shape[last] % 2:
+                        raise ValueError(
+                            "kv_bits=4 needs an even head_dim, got "
+                            f"{shape[last]}"
+                        )
+                    shape[last] //= 2
             leaves.append(jnp.zeros(shape, leaf.dtype))
         self.caches = jax.tree.unflatten(self._treedef, leaves)
         # pool leaves swap (B, T) for (pages, page_size) but keep the
@@ -1308,6 +1330,7 @@ class PagedArena:
             "arena_positions": self.n_pages * self.page_size,
             "page_size": self.page_size,
             "n_pages": self.n_pages,
+            "kv_bits": self.kv_bits,
             "pages_in_use": self.pages_in_use,
             "committed_pages": self.committed_pages,
             "max_pages_in_use": self.max_pages_in_use,

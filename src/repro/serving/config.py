@@ -61,6 +61,12 @@ class ServingConfig:
     policy: Optional["SchedulingPolicy"] = None  # None -> FCFSPolicy()
     # observability sink (DESIGN.md §Observability); None -> NULL
     telemetry: Any = None
+    # KV storage width (DESIGN.md §Serving ¶Sub-8-bit KV): 8 keeps the
+    # bit-exact int8 KV images; 4 packs two int4 nibbles per pool cell
+    # (half the arena bytes, per-kv-head requant images, accuracy
+    # gated by correlation not bit-exactness).  4 needs the paged
+    # arena and the chunked prefill path.
+    kv_bits: int = 8
     # prefix caching (DESIGN.md §Prefix-caching): refcounted page
     # sharing across requests + warm pages for preemption resume.
     # Requires the paged arena; sharing engages on the chunked path.
@@ -93,6 +99,15 @@ class ServingConfig:
             raise ValueError(
                 "kv_shard=True needs a mesh "
                 "(launch.mesh.make_serving_mesh)"
+            )
+        if self.kv_bits not in (8, 4):
+            raise ValueError(
+                f"kv_bits must be 8 or 4, got {self.kv_bits}"
+            )
+        if self.kv_bits == 4 and not self.paged:
+            raise ValueError(
+                "kv_bits=4 needs the paged arena (paged=True): "
+                "nibble packing is a page-pool layout"
             )
         if self.prefix_cache and not self.paged:
             raise ValueError(

@@ -389,6 +389,18 @@ class ServingEngine:
         # its per-chunk touch_range is what resolves CoW before every
         # dispatch, and a skipped prefix is just a chunk cursor that
         # starts late.
+        # int4-packed KV pools (DESIGN.md §Serving ¶Sub-8-bit KV) only
+        # ever see the paged write path; the contiguous write_slot /
+        # SlotArena `_write` of the exact and bucketed prefill modes
+        # assumes full-width int8 columns, so kv_bits=4 is restricted
+        # to the chunked path where every token enters through
+        # `_paged_column_write`.
+        if cfg.kv_bits == 4 and self._prefill_mode != "chunked":
+            raise ValueError(
+                "kv_bits=4 requires the chunked prefill path "
+                f"(prefill_chunk > 0, dense family); this engine is in "
+                f"{self._prefill_mode!r} mode"
+            )
         self._prefix_on = bool(cfg.prefix_cache)
         if self._prefix_on and self._prefill_mode != "chunked":
             raise ValueError(

@@ -188,6 +188,11 @@ def kv_head_axis(batch_axis: int, seq_axis) -> Optional[int]:
     paged pools, where the arena's structural probe reports the same
     (batch_axis, seq_axis) pair for both.  Leaves with no sequence axis
     (SSM recurrent state) have no head axis to shard.
+
+    Int4-packed pools (DESIGN.md §Serving ¶Sub-8-bit KV) only halve
+    the trailing hd axis — the head axis stays just before the
+    sequence axis, so packed pools shard exactly like int8 ones: only
+    the kv-head axis splits, nibble pairs never straddle a shard.
     """
     if seq_axis is None:
         return None

@@ -160,12 +160,18 @@ def test_shared_prefix_parity_sharded(deployed):
 # ---------------------------------------------------------------------
 # leak freedom as a property (randomized interleavings + preemption)
 # ---------------------------------------------------------------------
-def test_refcount_leak_freedom_random(deployed):
+@pytest.mark.parametrize("kv_bits", [8, 4])
+def test_refcount_leak_freedom_random(deployed, kv_bits):
     """Randomized rounds of mixed shared-prefix / cold prompts with
     scripted preemptions, cache on and off: outputs match exactly
     across the two (admission timing shifts, tokens never do), and
     every cache-on drain leaves refcounts at zero with only warm
-    pages resident; flush_cache() then empties the pool."""
+    pages resident; flush_cache() then empties the pool.
+
+    Parametrized over kv_bits: at 4 the pools are int4-packed
+    (DESIGN.md §Serving ¶Sub-8-bit KV) and integer determinism makes
+    a cached packed page byte-identical to a recomputed one, so the
+    cache-on/cache-off exactness contract holds there too."""
     lm, tables = deployed
     rng = np.random.default_rng(5)
     pre = rng.integers(0, lm.cfg.vocab, size=(16,))
@@ -187,7 +193,7 @@ def test_refcount_leak_freedom_random(deployed):
         for on in (False, True):
             eng = make_engine(
                 lm, tables, n_slots=2, max_len=MAX_LEN, paged=True,
-                page_size=PS, scheduler=_sched(chunk=4),
+                page_size=PS, kv_bits=kv_bits, scheduler=_sched(chunk=4),
                 policy=ScriptedPreemptions(script),
                 prefix_cache=on, cache_keep_pages=10 if on else 0,
             )

@@ -11,7 +11,11 @@ cold-vs-shared win evaporates past its margin, and the
 `kernel_to_gather` floor (DESIGN.md §Serving ¶Unified attention
 kernel) fails when the fused kernel's win over the write-then-gather
 oracle evaporates past its margin — or when the prefill lane's
-metrics silently vanish from a candidate.
+metrics silently vanish from a candidate.  The int4-packed-KV lane
+(DESIGN.md §Serving ¶Sub-8-bit KV) is pinned the same way: relative
+trajectory regressions, the missing-lane case, and BOTH absolute
+floors (concurrency uplift at equal arena bytes, token agreement
+with the int8-KV run).
 """
 import copy
 import importlib.util
@@ -64,6 +68,12 @@ def _tree():
                        "p95_ttft_s": 0.070},
             "ttft_uplift": 1.3,
             "concurrency_uplift": 2.0,
+        },
+        "kv_int4_vs_int8": {
+            "int8": {"tok_s": 85.0},
+            "int4": {"tok_s": 82.0},
+            "int4_concurrency_uplift": 2.0,
+            "int4_token_match": 0.20,
         },
     }
 
@@ -193,3 +203,66 @@ def test_missing_kernel_ratio_fails(tmp_path, monkeypatch):
     del cand["paged_prefill_kernel_vs_gather"]["kernel_to_gather"]
     with pytest.raises(SystemExit):
         _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+# ---------------------------------------------------------------------
+# int4-packed KV lane (DESIGN.md §Serving ¶Sub-8-bit KV)
+# ---------------------------------------------------------------------
+def test_kv4_lane_regression_fails(tmp_path, monkeypatch):
+    """The int4 lane's tok_s rides the normalized throughput gate
+    like every engine lane."""
+    cand = _tree()
+    cand["kv_int4_vs_int8"]["int4"]["tok_s"] = 40.0  # -51% normalized
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_missing_kv4_lane_fails(tmp_path, monkeypatch):
+    """A silently dropped kv_int4_vs_int8 section is a regression:
+    every scalar the baseline gates goes missing from the candidate."""
+    cand = _tree()
+    del cand["kv_int4_vs_int8"]
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_kv4_uplift_floor_breach_fails(tmp_path, monkeypatch):
+    """Concurrency uplift below the ABSOLUTE floor fails even when
+    the relative drop stays inside the trajectory margin: 2.0 -> 1.5
+    is -25% (within 0.30 * KV4_MARGIN = 45%) but below
+    INT4_MIN_UPLIFT (1.8) — equal-bytes packing stopped paying."""
+    gate = _gatemod()
+    cand = _tree()
+    cand["kv_int4_vs_int8"]["int4_concurrency_uplift"] = (
+        gate.INT4_MIN_UPLIFT - 0.3)
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_kv4_match_floor_breach_fails(tmp_path, monkeypatch):
+    """Token agreement with the int8-KV run collapsing to chance is a
+    packed-path bug (nibble order, wrong requant image) — the
+    correlation floor is the int4 accuracy oracle."""
+    cand = _tree()
+    cand["kv_int4_vs_int8"]["int4_token_match"] = 0.01
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_kv4_relative_match_regression_fails(tmp_path, monkeypatch):
+    """Even above the absolute floor, losing most of the recorded
+    agreement fails the trajectory gate: 0.20 -> 0.105 is -48%, past
+    0.30 * KV4_MARGIN (1.5) = 45%, though still >= INT4_MIN_MATCH."""
+    gate = _gatemod()
+    cand = _tree()
+    assert 0.105 >= gate.INT4_MIN_MATCH
+    cand["kv_int4_vs_int8"]["int4_token_match"] = 0.105
+    with pytest.raises(SystemExit):
+        _run(tmp_path, monkeypatch, _tree(), cand)
+
+
+def test_kv4_jitter_within_margin_passes(tmp_path, monkeypatch):
+    cand = _tree()
+    cand["kv_int4_vs_int8"]["int4_token_match"] = 0.16  # -20%
+    cand["kv_int4_vs_int8"]["int4_concurrency_uplift"] = 1.9  # -5%
+    _run(tmp_path, monkeypatch, _tree(), cand)
